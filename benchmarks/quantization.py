@@ -1,0 +1,81 @@
+"""Paper Fig 12: quantization method comparison (exact vs RaBitQ vs PQ).
+
+The paper's finding: PQ's scattered LUT lookups negate its bandwidth
+savings (strictly worse than exact on GPU); RaBitQ's sequential codes beat
+exact on high-dim data. On this CPU stand-in the same access-pattern story
+shows up in wall time; the roofline benchmark (roofline_anns) shows the
+arithmetic-intensity side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_PARAMS, Csv, dataset, time_call
+from repro.core.index import JasperIndex
+from repro.core.pq import pq_distance, pq_encode, pq_train
+from repro.core.rabitq import (
+    rabitq_encode,
+    rabitq_estimate,
+    rabitq_preprocess_query,
+    rabitq_train,
+)
+from repro.core.distances import pairwise_l2_squared
+
+
+def run(csv: Csv, name: str = "gist", k: int = 1, n: int | None = None
+        ) -> None:
+    data, queries, ds = dataset(name, n)
+    x = jnp.asarray(data)
+    q = jnp.asarray(queries)
+
+    # ---- distance-computation microbenchmark (the Fig 12 kernel-level gap)
+    us_exact = time_call(jax.jit(lambda q, x: pairwise_l2_squared(q, x)),
+                         q, x)
+    csv.add(f"quant/{name}/distance/exact", us_exact, "full f32")
+
+    params_r = rabitq_train(jax.random.PRNGKey(0), x, bits=4)
+    codes_r = rabitq_encode(params_r, x)
+    qq = rabitq_preprocess_query(params_r, q)
+    us_rq = time_call(jax.jit(lambda c, qq: rabitq_estimate(c, qq)),
+                      codes_r, qq)
+    csv.add(f"quant/{name}/distance/rabitq4", us_rq,
+            f"{us_exact / us_rq:.2f}x vs exact (sequential codes)")
+
+    params_p = pq_train(jax.random.PRNGKey(0), x,
+                        n_subspaces=max(4, ds.dims // 64))
+    codes_p = pq_encode(params_p, x)
+    us_pq = time_call(jax.jit(lambda c, q: pq_distance(params_p, c, q)),
+                      codes_p, q)
+    csv.add(f"quant/{name}/distance/pq", us_pq,
+            f"{us_exact / us_pq:.2f}x vs exact (scattered LUT)")
+
+    # ---- end-to-end search at matched beam (recall + throughput)
+    idx = JasperIndex(ds.dims, capacity=data.shape[0],
+                      construction=BENCH_PARAMS, quantization="rabitq",
+                      bits=4)
+    idx.build(data)
+    gt, _ = idx.brute_force(queries, k)
+    gt = np.asarray(gt)
+
+    def recall(ids):
+        ids = np.asarray(ids)
+        return np.mean([len(set(ids[i]) & set(gt[i])) / k
+                        for i in range(ids.shape[0])])
+
+    for label, fn in (
+        ("exact", lambda: idx.search(queries, k, beam_width=64)),
+        ("rabitq", lambda: idx.search_rabitq(queries, k, beam_width=64)),
+    ):
+        us = time_call(fn)
+        ids, _ = fn()
+        csv.add(f"quant/{name}/search/{label}", us,
+                f"recall@{k}={recall(ids):.3f}")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,53 @@
+"""Paper Fig 8: query recall/throughput curves across the five datasets.
+
+Beam width sweeps the recall/throughput trade-off; both the exact path
+(Jasper) and the estimated path (Jasper RaBitQ) are measured. Recall is
+k@k vs brute force, as in the paper.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BENCH_PARAMS, Csv, dataset, time_call
+from repro.core.index import JasperIndex
+
+BEAMS = (8, 16, 32, 64)
+
+
+def run(csv: Csv, datasets=("bigann", "deep", "gist"), k: int = 10,
+        n: int | None = None) -> None:
+    for name in datasets:
+        data, queries, ds = dataset(name, n)
+        quant = None if ds.metric == "mips" else "rabitq"
+        idx = JasperIndex(ds.dims, capacity=data.shape[0], metric=ds.metric,
+                          construction=BENCH_PARAMS,
+                          quantization=quant, bits=4)
+        idx.build(data)
+        gt, _ = idx.brute_force(queries, k)
+        gt = np.asarray(gt)
+
+        def recall(ids):
+            ids = np.asarray(ids)
+            return np.mean([len(set(ids[i]) & set(gt[i])) / k
+                            for i in range(ids.shape[0])])
+
+        for beam in BEAMS:
+            us = time_call(lambda: idx.search(queries, k, beam_width=beam))
+            ids, _ = idx.search(queries, k, beam_width=beam)
+            qps = queries.shape[0] / (us / 1e6)
+            csv.add(f"queries/{name}/exact/beam{beam}", us,
+                    f"recall@{k}={recall(ids):.3f} {qps:.0f} q/s")
+            if quant:
+                us = time_call(
+                    lambda: idx.search_rabitq(queries, k, beam_width=beam))
+                ids, _ = idx.search_rabitq(queries, k, beam_width=beam)
+                qps = queries.shape[0] / (us / 1e6)
+                csv.add(f"queries/{name}/rabitq/beam{beam}", us,
+                        f"recall@{k}={recall(ids):.3f} {qps:.0f} q/s")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,54 @@
+"""Paper Figs 10/11: tile- and block-size sweeps for the search kernels.
+
+GPU block size trades per-query parallelism against memory-level
+parallelism; the TPU analogue is the Pallas block shape (candidates x dims
+per VMEM tile) and queries-per-tile. We sweep the pairwise-distance kernel's
+block shapes and report:
+
+  * VMEM footprint per tile (must stay under ~16 MB),
+  * MXU alignment (dims multiple of 128),
+  * arithmetic intensity per tile,
+  * measured wall time of the jitted kernel (interpret mode on CPU — use
+    relative ordering only, absolute numbers are not TPU times).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_call
+from repro.kernels.distance import ops as dops
+
+SWEEP = [
+    # (block_q, block_c, block_d)
+    (8, 128, 128),
+    (32, 128, 128),
+    (128, 128, 128),
+    (8, 256, 128),
+    (128, 256, 256),
+    (32, 512, 128),
+]
+
+
+def run(csv: Csv, q: int = 128, c: int = 1024, d: int = 256) -> None:
+    rng = np.random.default_rng(0)
+    qv = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    xv = jnp.asarray(rng.normal(size=(c, d)), jnp.float32)
+    for bq, bc, bd in SWEEP:
+        bd_eff = min(bd, d)
+        vmem = (bq * bd_eff + bc * bd_eff + bq * bc + bq * bc) * 4
+        intensity = (2 * bq * bc * bd_eff) / (
+            (bq * bd_eff + bc * bd_eff + bq * bc) * 4)
+        us = time_call(
+            lambda qv=qv, xv=xv, bq=bq, bc=bc, bd=bd_eff:
+            dops.pairwise_l2(qv, xv, block_q=bq, block_c=bc, block_d=bd),
+            warmup=1, iters=2)
+        csv.add(f"tiles/q{bq}_c{bc}_d{bd_eff}", us,
+                f"vmem={vmem / 1024:.0f}KB intensity={intensity:.2f}F/B")
+
+
+if __name__ == "__main__":
+    c = Csv()
+    c.header()
+    run(c)

@@ -1,0 +1,58 @@
+"""Quickstart: build a Jasper index, search it, measure recall, save/load.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import JasperIndex
+from repro.core.construction import ConstructionParams
+from repro.core.vamana import graph_degree_stats
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n, dims, n_queries = 8000, 96, 500
+    data = rng.normal(size=(n, dims)).astype(np.float32)
+    queries = rng.normal(size=(n_queries, dims)).astype(np.float32)
+
+    # RaBitQ-quantized, updatable index (paper defaults scaled down)
+    idx = JasperIndex(
+        dims, capacity=n + 2000, quantization="rabitq", bits=4,
+        construction=ConstructionParams(degree_bound=32, beam_width=32,
+                                        max_iters=48, rev_cap=32))
+    t0 = time.time()
+    idx.build(data)
+    print(f"built {n} vectors in {time.time() - t0:.1f}s "
+          f"({n / (time.time() - t0):.0f} inserts/s)")
+    stats = {k: float(v) for k, v in graph_degree_stats(idx.graph).items()}
+    print(f"graph: mean degree {stats['mean_degree']:.1f}, "
+          f"max {stats['max_degree']:.0f}")
+
+    for beam in (16, 32, 64):
+        t0 = time.time()
+        r = idx.recall(queries, k=10, beam_width=beam)
+        rq = idx.recall(queries, k=10, beam_width=beam, quantized=True)
+        print(f"beam {beam:3d}: recall@10 exact {r:.3f} | rabitq {rq:.3f} "
+              f"({time.time() - t0:.1f}s)")
+
+    print("memory:", idx.memory_stats())
+
+    # streaming insert — no rebuild
+    extra = rng.normal(size=(1000, dims)).astype(np.float32)
+    t0 = time.time()
+    idx.insert(extra)
+    print(f"inserted 1000 more in {time.time() - t0:.1f}s; size={idx.size}")
+
+    idx.save("/tmp/jasper_quickstart.npz")
+    idx2 = JasperIndex.load("/tmp/jasper_quickstart.npz")
+    ids_a, _ = idx.search(queries[:8], k=5)
+    ids_b, _ = idx2.search(queries[:8], k=5)
+    assert (np.asarray(ids_a) == np.asarray(ids_b)).all()
+    print("save/load roundtrip OK")
+
+
+if __name__ == "__main__":
+    main()

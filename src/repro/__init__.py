@@ -1,0 +1,15 @@
+"""repro: Jasper-TPU — ANNS quantized for speed, built for change, on TPU pods.
+
+A JAX/Pallas reproduction + extension of
+"Jasper: ANNS Quantized for Speed, Built for Change on GPU"
+(McCoy, Wang, Pandey, 2026), adapted from CUDA/A100 to TPU v5e pods.
+
+Public API lives under:
+  repro.core      — Vamana index, beam search, RaBitQ/PQ quantization
+  repro.kernels   — Pallas TPU kernels (distance / rabitq_dot / topk)
+  repro.models    — LM substrate for the 10 assigned architectures
+  repro.configs   — architecture + dataset configs
+  repro.launch    — production mesh, dry-run, train/serve launchers
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,52 @@
+"""Core ANNS library: the paper's contribution as composable JAX modules."""
+
+from repro.core.distances import (
+    l2_squared,
+    inner_product,
+    pairwise_l2_squared,
+    pairwise_inner_product,
+    pairwise_distance,
+    mips_augment_data,
+    mips_augment_query,
+)
+from repro.core.medoid import compute_medoid
+from repro.core.rabitq import (
+    RaBitQParams,
+    RaBitQCodes,
+    RaBitQQuery,
+    rabitq_train,
+    rabitq_encode,
+    rabitq_preprocess_query,
+    rabitq_estimate,
+    pack_codes,
+    unpack_codes,
+)
+from repro.core.pq import PQParams, pq_train, pq_encode, pq_distance
+from repro.core.vamana import VamanaGraph, init_graph, graph_degree_stats
+from repro.core.beam_search import (
+    BeamSearchResult,
+    beam_search,
+    beam_search_quantized,
+    make_exact_scorer,
+    make_rabitq_scorer,
+)
+from repro.core.robust_prune import robust_prune_batch
+from repro.core.construction import batch_insert, build_graph
+from repro.core.index import JasperIndex
+
+__all__ = [
+    "l2_squared", "inner_product", "pairwise_l2_squared",
+    "pairwise_inner_product", "pairwise_distance",
+    "mips_augment_data", "mips_augment_query",
+    "compute_medoid",
+    "RaBitQParams", "RaBitQCodes", "RaBitQQuery",
+    "rabitq_train", "rabitq_encode", "rabitq_preprocess_query",
+    "rabitq_estimate", "pack_codes", "unpack_codes",
+    "PQParams", "pq_train", "pq_encode", "pq_distance",
+    "VamanaGraph", "init_graph", "graph_degree_stats",
+    "BeamSearchResult", "beam_search", "beam_search_quantized",
+    "make_exact_scorer", "make_rabitq_scorer",
+    "robust_prune_batch",
+    "batch_insert", "build_graph",
+    "JasperIndex",
+]

@@ -1,0 +1,246 @@
+"""Batch-parallel lock-free Vamana construction (paper §3.3/§4.3, Alg. 3).
+
+The ParlayANN recipe, restructured for accelerator execution:
+
+  Step 1  beam-search every point of the batch against a READ-ONLY snapshot
+          of the graph (purity of JAX makes the snapshot property a theorem,
+          not a discipline) — candidate edges = visited set ∪ frontier.
+  Step 2  forward prune: RobustPrune each new point's candidates, write its
+          adjacency row.
+  Step 3  reverse edges: every forward edge (x -> v) proposes (v -> x).
+          GPU Jasper replaces ParlayANN's semisort with a FULL SORT by
+          (dst, dist) because wide-SIMD machines want load balance (§4.3);
+          we inherit that: one `lax.sort` groups edges, segment arithmetic
+          builds fixed-shape per-vertex candidate buffers, and a batched
+          RobustPrune rewrites every touched adjacency row. No locks, no
+          atomics — pure scatter.
+
+All shapes are static: the reverse-edge table is capacity B*R (the true
+worst case), and per-vertex incoming candidates are capped at `rev_cap`,
+keeping the CLOSEST proposals (the sort puts them first) — principled
+truncation, and the fixed-shape analogue of ParlayANN's dynamic buffers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.beam_search import beam_search, make_exact_scorer
+from repro.core.robust_prune import robust_prune_batch
+from repro.core.vamana import VamanaGraph
+from repro.core.medoid import compute_medoid
+
+Array = jax.Array
+
+_INF = jnp.float32(jnp.inf)
+
+
+@dataclass(frozen=True)
+class ConstructionParams:
+    """Static construction hyper-parameters (paper defaults: R=64, alpha=1.2)."""
+
+    degree_bound: int = 64        # R
+    alpha: float = 1.2
+    beam_width: int = 64          # L during construction
+    max_iters: int = 96           # expansion budget / visited-log length
+    rev_cap: int = 64             # max incoming reverse-edge candidates kept
+    prune_chunk: int = 1024       # vertices per prune chunk (memory knob)
+
+
+def _adjacency_distances(vectors: Array, pivot_ids: Array, adj_rows: Array,
+                         chunk_size: int) -> Array:
+    """d2(pivot, each existing neighbor). (V,), (V, R) -> (V, R)."""
+    v_total = pivot_ids.shape[0]
+    pad = (-v_total) % chunk_size
+    if pad:
+        pivot_ids = jnp.pad(pivot_ids, (0, pad), constant_values=-1)
+        adj_rows = jnp.pad(adj_rows, ((0, pad), (0, 0)), constant_values=-1)
+
+    def do_chunk(args):
+        p_ids, rows = args
+        pv = vectors[jnp.maximum(p_ids, 0)].astype(jnp.float32)     # (c, D)
+        nv = vectors[jnp.maximum(rows, 0)].astype(jnp.float32)      # (c, R, D)
+        d = jnp.sum((nv - pv[:, None, :]) ** 2, axis=-1)
+        return jnp.where(rows >= 0, d, _INF)
+
+    n_chunks = pivot_ids.shape[0] // chunk_size
+    chunked = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_chunks, chunk_size) + a.shape[1:]),
+        (pivot_ids, adj_rows))
+    d = jax.lax.map(do_chunk, chunked)
+    d = d.reshape((-1,) + d.shape[2:])
+    return d[:v_total] if pad else d
+
+
+def _group_reverse_edges(dst: Array, src: Array, dist: Array, rev_cap: int
+                         ) -> tuple[Array, Array, Array]:
+    """Full-sort + segment-scatter edge grouping (the GPU-Thrust analogue).
+
+    dst/src/dist: (E,) flat reverse-edge proposals (-1 dst = dead).
+    Returns (touched (E,), in_ids (E, rev_cap), in_dists (E, rev_cap)):
+    row u of in_* holds the closest <=rev_cap proposals for vertex
+    touched[u]; unused rows have touched = -1.
+    """
+    e = dst.shape[0]
+    big = jnp.int32(2**30)
+    key = jnp.where(dst >= 0, dst, big)
+    s_key, s_dist, s_src = jax.lax.sort((key, dist, src), dimension=0,
+                                        is_stable=True, num_keys=2)
+    valid = s_key < big
+    new_seg = jnp.concatenate(
+        [valid[:1], (s_key[1:] != s_key[:-1]) & valid[1:]])
+    seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1          # (E,)
+    pos = jnp.arange(e, dtype=jnp.int32)
+    seg_start = jax.lax.cummax(jnp.where(new_seg, pos, 0))
+    rank = pos - seg_start
+
+    touched = jnp.full((e,), -1, dtype=jnp.int32)
+    touched = touched.at[jnp.where(new_seg, seg_id, e)].set(s_key, mode="drop")
+
+    keep = valid & (rank < rev_cap)
+    row = jnp.where(keep, seg_id, e)                             # drop route
+    col = jnp.minimum(rank, rev_cap - 1)
+    in_ids = jnp.full((e, rev_cap), -1, dtype=jnp.int32)
+    in_ids = in_ids.at[row, col].set(s_src, mode="drop")
+    in_dists = jnp.full((e, rev_cap), _INF, dtype=jnp.float32)
+    in_dists = in_dists.at[row, col].set(s_dist, mode="drop")
+    return touched, in_ids, in_dists
+
+
+@partial(jax.jit, static_argnames=("batch_size", "params", "already_inserted"))
+def batch_insert(vectors: Array, graph: VamanaGraph, batch_start: Array,
+                 *, batch_size: int, params: ConstructionParams,
+                 already_inserted: bool = False,
+                 vec_sqnorm: Array | None = None) -> VamanaGraph:
+    """Insert vectors[batch_start : batch_start + batch_size] into the graph.
+
+    With already_inserted=True this is a REFINEMENT pass over existing
+    vertices (Vamana's second pass): n_valid does not advance and the point
+    may rediscover itself (pruned as a self-edge).
+    """
+    r = params.degree_bound
+    adj = graph.adjacency
+    n_old = graph.n_valid
+    new_ids = batch_start + jnp.arange(batch_size, dtype=jnp.int32)
+    queries = vectors[new_ids]
+
+    # ---- Step 1: snapshot beam search ------------------------------------
+    score = make_exact_scorer(vectors, queries, n_old, vec_sqnorm)
+    res = beam_search(graph, score, batch_size,
+                      beam_width=params.beam_width, max_iters=params.max_iters)
+
+    # candidate edges: visited set ∪ final frontier (paper: both returned)
+    cand_ids = jnp.concatenate([res.visited_ids, res.frontier_ids], axis=1)
+    cand_dists = jnp.concatenate([res.visited_dists, res.frontier_dists], axis=1)
+
+    # ---- Step 2: forward prune -------------------------------------------
+    fwd = robust_prune_batch(vectors, new_ids, cand_ids, cand_dists, n_old,
+                             degree_bound=r, alpha=params.alpha,
+                             chunk_size=params.prune_chunk)
+    adj = adj.at[new_ids].set(fwd.selected_ids)
+
+    # ---- Step 3: reverse edges (full sort + batched prune) ----------------
+    dst = fwd.selected_ids.reshape(-1)                     # (B*R,)
+    src = jnp.repeat(new_ids, r)
+    dist = fwd.selected_dists.reshape(-1)
+    touched, in_ids, in_dists = _group_reverse_edges(dst, src, dist,
+                                                     params.rev_cap)
+
+    exist_rows = adj[jnp.maximum(touched, 0)]              # (T, R)
+    exist_rows = jnp.where((touched >= 0)[:, None], exist_rows, -1)
+    exist_dists = _adjacency_distances(vectors, touched, exist_rows,
+                                       params.prune_chunk)
+
+    n_after = n_old if already_inserted else n_old + batch_size
+    cand2_ids = jnp.concatenate([exist_rows, in_ids], axis=1)
+    cand2_dists = jnp.concatenate([exist_dists, in_dists], axis=1)
+    rev = robust_prune_batch(vectors, touched, cand2_ids, cand2_dists,
+                             jnp.int32(n_after), degree_bound=r,
+                             alpha=params.alpha, chunk_size=params.prune_chunk)
+    adj = adj.at[jnp.where(touched >= 0, touched, adj.shape[0])].set(
+        rev.selected_ids, mode="drop")
+
+    return VamanaGraph(adjacency=adj, n_valid=jnp.int32(n_after),
+                       medoid=graph.medoid)
+
+
+@partial(jax.jit, static_argnames=("n0", "params"))
+def bootstrap_graph(vectors: Array, graph: VamanaGraph, *, n0: int,
+                    params: ConstructionParams) -> VamanaGraph:
+    """All-pairs bootstrap for the first n0 points (empty-graph base case).
+
+    Candidates for each point = its 4R nearest among the bootstrap set, then
+    RobustPrune — a dense, high-quality seed graph that incremental batches
+    build on (ParlayANN starts from a similar prefix).
+    """
+    r = params.degree_bound
+    ids = jnp.arange(n0, dtype=jnp.int32)
+    v = vectors[:n0].astype(jnp.float32)
+    sq = jnp.sum(v * v, axis=-1)
+    d = jnp.maximum(sq[:, None] - 2.0 * (v @ v.T) + sq[None, :], 0.0)
+    c = min(4 * r, n0)
+    sd, si = jax.lax.top_k(-d, c)                           # nearest c
+    cand_ids = si.astype(jnp.int32)
+    cand_dists = -sd
+    res = robust_prune_batch(vectors, ids, cand_ids, cand_dists,
+                             jnp.int32(n0), degree_bound=r, alpha=params.alpha,
+                             chunk_size=params.prune_chunk)
+    adj = graph.adjacency.at[ids].set(res.selected_ids)
+    medoid = compute_medoid(vectors, jnp.arange(vectors.shape[0]) < n0)
+    return VamanaGraph(adjacency=adj, n_valid=jnp.int32(n0), medoid=medoid)
+
+
+def build_graph(vectors: Array, n_total: int, *, params: ConstructionParams,
+                bootstrap_size: int = 1024, min_batch: int = 256,
+                max_batch: int = 100_000, refine: bool = False,
+                progress_fn=None) -> VamanaGraph:
+    """Bulk construction: bootstrap + prefix-doubling batch insertion.
+
+    Host-side driver (the paper's Fig. 2 pipeline). Batch sizes double as
+    the index grows (ParlayANN schedule) so early batches see a graph of
+    comparable size; jit caches one executable per batch size rung.
+    """
+    from repro.core.vamana import init_graph  # local to avoid cycle
+
+    capacity = vectors.shape[0]
+    if n_total > capacity:
+        raise ValueError(f"n_total {n_total} exceeds capacity {capacity}")
+    graph = init_graph(capacity, params.degree_bound)
+    n0 = min(bootstrap_size, n_total)
+    graph = bootstrap_graph(vectors, graph, n0=n0, params=params)
+    vec_sqnorm = jnp.sum(vectors.astype(jnp.float32) ** 2, axis=-1)
+
+    inserted = n0
+    while inserted < n_total:
+        remaining = n_total - inserted
+        b = min(max(min_batch, 1 << (inserted.bit_length() - 1)), max_batch)
+        b = min(b, remaining)
+        # round DOWN to a power of two for executable reuse; exact remainder
+        # batches only happen once at the tail of each rung
+        if b not in (remaining,):
+            b = 1 << (b.bit_length() - 1)
+        graph = batch_insert(vectors, graph, jnp.int32(inserted),
+                             batch_size=b, params=params,
+                             vec_sqnorm=vec_sqnorm)
+        inserted += b
+        if progress_fn is not None:
+            progress_fn(inserted, n_total)
+
+    if refine:  # optional Vamana second pass over everything
+        done = 0
+        while done < n_total:
+            b = min(max_batch, n_total - done)
+            b = 1 << (b.bit_length() - 1) if b != n_total - done else b
+            graph = batch_insert(vectors, graph, jnp.int32(done),
+                                 batch_size=b, params=params,
+                                 already_inserted=True, vec_sqnorm=vec_sqnorm)
+            done += b
+
+    # refresh the entry point once construction settles
+    medoid = compute_medoid(vectors, jnp.arange(capacity) < graph.n_valid)
+    return VamanaGraph(adjacency=graph.adjacency, n_valid=graph.n_valid,
+                       medoid=medoid)

@@ -1,0 +1,87 @@
+"""Distance computations for ANNS.
+
+The paper's key observation (§4.1): the square root in Euclidean distance is
+monotone over the positive reals, so all comparisons run on *squared* L2.
+MIPS (Text2Image) is reduced to L2 by the standard one-extra-dimension
+augmentation (§6.3), because RobustPrune needs a metric space.
+
+All pairwise routines are MXU-friendly: they are expressed as a single
+matmul plus rank-1 corrections, which is exactly the TPU-native analogue of
+the paper's warp-parallel dot products.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Registry of supported metrics. "mips" is search-time only; construction
+# always runs in the augmented L2 space (see mips_augment_*).
+METRICS = ("l2", "mips")
+
+
+def l2_squared(x: Array, y: Array) -> Array:
+    """Squared L2 distance between two batched vector sets, last-dim reduced."""
+    d = x.astype(jnp.float32) - y.astype(jnp.float32)
+    return jnp.sum(d * d, axis=-1)
+
+
+def inner_product(x: Array, y: Array) -> Array:
+    return jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32), axis=-1)
+
+
+def pairwise_inner_product(q: Array, x: Array) -> Array:
+    """(Q, D) x (C, D) -> (Q, C) inner products. One MXU matmul."""
+    return q.astype(jnp.float32) @ x.astype(jnp.float32).T
+
+
+def pairwise_l2_squared(q: Array, x: Array, x_sqnorm: Array | None = None) -> Array:
+    """(Q, D) x (C, D) -> (Q, C) squared L2.
+
+    Expanded form ||q||^2 - 2<q,x> + ||x||^2 so the O(Q*C*D) work is one
+    matmul; ``x_sqnorm`` may be precomputed (the index caches it).
+    """
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    if x_sqnorm is None:
+        x_sqnorm = jnp.sum(x * x, axis=-1)
+    q_sqnorm = jnp.sum(q * q, axis=-1)
+    d = q_sqnorm[:, None] - 2.0 * (q @ x.T) + x_sqnorm[None, :]
+    # Clamp tiny negatives from cancellation; keeps sqrt-free ordering stable.
+    return jnp.maximum(d, 0.0)
+
+
+def pairwise_distance(q: Array, x: Array, metric: str = "l2",
+                      x_sqnorm: Array | None = None) -> Array:
+    """Smaller-is-better pairwise distance under ``metric``.
+
+    For "mips" we return the *negated* inner product so that every consumer
+    can minimize uniformly. Graph construction should not use this directly —
+    use the augmented-L2 space instead (see module docstring).
+    """
+    if metric == "l2":
+        return pairwise_l2_squared(q, x, x_sqnorm)
+    if metric == "mips":
+        return -pairwise_inner_product(q, x)
+    raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")
+
+
+def mips_augment_data(x: Array) -> Array:
+    """Lift data vectors (C, D) -> (C, D+1) so MIPS becomes L2 (§6.3).
+
+    x' = [x, sqrt(M^2 - |x|^2)] with M = max row norm. Under this lift,
+    argmax <q, x> == argmin ||q' - x'||^2 for q' = [q, 0].
+    """
+    x = x.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    m2 = jnp.max(sq)
+    extra = jnp.sqrt(jnp.maximum(m2 - sq, 0.0))
+    return jnp.concatenate([x, extra[:, None]], axis=-1)
+
+
+def mips_augment_query(q: Array) -> Array:
+    """Lift query vectors (Q, D) -> (Q, D+1) with a zero last coordinate."""
+    q = q.astype(jnp.float32)
+    return jnp.concatenate([q, jnp.zeros_like(q[..., :1])], axis=-1)

@@ -1,0 +1,289 @@
+"""Sharded Jasper index — scale-out to pods (DESIGN.md §4).
+
+The single-device paper leaves multi-GPU on the table; production vector
+search at 100M–100B rows is shard-and-merge (FAISS/ScaNN style):
+
+  * database rows sharded over the (pod, data) mesh axes — each device owns
+    an INDEPENDENT Vamana sub-index over its rows (graph edges never cross
+    shards, so construction has zero cross-device traffic);
+  * queries sharded over the `model` axis — query parallelism;
+  * search: shard-local beam search -> local top-k -> all_gather over the
+    row-sharding axes -> merge-sort. The collective moves only Q*k*(8 B),
+    which is why the roofline stays compute/memory-local (§Roofline).
+
+Adjacency entries are SHARD-LOCAL ids; global ids are reconstructed as
+shard_row0 + local_id at merge time, keeping all graph arithmetic int32
+even at 100B rows per pod (the GANNS int32-overflow failure the paper
+reports cannot happen here).
+
+All functions are pure and `shard_map`-wrapped; the host-side
+`ShardedJasperIndex` drives the same prefix-doubling schedule as the local
+index, but every rung inserts into EVERY shard at once.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.beam_search import beam_search, make_exact_scorer
+from repro.core.construction import (
+    ConstructionParams,
+    batch_insert,
+    bootstrap_graph,
+)
+from repro.core.medoid import compute_medoid
+from repro.core.vamana import VamanaGraph, init_graph
+
+Array = jax.Array
+
+_INF = jnp.float32(jnp.inf)
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """Static sharding geometry.
+
+    row_axes:   mesh axes that shard database rows (e.g. ("pod", "data"))
+    query_axis: mesh axis that shards the query batch (e.g. "model")
+    """
+
+    row_axes: tuple[str, ...] = ("data",)
+    query_axis: str = "model"
+
+
+def _local_graph(adjacency: Array, n_valid: Array, medoid: Array) -> VamanaGraph:
+    return VamanaGraph(adjacency=adjacency, n_valid=n_valid[0], medoid=medoid[0])
+
+
+def sharded_search_fn(mesh: Mesh, spec: ShardSpec, *, capacity_per_shard: int,
+                      k: int, beam_width: int, max_iters: int):
+    """Build the jit-able sharded search step.
+
+    Returns fn(vectors, vec_sqnorm, adjacency, n_valid, medoid, queries)
+      vectors:   (S*cap, D)  rows sharded over spec.row_axes
+      adjacency: (S*cap, R)  local ids, sharded like vectors
+      n_valid:   (S,) per-shard live counts; medoid: (S,) local medoid ids
+      queries:   (Q, D)      sharded over spec.query_axis
+    -> (ids (Q, k) GLOBAL row ids, dists (Q, k)), sharded over query_axis.
+    """
+    row_axes = spec.row_axes
+
+    def local_search(vectors, vec_sqnorm, adjacency, n_valid, medoid, queries):
+        # shard-local beam search
+        graph = _local_graph(adjacency, n_valid, medoid)
+        score = make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
+        res = beam_search(graph, score, queries.shape[0],
+                          beam_width=beam_width, max_iters=max_iters)
+        ids = res.frontier_ids[:, :k]
+        dists = res.frontier_dists[:, :k]
+
+        # local -> global ids
+        shard_idx = jnp.int32(0)
+        mult = 1
+        for ax in reversed(row_axes):
+            shard_idx = shard_idx + jax.lax.axis_index(ax) * mult
+            mult *= mesh.shape[ax]
+        row0 = shard_idx * capacity_per_shard
+        gids = jnp.where(ids >= 0, ids + row0, -1)
+
+        # hierarchical merge: all_gather along each row axis in turn keeps
+        # per-hop payload at S_axis*Q_loc*k instead of S_total*Q_loc*k
+        for ax in row_axes:
+            gd = jax.lax.all_gather(dists, ax, axis=0)       # (s, Q, k)
+            gi = jax.lax.all_gather(gids, ax, axis=0)
+            gd = jnp.moveaxis(gd, 0, 1).reshape(queries.shape[0], -1)
+            gi = jnp.moveaxis(gi, 0, 1).reshape(queries.shape[0], -1)
+            neg, pos = jax.lax.top_k(-gd, k)
+            dists = -neg
+            gids = jnp.take_along_axis(gi, pos, axis=1)
+        return gids, dists
+
+    vec_spec = P(row_axes, None)
+    scal_spec = P(row_axes)
+    q_spec = P(spec.query_axis, None)
+    out_spec = P(spec.query_axis, None)
+    fn = jax.shard_map(
+        local_search, mesh=mesh,
+        in_specs=(vec_spec, scal_spec, vec_spec, scal_spec, scal_spec, q_spec),
+        out_specs=(out_spec, out_spec),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_insert_fn(mesh: Mesh, spec: ShardSpec, *, batch_size_per_shard: int,
+                      params: ConstructionParams):
+    """Build the jit-able sharded batch-insert step.
+
+    Every shard inserts its own `batch_size_per_shard` rows (already written
+    into its region of the vectors array) — pure data parallelism, zero
+    collectives: the paper's lock-free batch phases become embarrassingly
+    parallel across shards.
+    """
+
+    def local_insert(vectors, vec_sqnorm, adjacency, n_valid, medoid, start):
+        graph = _local_graph(adjacency, n_valid, medoid)
+        graph = batch_insert(vectors, graph, start[0],
+                             batch_size=batch_size_per_shard, params=params,
+                             vec_sqnorm=vec_sqnorm)
+        return graph.adjacency, graph.n_valid[None], graph.medoid[None]
+
+    vec_spec = P(spec.row_axes, None)
+    scal_spec = P(spec.row_axes)
+    fn = jax.shard_map(
+        local_insert, mesh=mesh,
+        in_specs=(vec_spec, scal_spec, vec_spec, scal_spec, scal_spec,
+                  scal_spec),
+        out_specs=(vec_spec, scal_spec, scal_spec),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def sharded_bootstrap_fn(mesh: Mesh, spec: ShardSpec, *, n0: int,
+                         params: ConstructionParams):
+    def local_boot(vectors, adjacency, n_valid, medoid):
+        graph = _local_graph(adjacency, n_valid, medoid)
+        graph = bootstrap_graph(vectors, graph, n0=n0, params=params)
+        return graph.adjacency, graph.n_valid[None], graph.medoid[None]
+
+    vec_spec = P(spec.row_axes, None)
+    scal_spec = P(spec.row_axes)
+    fn = jax.shard_map(
+        local_boot, mesh=mesh,
+        in_specs=(vec_spec, vec_spec, scal_spec, scal_spec),
+        out_specs=(vec_spec, scal_spec, scal_spec),
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+class ShardedJasperIndex:
+    """Host-side driver for a row-sharded Jasper index on a device mesh."""
+
+    def __init__(self, mesh: Mesh, dims: int, capacity_per_shard: int, *,
+                 spec: ShardSpec | None = None,
+                 construction: ConstructionParams | None = None):
+        self.mesh = mesh
+        self.spec = spec or ShardSpec(
+            row_axes=tuple(a for a in mesh.axis_names if a != "model")
+            or (mesh.axis_names[0],),
+        )
+        if (self.spec.query_axis is not None
+                and self.spec.query_axis not in mesh.axis_names):
+            # fall back to replicated queries on meshes without a model axis
+            self.spec = ShardSpec(self.spec.row_axes, None)
+        self.dims = dims
+        self.cap = capacity_per_shard
+        self.params = construction or ConstructionParams()
+        self.n_shards = 1
+        for ax in self.spec.row_axes:
+            self.n_shards *= mesh.shape[ax]
+
+        rows = self.n_shards * capacity_per_shard
+        dev = NamedSharding(mesh, P(self.spec.row_axes, None))
+        dev1 = NamedSharding(mesh, P(self.spec.row_axes))
+        self.vectors = jax.device_put(
+            jnp.zeros((rows, dims), jnp.float32), dev)
+        self.vec_sqnorm = jax.device_put(jnp.zeros((rows,), jnp.float32), dev1)
+        self.adjacency = jax.device_put(
+            jnp.full((rows, self.params.degree_bound), -1, jnp.int32), dev)
+        self.n_valid = jax.device_put(
+            jnp.zeros((self.n_shards,), jnp.int32), dev1)
+        self.medoid = jax.device_put(
+            jnp.zeros((self.n_shards,), jnp.int32), dev1)
+        self._search_cache: dict = {}
+        self._insert_cache: dict = {}
+
+    @property
+    def size(self) -> int:
+        return int(jnp.sum(self.n_valid))
+
+    def _write_rows(self, per_shard_start: int, data) -> None:
+        """data: (S, b, D) — shard s's rows land at s*cap + start."""
+        s, b, d = data.shape
+        ids = (jnp.arange(s)[:, None] * self.cap
+               + per_shard_start + jnp.arange(b)[None, :]).reshape(-1)
+        flat = jnp.asarray(data, jnp.float32).reshape(-1, d)
+        self.vectors = self.vectors.at[ids].set(flat)
+        self.vec_sqnorm = self.vec_sqnorm.at[ids].set(
+            jnp.sum(flat * flat, axis=-1))
+
+    def build(self, data) -> "ShardedJasperIndex":
+        """Bulk build. data: (N, D) with N divisible by n_shards — rows are
+        dealt contiguously to shards."""
+        data = jnp.asarray(data, jnp.float32)
+        n = data.shape[0]
+        if n % self.n_shards:
+            raise ValueError(f"N={n} not divisible by n_shards={self.n_shards}")
+        per = n // self.n_shards
+        self._write_rows(0, data.reshape(self.n_shards, per, -1))
+
+        n0 = min(1024, per)
+        boot = sharded_bootstrap_fn(self.mesh, self.spec, n0=n0,
+                                    params=self.params)
+        self.adjacency, self.n_valid, self.medoid = boot(
+            self.vectors, self.adjacency, self.n_valid, self.medoid)
+
+        inserted = n0
+        while inserted < per:
+            remaining = per - inserted
+            b = min(max(256, 1 << (inserted.bit_length() - 1)), remaining)
+            if b != remaining:
+                b = 1 << (b.bit_length() - 1)
+            self._insert_rung(inserted, b)
+            inserted += b
+        return self
+
+    def insert(self, data) -> "ShardedJasperIndex":
+        """Streaming insert of (S, b, D) — b rows per shard."""
+        data = jnp.asarray(data, jnp.float32)
+        if data.ndim == 2:
+            n = data.shape[0]
+            if n % self.n_shards:
+                raise ValueError("insert size must divide n_shards")
+            data = data.reshape(self.n_shards, n // self.n_shards, -1)
+        start = int(self.n_valid[0])
+        self._write_rows(start, data)
+        self._insert_rung(start, data.shape[1])
+        return self
+
+    def _insert_rung(self, start: int, b: int) -> None:
+        key = b
+        if key not in self._insert_cache:
+            self._insert_cache[key] = sharded_insert_fn(
+                self.mesh, self.spec, batch_size_per_shard=b,
+                params=self.params)
+        starts = jnp.full((self.n_shards,), start, jnp.int32)
+        starts = jax.device_put(
+            starts, NamedSharding(self.mesh, P(self.spec.row_axes)))
+        self.adjacency, self.n_valid, self.medoid = self._insert_cache[key](
+            self.vectors, self.vec_sqnorm, self.adjacency, self.n_valid,
+            self.medoid, starts)
+
+    def search(self, queries, k: int = 10, *, beam_width: int | None = None,
+               max_iters: int | None = None):
+        """Global top-k over all shards. queries: (Q, D), Q divisible by the
+        query-axis size (or any Q if queries are replicated)."""
+        queries = jnp.asarray(queries, jnp.float32)
+        bw = beam_width or max(k, 32)
+        mi = max_iters or (2 * bw + 8)
+        ckey = (queries.shape, k, bw, mi)
+        if ckey not in self._search_cache:
+            self._search_cache[ckey] = sharded_search_fn(
+                self.mesh, self.spec, capacity_per_shard=self.cap, k=k,
+                beam_width=bw, max_iters=mi)
+        if self.spec.query_axis is not None:
+            queries = jax.device_put(
+                queries, NamedSharding(self.mesh, P(self.spec.query_axis, None)))
+        return self._search_cache[ckey](
+            self.vectors, self.vec_sqnorm, self.adjacency, self.n_valid,
+            self.medoid, queries)
+
+    def global_row(self, shard: int, local_id: int) -> int:
+        return shard * self.cap + local_id

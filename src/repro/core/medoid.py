@@ -1,0 +1,34 @@
+"""Medoid (entry point) selection for the Vamana graph.
+
+The paper uses the vector closest to the dataset center as the search entry
+point (§3.2). With a sharded index each shard keeps its own medoid; the
+distributed layer periodically refreshes them (a tiny all-reduce).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import pairwise_l2_squared
+
+Array = jax.Array
+
+
+def compute_medoid(vectors: Array, valid_mask: Array | None = None) -> Array:
+    """Index of the vector closest to the (masked) centroid.
+
+    vectors: (N, D). valid_mask: optional (N,) bool — capacity-allocated
+    indexes carry trailing uninitialized rows that must not vote.
+    """
+    v = vectors.astype(jnp.float32)
+    if valid_mask is None:
+        centroid = jnp.mean(v, axis=0, keepdims=True)
+        d = pairwise_l2_squared(centroid, v)[0]
+        return jnp.argmin(d).astype(jnp.int32)
+    w = valid_mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    centroid = (jnp.sum(v * w[:, None], axis=0) / denom)[None, :]
+    d = pairwise_l2_squared(centroid, v)[0]
+    d = jnp.where(valid_mask, d, jnp.inf)
+    return jnp.argmin(d).astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""Product Quantization baseline (paper §5, Jégou et al. 2011).
+
+The paper implements PQ in Jasper and finds it *strictly worse* than exact
+search on GPU: the per-subspace codebook lookups scatter over memory (8x
+read amplification in 32 B sectors) and the lookup table cannot fit shared
+memory. The TPU failure mode is analogous — `take_along_axis` gathers
+serialize through the scalar core / generate gather HLOs with no MXU work.
+We keep the implementation as the comparison baseline for
+benchmarks/quantization.py (paper Fig 12).
+
+Layout: D dims split into K contiguous subspaces of D/K dims, each quantized
+to one of 256 centroids learned with a few k-means iterations (seeded,
+deterministic).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class PQParams(NamedTuple):
+    codebooks: Array  # (K, 256, Dsub)
+
+    @property
+    def n_subspaces(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def subdim(self) -> int:
+        return self.codebooks.shape[2]
+
+
+def _kmeans_one(key: Array, x: Array, n_centroids: int, iters: int) -> Array:
+    """Plain Lloyd's on one subspace. x: (N, Dsub) -> (n_centroids, Dsub)."""
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, (n_centroids,), replace=n < n_centroids)
+    cent = x[idx]
+
+    def step(cent, _):
+        d = (
+            jnp.sum(x * x, axis=1)[:, None]
+            - 2.0 * x @ cent.T
+            + jnp.sum(cent * cent, axis=1)[None, :]
+        )
+        assign = jnp.argmin(d, axis=1)
+        one_hot = jax.nn.one_hot(assign, cent.shape[0], dtype=x.dtype)
+        counts = jnp.maximum(one_hot.sum(axis=0), 1.0)
+        new = (one_hot.T @ x) / counts[:, None]
+        # keep empty clusters where they were
+        new = jnp.where((one_hot.sum(axis=0) > 0)[:, None], new, cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent
+
+
+@partial(jax.jit, static_argnames=("n_subspaces", "n_centroids", "iters"))
+def _train(key: Array, vectors: Array, n_subspaces: int, n_centroids: int,
+           iters: int) -> Array:
+    n, d = vectors.shape
+    dsub = d // n_subspaces
+    xs = vectors.astype(jnp.float32)[:, : n_subspaces * dsub]
+    xs = xs.reshape(n, n_subspaces, dsub).transpose(1, 0, 2)  # (K, N, Dsub)
+    keys = jax.random.split(key, n_subspaces)
+    return jax.vmap(lambda k, x: _kmeans_one(k, x, n_centroids, iters))(keys, xs)
+
+
+def pq_train(key: Array, vectors: Array, n_subspaces: int = 16,
+             n_centroids: int = 256, iters: int = 8) -> PQParams:
+    if vectors.shape[1] % n_subspaces != 0:
+        raise ValueError(
+            f"dims {vectors.shape[1]} not divisible by n_subspaces {n_subspaces}")
+    return PQParams(codebooks=_train(key, vectors, n_subspaces, n_centroids, iters))
+
+
+@jax.jit
+def pq_encode(params: PQParams, vectors: Array) -> Array:
+    """(N, D) -> uint8[N, K] nearest-centroid codes."""
+    n = vectors.shape[0]
+    k, c, dsub = params.codebooks.shape
+    x = vectors.astype(jnp.float32)[:, : k * dsub].reshape(n, k, dsub)
+    x = x.transpose(1, 0, 2)  # (K, N, Dsub)
+
+    def enc(xk, bk):  # (N, Dsub), (256, Dsub)
+        d = (
+            jnp.sum(xk * xk, axis=1)[:, None]
+            - 2.0 * xk @ bk.T
+            + jnp.sum(bk * bk, axis=1)[None, :]
+        )
+        return jnp.argmin(d, axis=1)
+
+    codes = jax.vmap(enc)(x, params.codebooks)  # (K, N)
+    return codes.T.astype(jnp.uint8)
+
+
+@jax.jit
+def pq_lookup_table(params: PQParams, queries: Array) -> Array:
+    """ADC tables: (Q, K, 256) squared-L2 of each query subvector to centroids."""
+    q = queries.astype(jnp.float32)
+    k, c, dsub = params.codebooks.shape
+    qs = q[:, : k * dsub].reshape(q.shape[0], k, dsub)
+    diff = qs[:, :, None, :] - params.codebooks[None, :, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pq_distance(params: PQParams, codes: Array, queries: Array,
+                candidate_ids: Array | None = None) -> Array:
+    """Asymmetric distance computation via LUT gathers.
+
+    This is deliberately the paper's "scattered lookup" access pattern — the
+    gather over the 256-entry tables is the bottleneck being measured.
+    """
+    lut = pq_lookup_table(params, queries)  # (Q, K, 256)
+    if candidate_ids is None:
+        c = codes.astype(jnp.int32)  # (N, K)
+        # (Q, N, K) gather then reduce
+        g = jnp.take_along_axis(
+            lut[:, None, :, :].repeat(c.shape[0], axis=1),
+            c[None, :, :, None].astype(jnp.int32),
+            axis=3,
+        )[..., 0]
+        return jnp.sum(g, axis=-1)
+    safe = jnp.maximum(candidate_ids, 0)
+    c = codes[safe].astype(jnp.int32)  # (Q, C, K)
+    g = jnp.take_along_axis(
+        lut[:, None, :, :].repeat(c.shape[1], axis=1), c[..., None], axis=3
+    )[..., 0]
+    return jnp.sum(g, axis=-1)

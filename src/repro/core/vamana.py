@@ -1,0 +1,90 @@
+"""Vamana graph structure (§3.1) as fixed-shape JAX arrays.
+
+Design notes (TPU adaptation):
+  * The adjacency is a dense ``int32[N_cap, R]`` array, -1 padded. Dense
+    fixed-degree storage is what both the paper and CAGRA use on GPU; on TPU
+    it additionally makes every gather shape static, which jit requires.
+  * ``N_cap`` is a capacity, not the live size: the paper sizes construction
+    workspace off remaining device memory (Table 1); we capacity-allocate so
+    streaming inserts never reallocate device buffers.
+  * The struct is a registered pytree so it moves freely through jit /
+    shard_map / checkpointing.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+INVALID = jnp.int32(-1)
+
+
+class VamanaGraph(NamedTuple):
+    """Directed bounded-degree proximity graph.
+
+    adjacency: int32[N_cap, R]   out-edges, -1 padded (sorted by distance)
+    n_valid:   int32 scalar      number of live vertices (prefix of rows)
+    medoid:    int32 scalar      entry point for search/construction
+    """
+
+    adjacency: Array
+    n_valid: Array
+    medoid: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degree_bound(self) -> int:
+        return self.adjacency.shape[1]
+
+
+def init_graph(capacity: int, degree_bound: int) -> VamanaGraph:
+    """Empty graph with pre-allocated capacity."""
+    adj = jnp.full((capacity, degree_bound), INVALID, dtype=jnp.int32)
+    return VamanaGraph(adjacency=adj, n_valid=jnp.int32(0), medoid=jnp.int32(0))
+
+
+def graph_degree_stats(graph: VamanaGraph) -> dict[str, Array]:
+    """Live-vertex degree statistics (used by tests and benchmarks)."""
+    n = graph.n_valid
+    row_ids = jnp.arange(graph.capacity, dtype=jnp.int32)
+    live = row_ids < n
+    deg = jnp.sum(graph.adjacency >= 0, axis=1)
+    deg = jnp.where(live, deg, 0)
+    n_f = jnp.maximum(n.astype(jnp.float32), 1.0)
+    return {
+        "mean_degree": jnp.sum(deg).astype(jnp.float32) / n_f,
+        "max_degree": jnp.max(deg),
+        "min_degree": jnp.min(jnp.where(live, deg, graph.degree_bound + 1)),
+        "n_valid": n,
+    }
+
+
+def validate_graph(graph: VamanaGraph) -> dict[str, Array]:
+    """Structural invariants, checked by property tests:
+       - every edge target is a live vertex (or -1 padding)
+       - no self loops
+       - padding is suffix-contiguous per row (sorted-by-distance invariant
+         implies valid entries precede -1s).
+    """
+    n = graph.n_valid
+    adj = graph.adjacency
+    row_ids = jnp.arange(graph.capacity, dtype=jnp.int32)[:, None]
+    live_row = row_ids < n
+    is_pad = adj < 0
+    in_range = jnp.where(is_pad, True, (adj >= 0) & (adj < n))
+    no_self = jnp.where(is_pad, True, adj != row_ids)
+    # suffix-contiguity: once a pad appears, everything after is pad
+    pad_prefix = jnp.cumsum(is_pad.astype(jnp.int32), axis=1)
+    contiguous = jnp.all(jnp.where(is_pad, True, pad_prefix == 0) | ~live_row)
+    return {
+        "edges_in_range": jnp.all(in_range | ~live_row),
+        "no_self_loops": jnp.all(no_self | ~live_row),
+        "padding_contiguous": contiguous,
+    }

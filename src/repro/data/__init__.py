@@ -1,0 +1,12 @@
+"""Deterministic synthetic data pipelines (tokens, frames, ANNS vectors)."""
+
+from repro.data.synthetic import (
+    TokenDataset,
+    FrameDataset,
+    make_lm_batch,
+    make_anns_dataset,
+    make_queries,
+)
+
+__all__ = ["TokenDataset", "FrameDataset", "make_lm_batch",
+           "make_anns_dataset", "make_queries"]

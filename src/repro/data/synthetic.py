@@ -1,0 +1,122 @@
+"""Deterministic synthetic data.
+
+Fault-tolerance property: every batch is a pure function of (seed, step),
+so a restarted job replays the exact token stream — no data-loader state in
+checkpoints, no skew between re-sharded workers (DESIGN.md §7).
+
+ANNS datasets are distribution-matched stand-ins for paper Table 3:
+clustered Gaussians (graph indices behave qualitatively like real embeddings
+on these — recall curves are meaningful, unlike uniform noise) with dims /
+metric / dtype per dataset.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ANNSDatasetConfig, ModelConfig
+
+Array = jax.Array
+
+
+def make_lm_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int,
+                  step: int) -> dict:
+    """One (tokens, labels) batch. Next-token objective: labels are tokens
+    shifted left; encoder archs get frame embeddings + frame labels."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    if cfg.frontend == "frames":
+        k1, k2 = jax.random.split(key)
+        frames = jax.random.normal(k1, (batch, seq_len, cfg.d_model),
+                                   jnp.float32)
+        labels = jax.random.randint(k2, (batch, seq_len), 0, cfg.vocab_size,
+                                    jnp.int32)
+        return {"frames": frames, "labels": labels}
+    tokens = jax.random.randint(key, (batch, seq_len + 1), 0, cfg.vocab_size,
+                                jnp.int32)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+@dataclass
+class TokenDataset:
+    cfg: ModelConfig
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def __call__(self, step: int) -> dict:
+        return make_lm_batch(self.cfg, self.batch, self.seq_len, self.seed,
+                             step)
+
+
+@dataclass
+class FrameDataset:
+    cfg: ModelConfig
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def __call__(self, step: int) -> dict:
+        return make_lm_batch(self.cfg, self.batch, self.seq_len, self.seed,
+                             step)
+
+
+# --------------------------------------------------------------- ANNS data
+def _name_seed(name: str) -> int:
+    return int(np.frombuffer(name.encode().ljust(8, b"x")[:8],
+                             dtype=np.uint32)[0])
+
+
+def _manifold(ds: ANNSDatasetConfig, n_clusters: int = 64,
+              intrinsic: int = 64):
+    """Shared generative structure per dataset NAME: cluster centers living
+    in a low-intrinsic-dimension subspace of the ambient space.
+
+    Isolated Gaussian islands in high ambient dimension are UNNAVIGABLE for
+    graph ANNS (inter-cluster distances concentrate, so greedy search has
+    no gradient — recall collapses). Real embeddings have low intrinsic
+    dimension; generating on an `intrinsic`-dim manifold keeps the mixture
+    structure while preserving navigability at gist/openai widths.
+    """
+    rng = np.random.default_rng(_name_seed(ds.name))
+    r = min(intrinsic, ds.dims)
+    basis = rng.normal(size=(r, ds.dims)).astype(np.float32) / np.sqrt(r)
+    centers_z = rng.normal(size=(n_clusters, r)).astype(np.float32)
+    return basis, centers_z
+
+
+def _clustered(ds: ANNSDatasetConfig, rng: np.random.Generator, n: int,
+               spread: float = 0.35, ambient_noise: float = 0.02
+               ) -> np.ndarray:
+    basis, centers_z = _manifold(ds)
+    r = basis.shape[0]
+    assign = rng.integers(0, centers_z.shape[0], n)
+    z = centers_z[assign] + spread * rng.normal(size=(n, r)).astype(np.float32)
+    x = z @ basis + ambient_noise * rng.normal(
+        size=(n, ds.dims)).astype(np.float32)
+    if ds.dtype == "uint8":                       # BigANN/SIFT-style
+        x = np.clip((x * 64 + 128), 0, 255).astype(np.uint8)
+    return x.astype(np.float32)
+
+
+def make_anns_dataset(ds: ANNSDatasetConfig, n: int | None = None,
+                      seed: int = 0) -> np.ndarray:
+    """Synthetic stand-in for one Table 3 dataset (bench_n rows default)."""
+    n = n or ds.bench_n
+    rng = np.random.default_rng(seed * 7919 + _name_seed(ds.name))
+    x = _clustered(ds, rng, n)
+    if ds.metric == "mips":                       # Text2Image-style norms
+        scale = rng.uniform(0.5, 1.5, size=(n, 1)).astype(np.float32)
+        x = x * scale
+    return x
+
+
+def make_queries(ds: ANNSDatasetConfig, n_queries: int | None = None,
+                 seed: int = 1) -> np.ndarray:
+    """Held-out queries from the same mixture (disjoint draws)."""
+    nq = n_queries or ds.n_queries
+    rng = np.random.default_rng(seed * 104729 + _name_seed(ds.name) + 1)
+    return _clustered(ds, rng, nq)

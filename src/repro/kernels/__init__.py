@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+Three kernels, each with a pure-jnp oracle (ref.py) and a jit'd public
+wrapper (ops.py); validated against the oracle across shape/dtype sweeps in
+interpret mode (this container is CPU-only; TPU is the compile target):
+
+  distance/    tiled pairwise L2 on the MXU + the two *gather* variants that
+               mirror the paper's Table 5 load-strategy study (tiled row-DMA
+               vs chunked bulk loads)
+  rabitq_dot/  fused bit-unpack + estimator inner product for RaBitQ codes
+  topk/        small-k frontier top-k via iterative min-extraction
+"""
+
+from repro.kernels.distance import ops as distance_ops
+from repro.kernels.rabitq_dot import ops as rabitq_ops
+from repro.kernels.topk import ops as topk_ops
+
+__all__ = ["distance_ops", "rabitq_ops", "topk_ops"]

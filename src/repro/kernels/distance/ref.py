@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the distance kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pairwise_l2_ref(q: Array, x: Array) -> Array:
+    """(Q, D), (C, D) -> (Q, C) squared L2."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qsq = jnp.sum(q * q, axis=-1)
+    xsq = jnp.sum(x * x, axis=-1)
+    return jnp.maximum(qsq[:, None] - 2.0 * (q @ x.T) + xsq[None, :], 0.0)
+
+
+def gather_l2_ref(q: Array, db: Array, ids: Array) -> Array:
+    """(Q, D), (N, D), (Q, K) int32 -> (Q, K) squared L2 to gathered rows.
+
+    Invalid ids (< 0) produce +inf.
+    """
+    q = q.astype(jnp.float32)
+    safe = jnp.maximum(ids, 0)
+    cand = db[safe].astype(jnp.float32)             # (Q, K, D)
+    d = jnp.sum((cand - q[:, None, :]) ** 2, axis=-1)
+    return jnp.where(ids >= 0, d, jnp.inf)

@@ -1,0 +1,17 @@
+"""Oracle for the flash attention kernel: the (already naive-validated)
+pure-JAX blockwise attention from the model substrate."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import blockwise_attention
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0, q_offset: int = 0) -> Array:
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, q_chunk=min(64, q.shape[1]),
+                               kv_chunk=min(64, k.shape[1]))

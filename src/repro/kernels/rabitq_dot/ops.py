@@ -1,0 +1,111 @@
+"""Public wrapper for the fused RaBitQ estimator kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rabitq import RaBitQCodes, RaBitQQuery, pack_codes
+from repro.kernels.rabitq_dot.rabitq_kernel import (
+    rabitq_distance_pallas,
+    rabitq_gather_distance_pallas,
+)
+
+Array = jax.Array
+
+_INF = jnp.float32(jnp.inf)
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, mult: int, axis: int, value=0) -> Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("bits", "block_q", "block_c", "interpret"))
+def rabitq_distance(packed: Array, data_add: Array, data_rescale: Array,
+                    q_rot: Array, query_add: Array, query_sumq: Array, *,
+                    bits: int, block_q: int = 128, block_c: int = 256,
+                    interpret: bool | None = None) -> Array:
+    """All-candidates estimated distances: (Q, C) from packed codes."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    qn, d = q_rot.shape
+    cn = packed.shape[0]
+    cpb = 8 // bits
+    # pad packed width to a 128-lane tile; pad q dims to match (zeros inert)
+    p_pad = _pad_to(packed, 128, 1)
+    d_need = p_pad.shape[1] * cpb
+    q_pad = _pad_to(q_rot.astype(jnp.float32), d_need - d + d if d_need > d
+                    else 1, 1) if d_need > d else q_rot.astype(jnp.float32)
+    if q_pad.shape[1] < d_need:
+        q_pad = jnp.pad(q_pad, ((0, 0), (0, d_need - q_pad.shape[1])))
+    q_pad = _pad_to(q_pad, block_q, 0)
+    qadd = _pad_to(query_add, block_q, 0)
+    qsum = _pad_to(query_sumq, block_q, 0)
+    p_pad = _pad_to(p_pad, block_c, 0)
+    dadd = _pad_to(data_add, block_c, 0)
+    drs = _pad_to(data_rescale, block_c, 0)
+    out = rabitq_distance_pallas(p_pad, dadd, drs, q_pad, qadd, qsum,
+                                 bits=bits, block_q=block_q, block_c=block_c,
+                                 interpret=interpret)
+    return out[:qn, :cn]
+
+
+@partial(jax.jit, static_argnames=("bits", "block_q", "interpret"))
+def rabitq_gather_distance(cand_packed: Array, cand_add: Array,
+                           cand_rescale: Array, q_rot: Array,
+                           query_add: Array, query_sumq: Array, *, bits: int,
+                           block_q: int = 8, interpret: bool | None = None
+                           ) -> Array:
+    """Beam-search form: (Q, K, P) candidate codes -> (Q, K) estimates."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    qn, k, p = cand_packed.shape
+    d = q_rot.shape[1]
+    cpb = 8 // bits
+    p_pad = _pad_to(cand_packed, 128, 2)
+    d_need = p_pad.shape[2] * cpb
+    q_pad = q_rot.astype(jnp.float32)
+    if q_pad.shape[1] < d_need:
+        q_pad = jnp.pad(q_pad, ((0, 0), (0, d_need - q_pad.shape[1])))
+    q_pad = _pad_to(q_pad, block_q, 0)
+    out = rabitq_gather_distance_pallas(
+        _pad_to(p_pad, block_q, 0),
+        _pad_to(cand_add, block_q, 0),
+        _pad_to(cand_rescale, block_q, 0),
+        q_pad,
+        _pad_to(query_add, block_q, 0),
+        _pad_to(query_sumq, block_q, 0),
+        bits=bits, block_q=block_q, interpret=interpret)
+    return out[:qn]
+
+
+def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
+                              bits: int, n_valid: Array,
+                              interpret: bool | None = None):
+    """Beam-search ScoreFn: bulk-gather candidate code rows (chunked-load
+    strategy), then one fused unpack+dot+epilogue kernel per query tile."""
+    packed = pack_codes(codes.codes, bits)           # (N, P)
+
+    def score(ids: Array) -> Array:
+        in_range = (ids >= 0) & (ids < n_valid)
+        safe = jnp.maximum(jnp.where(in_range, ids, 0), 0)
+        cand = packed[safe]                          # (Q, K, P) bulk gather
+        dadd = codes.data_add[safe]
+        drs = codes.data_rescale[safe]
+        out = rabitq_gather_distance(cand, dadd, drs, query.q_rot,
+                                     query.query_add, query.query_sumq,
+                                     bits=bits, interpret=interpret)
+        return jnp.where(in_range, out, _INF)
+
+    return score

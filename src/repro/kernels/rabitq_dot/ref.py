@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused RaBitQ estimator kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rabitq import unpack_codes
+
+Array = jax.Array
+
+
+def rabitq_distance_ref(packed: Array, data_add: Array, data_rescale: Array,
+                        q_rot: Array, query_add: Array, query_sumq: Array,
+                        *, bits: int, dims: int) -> Array:
+    """Estimated squared L2 from PACKED codes.
+
+    packed: (C, ceil(D*bits/8)) uint8; q_rot: (Q, D) f32 -> (Q, C) f32.
+    """
+    codes = unpack_codes(packed, bits, dims).astype(jnp.float32)   # (C, D)
+    dot = q_rot.astype(jnp.float32) @ codes.T                       # (Q, C)
+    est = (data_add[None, :] + query_add[:, None]
+           + data_rescale[None, :] * (dot - query_sumq[:, None]))
+    return jnp.maximum(est, 0.0)

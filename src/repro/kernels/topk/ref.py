@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the frontier top-k kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def topk_ref(dists: Array, ids: Array, k: int) -> tuple[Array, Array]:
+    """(Q, C) dists + ids -> k smallest per row, ascending.
+
+    Ties broken by position (first occurrence wins) — matches the kernel's
+    iterative min-extraction order.
+    """
+    neg, pos = jax.lax.top_k(-dists, k)
+    out_ids = jnp.take_along_axis(ids, pos, axis=1)
+    return -neg, out_ids

@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder CPU devices stand in for 2 pods x 256 chips of
+TPU v5e. For every runnable cell (DESIGN.md §Arch-applicability) we:
+
+    1. build abstract inputs (ShapeDtypeStruct — nothing is allocated),
+    2. jit the step (train_step / prefill / serve_step) with the
+       production in/out shardings,
+    3. .lower().compile() — sharding mismatches, OOM-at-compile, and
+       unsupported collectives all surface HERE,
+    4. record memory_analysis / cost_analysis / parsed collective bytes
+       into results/dryrun/<cell>.json for §Dry-run and §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cell_is_runnable, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import shardings as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.sharding_ctx import sharding_rules
+from repro.roofline.analysis import (
+    TPU_V5E,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+from repro.roofline.hlo_analyzer import analyze_hlo
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import TrainState, init_train_state, make_train_step
+
+
+def input_structs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for one cell (weak-type-correct, shardable)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode" or shape.kind == "long_decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.frontend == "frames":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+    base = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "train":
+        base["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return base
+
+
+def _abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: M.init_params(cfg, k), key)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               grad_accum: int = 1, overrides: dict | None = None,
+               compile_cell: bool = True, opts: tuple = ()) -> dict:
+    """Lower (+compile) one cell; return the §Dry-run/§Roofline record.
+
+    opts — §Perf hillclimb switches:
+      "last_logit"  prefill computes logits only for the final position
+      "moe_local"   chunk-local MoE dispatch (moe_dispatch_chunks = data axis)
+      "no_sp"       disable sequence-parallel residuals (paper-faithful TP)
+    """
+    import dataclasses
+    if "moe_local" in opts and cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, moe_dispatch_chunks=-1)
+    if "no_sp" in opts:
+        overrides = {**(overrides or {}), "res_seq": None}
+    t0 = time.time()
+    n_chips = mesh.devices.size
+    b, s = shape.global_batch, shape.seq_len
+    inputs = input_structs(cfg, shape)
+    result: dict = {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_chips": int(n_chips),
+    }
+
+    params_abs = _abstract_params(cfg)
+    n_params = sum(math.prod(x.shape)
+                   for x in jax.tree_util.tree_leaves(params_abs))
+    result["n_params"] = n_params
+
+    p_shd = shd.sanitize_shardings(
+        shd.param_shardings(mesh, cfg, overrides), params_abs, mesh)
+    b_all = shd.batch_shardings(mesh, cfg, overrides)
+
+    with mesh, sharding_rules(mesh, overrides):
+        if shape.kind == "train":
+            opt = OptimizerConfig(total_steps=10_000)
+            step_fn = make_train_step(cfg, opt, grad_accum=grad_accum)
+            state_abs = jax.eval_shape(
+                lambda p: init_train_state(cfg, p), params_abs)
+            s_shd = shd.sanitize_shardings(
+                shd.train_state_shardings(mesh, cfg, overrides), state_abs,
+                mesh)
+            in_b = {k: shd.sanitize_shardings(b_all[k], inputs[k], mesh)
+                    for k in inputs}
+            jitted = jax.jit(step_fn, in_shardings=(s_shd, in_b),
+                             out_shardings=(s_shd, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, inputs)
+            n_tokens = b * s
+            mflops = model_flops(_active_params(cfg, n_params), n_tokens,
+                                 training=True)
+        elif shape.kind == "prefill":
+            if cfg.is_encoder:
+                def fwd(p, batch):
+                    return M.forward(p, cfg, batch)
+            else:
+                last_only = "last_logit" in opts
+
+                def fwd(p, batch):
+                    return M.prefill(p, cfg, batch, max_len=s,
+                                     last_only=last_only)
+            in_b = {k: shd.sanitize_shardings(b_all.get(
+                k, shd.replicated(mesh)), inputs[k], mesh) for k in inputs}
+            jitted = jax.jit(fwd, in_shardings=(p_shd, in_b))
+            lowered = jitted.lower(params_abs, inputs)
+            mflops = model_flops(_active_params(cfg, n_params), b * s,
+                                 training=False)
+        else:  # decode / long_decode
+            state_abs = jax.eval_shape(
+                lambda: M.init_decode_state(cfg, b, s))
+            st_shd = shd.sanitize_shardings(
+                shd.decode_state_shardings(mesh, cfg, overrides), state_abs,
+                mesh)
+            tok_shd = shd.sanitize_shardings(
+                shd.batch_shardings(mesh, cfg, overrides)["tokens"]
+                if cfg.frontend != "frames" else shd.replicated(mesh),
+                inputs["tokens"], mesh)
+
+            def serve_step(p, st, tok):
+                return M.decode_step(p, cfg, st, tok)
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_shd, st_shd, tok_shd),
+                             out_shardings=(None, st_shd),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, state_abs, inputs["tokens"])
+            mflops = model_flops(_active_params(cfg, n_params), b,
+                                 training=False)
+
+        result["lower_s"] = round(time.time() - t0, 2)
+        if not compile_cell:
+            return result
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    result["memory_per_device"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+        "total_gb": round((mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes) / 2**30, 3),
+    }
+    # raw XLA numbers (while-loop bodies counted ONCE — kept for reference)
+    cost = compiled.cost_analysis()
+    result["cost_per_device_raw"] = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+    }
+    # loop-corrected counts from the HLO text (see roofline/hlo_analyzer.py)
+    hlo_text = compiled.as_text()
+    ana = analyze_hlo(hlo_text)
+    flops = ana["flops"]
+    byts = ana["bytes_accessed"]
+    result["cost_per_device"] = {"flops": flops, "bytes_accessed": byts}
+    result["collectives_per_device"] = ana["collectives"]
+    # uncorrected single-count parse, for comparison
+    result["collectives_raw"] = collective_bytes_from_hlo(hlo_text)
+
+    rt = roofline_terms(flops, byts, ana["collectives"]["total"]["bytes"],
+                        1, TPU_V5E)
+    result["roofline"] = rt
+    result["model_flops_global"] = mflops
+    total_hlo_flops = flops * n_chips
+    result["model_vs_hlo_flops"] = (
+        mflops / total_hlo_flops if total_hlo_flops else None)
+    return result
+
+
+def _active_params(cfg: ModelConfig, n_params: int) -> int:
+    """Active params for MODEL_FLOPS (MoE: only routed experts count)."""
+    if cfg.family != "moe" or cfg.num_experts == 0:
+        return n_params
+    # expert weights are 3 matrices of (d_model x moe_d_ff) per expert
+    per_expert = 3 * cfg.d_model * (cfg.moe_d_ff or cfg.d_ff)
+    inactive = (cfg.num_experts - cfg.experts_per_token) * per_expert \
+        * cfg.num_layers
+    return n_params - inactive
+
+
+def run_cells(archs, shapes, *, multi_pod: bool, out_dir: str,
+              grad_accum: int = 1, skip_compile: bool = False,
+              opts: tuple = (), tag_suffix: str = "") -> list[dict]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = ("multipod" if multi_pod else "singlepod") + tag_suffix
+    os.makedirs(out_dir, exist_ok=True)
+    records = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = SHAPES[shape_name]
+            ok, why = cell_is_runnable(cfg, shape)
+            cell = f"{arch}__{shape_name}__{tag}"
+            path = os.path.join(out_dir, cell + ".json")
+            if not ok:
+                rec = {"arch": arch, "shape": shape_name, "mesh": tag,
+                       "status": "skipped", "reason": why}
+                print(f"[skip] {cell}: {why}", flush=True)
+            else:
+                print(f"[cell] {cell} ...", flush=True)
+                try:
+                    rec = lower_cell(cfg, shape, mesh,
+                                     grad_accum=grad_accum,
+                                     compile_cell=not skip_compile,
+                                     opts=opts)
+                    rec["status"] = "ok"
+                    rec["opts"] = list(opts)
+                    rec["grad_accum"] = grad_accum
+                    r = rec.get("roofline", {})
+                    print(f"  ok: lower {rec.get('lower_s')}s "
+                          f"compile {rec.get('compile_s')}s "
+                          f"mem {rec.get('memory_per_device', {}).get('total_gb')}GB "
+                          f"dominant {r.get('dominant')}", flush=True)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape_name, "mesh": tag,
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"  ERROR: {e!r}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2, default=str)
+            records.append(rec)
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable); default: all")
+    ap.add_argument("--shape", action="append", default=None,
+                    help="shape name (repeatable); default: all")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--skip-compile", action="store_true",
+                    help="lower only (debugging)")
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=["last_logit", "moe_local", "no_sp"],
+                    help="§Perf hillclimb switches (repeatable)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for result filenames (e.g. _opt1)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = args.arch or sorted(ARCHS)
+    shapes = args.shape or list(SHAPES)
+    recs = run_cells(archs, shapes, multi_pod=args.multi_pod,
+                     out_dir=args.out, grad_accum=args.grad_accum,
+                     skip_compile=args.skip_compile,
+                     opts=tuple(args.opt), tag_suffix=args.tag)
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs)
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

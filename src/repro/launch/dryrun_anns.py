@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""ANNS-at-scale dry-run: the paper's own workload on the production mesh.
+
+Lowers + compiles the sharded Jasper search step (shard-and-merge beam
+search, DESIGN.md §4) at PAPER scale — e.g. BigANN 100M rows over the
+(pod, data) axes with queries sharded over `model` — and records the same
+roofline terms as the LM cells. Three variants per dataset:
+
+    exact        full-precision beam search (paper "Jasper")
+    rabitq       estimated-distance beam search (paper "Jasper RaBitQ")
+    bruteforce   one matmul tile over all rows (roofline sanity anchor)
+
+Usage:
+    python -m repro.launch.dryrun_anns [--dataset bigann] [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ANNS_DATASETS
+from repro.core.beam_search import beam_search, make_exact_scorer
+from repro.core.rabitq import RaBitQCodes, RaBitQQuery
+from repro.core.vamana import VamanaGraph
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import TPU_V5E, roofline_terms
+from repro.roofline.hlo_analyzer import analyze_hlo
+
+DEGREE = 64          # paper: R = 64 everywhere
+BEAM = 64            # overridable via --beam (hillclimb)
+MAX_ITERS = 96       # overridable via --iters
+EXPAND = 1           # overridable via --expand (multi-expansion, §Perf #C)
+K = 10
+N_QUERIES = 16384    # large batch = the paper's occupancy story
+
+
+def _local_search_exact(vectors, vec_sqnorm, adjacency, n_valid, medoid,
+                        queries, *, row_axes, cap, k):
+    graph = VamanaGraph(adjacency=adjacency, n_valid=n_valid[0],
+                        medoid=medoid[0])
+    score = make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
+    res = beam_search(graph, score, queries.shape[0], beam_width=BEAM,
+                      max_iters=MAX_ITERS, fixed_trip=True,
+                      expand_per_iter=EXPAND)
+    return _merge(res, row_axes, cap, k, queries.shape[0])
+
+
+def _local_search_rabitq(codes, data_add, data_rescale, adjacency, n_valid,
+                         medoid, q_rot, query_add, query_sumq, *,
+                         row_axes, cap, k, bits=None, dims=None):
+    from repro.core.beam_search import make_rabitq_scorer
+    graph = VamanaGraph(adjacency=adjacency, n_valid=n_valid[0],
+                        medoid=medoid[0])
+    rq = RaBitQQuery(q_rot=q_rot, query_add=query_add, query_sumq=query_sumq)
+    if bits is None:
+        score = make_rabitq_scorer(
+            RaBitQCodes(codes=codes, data_add=data_add,
+                        data_rescale=data_rescale), rq)
+    else:
+        # PACKED codes (rows, D*bits/8): HBM reads shrink by 8/bits vs the
+        # unpacked uint8 path and 4*8/bits vs f32 exact — the unpack is
+        # cheap VPU shift/mask work fused after the gather (§Perf #C2)
+        cpb = 8 // bits
+        mask = jnp.uint8(2**bits - 1)
+
+        def score(ids):
+            in_range = (ids >= 0) & (ids < graph.n_valid)
+            safe = jnp.maximum(jnp.where(in_range, ids, 0), 0)
+            pk = codes[safe]                           # (Q, K, P) uint8
+            parts = [((pk >> (bits * s)) & mask) for s in range(cpb)]
+            u = jnp.stack(parts, axis=-1).reshape(
+                pk.shape[0], pk.shape[1], -1)[..., :dims].astype(jnp.float32)
+            dot = jnp.einsum("qkd,qd->qk", u, rq.q_rot)
+            est = (data_add[safe] + rq.query_add[:, None]
+                   + data_rescale[safe] * (dot - rq.query_sumq[:, None]))
+            return jnp.where(in_range, jnp.maximum(est, 0.0), jnp.inf)
+    res = beam_search(graph, score, q_rot.shape[0], beam_width=BEAM,
+                      max_iters=MAX_ITERS, fixed_trip=True,
+                      expand_per_iter=EXPAND)
+    return _merge(res, row_axes, cap, k, q_rot.shape[0])
+
+
+def _merge(res, row_axes, cap, k, n_q):
+    ids = res.frontier_ids[:, :k]
+    dists = res.frontier_dists[:, :k]
+    shard_idx = jnp.int32(0)
+    mult = 1
+    for ax in reversed(row_axes):
+        shard_idx = shard_idx + jax.lax.axis_index(ax) * mult
+        mult *= jax.lax.axis_size(ax)
+    gids = jnp.where(ids >= 0, ids + shard_idx * cap, -1)
+    for ax in row_axes:
+        gd = jax.lax.all_gather(dists, ax, axis=0)
+        gi = jax.lax.all_gather(gids, ax, axis=0)
+        gd = jnp.moveaxis(gd, 0, 1).reshape(n_q, -1)
+        gi = jnp.moveaxis(gi, 0, 1).reshape(n_q, -1)
+        neg, pos = jax.lax.top_k(-gd, k)
+        dists = -neg
+        gids = jnp.take_along_axis(gi, pos, axis=1)
+    return gids, dists
+
+
+def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
+                    n_queries: int = N_QUERIES) -> dict:
+    ds = ANNS_DATASETS[ds_name]
+    t0 = time.time()
+    row_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_shards = 1
+    for ax in row_axes:
+        n_shards *= mesh.shape[ax]
+    cap = -(-ds.full_n // n_shards)
+    rows = n_shards * cap
+    d = ds.dims + (1 if ds.metric == "mips" else 0)
+
+    f32 = jnp.float32
+    structs = {
+        "adjacency": jax.ShapeDtypeStruct((rows, DEGREE), jnp.int32),
+        "n_valid": jax.ShapeDtypeStruct((n_shards,), jnp.int32),
+        "medoid": jax.ShapeDtypeStruct((n_shards,), jnp.int32),
+    }
+    row_spec = P(row_axes, None)
+    sc_spec = P(row_axes)
+    q_spec = P("model", None)
+    q1_spec = P("model")
+
+    if variant in ("exact", "exact_bf16"):
+        vec_dt = jnp.bfloat16 if variant == "exact_bf16" else f32
+        structs |= {
+            "vectors": jax.ShapeDtypeStruct((rows, d), vec_dt),
+            "vec_sqnorm": jax.ShapeDtypeStruct((rows,), f32),
+            "queries": jax.ShapeDtypeStruct((n_queries, d), f32),
+        }
+        fn = jax.shard_map(
+            lambda v, sq, a, nv, m, q: _local_search_exact(
+                v, sq, a, nv, m, q, row_axes=row_axes, cap=cap, k=K),
+            mesh=mesh,
+            in_specs=(row_spec, sc_spec, row_spec, sc_spec, sc_spec, q_spec),
+            out_specs=(q_spec, q_spec), check_vma=False)
+        args = (structs["vectors"], structs["vec_sqnorm"],
+                structs["adjacency"], structs["n_valid"], structs["medoid"],
+                structs["queries"])
+        shardings = (NamedSharding(mesh, row_spec),
+                     NamedSharding(mesh, sc_spec),
+                     NamedSharding(mesh, row_spec),
+                     NamedSharding(mesh, sc_spec),
+                     NamedSharding(mesh, sc_spec),
+                     NamedSharding(mesh, q_spec))
+    elif variant in ("rabitq", "rabitq_packed"):
+        packed = variant == "rabitq_packed"
+        p_dim = (d * bits + 7) // 8 if packed else d
+        structs |= {
+            "codes": jax.ShapeDtypeStruct((rows, p_dim), jnp.uint8),
+            "data_add": jax.ShapeDtypeStruct((rows,), f32),
+            "data_rescale": jax.ShapeDtypeStruct((rows,), f32),
+            "q_rot": jax.ShapeDtypeStruct((n_queries, d), f32),
+            "query_add": jax.ShapeDtypeStruct((n_queries,), f32),
+            "query_sumq": jax.ShapeDtypeStruct((n_queries,), f32),
+        }
+        fn = jax.shard_map(
+            lambda c, da, dr, a, nv, m, qr, qa, qs: _local_search_rabitq(
+                c, da, dr, a, nv, m, qr, qa, qs,
+                row_axes=row_axes, cap=cap, k=K,
+                bits=bits if packed else None, dims=d),
+            mesh=mesh,
+            in_specs=(row_spec, sc_spec, sc_spec, row_spec, sc_spec, sc_spec,
+                      q_spec, q1_spec, q1_spec),
+            out_specs=(q_spec, q_spec), check_vma=False)
+        args = (structs["codes"], structs["data_add"],
+                structs["data_rescale"], structs["adjacency"],
+                structs["n_valid"], structs["medoid"], structs["q_rot"],
+                structs["query_add"], structs["query_sumq"])
+        shardings = tuple(NamedSharding(mesh, s) for s in (
+            row_spec, sc_spec, sc_spec, row_spec, sc_spec, sc_spec,
+            q_spec, q1_spec, q1_spec))
+    elif variant == "bruteforce":
+        structs |= {
+            "vectors": jax.ShapeDtypeStruct((rows, d), f32),
+            "vec_sqnorm": jax.ShapeDtypeStruct((rows,), f32),
+            "queries": jax.ShapeDtypeStruct((n_queries, d), f32),
+        }
+
+        def bf(v, sq, nv, q):
+            qs = jnp.sum(q * q, axis=-1)
+            dist = qs[:, None] - 2.0 * (q @ v.T) + sq[None, :]
+            neg, ids = jax.lax.top_k(-dist, K)
+            gids, gdists = ids.astype(jnp.int32), -neg
+            for ax in row_axes:
+                gd = jax.lax.all_gather(gdists, ax, axis=0)
+                gi = jax.lax.all_gather(gids, ax, axis=0)
+                gd = jnp.moveaxis(gd, 0, 1).reshape(q.shape[0], -1)
+                gi = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], -1)
+                neg2, pos = jax.lax.top_k(-gd, K)
+                gdists = -neg2
+                gids = jnp.take_along_axis(gi, pos, axis=1)
+            return gids, gdists
+        fn = jax.shard_map(
+            bf, mesh=mesh,
+            in_specs=(row_spec, sc_spec, sc_spec, q_spec),
+            out_specs=(q_spec, q_spec), check_vma=False)
+        args = (structs["vectors"], structs["vec_sqnorm"],
+                structs["n_valid"], structs["queries"])
+        shardings = tuple(NamedSharding(mesh, s) for s in (
+            row_spec, sc_spec, sc_spec, q_spec))
+    else:
+        raise ValueError(variant)
+
+    jitted = jax.jit(fn, in_shardings=shardings)
+    lowered = jitted.lower(*args)
+    rec = {
+        "dataset": ds_name, "variant": variant,
+        "rows_total": ds.full_n, "dims": d, "n_queries": n_queries,
+        "beam": BEAM, "max_iters": MAX_ITERS, "expand": EXPAND, "k": K,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "lower_s": round(time.time() - t0, 2),
+    }
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    mem = compiled.memory_analysis()
+    rec["memory_per_device_gb"] = round(
+        (mem.argument_size_in_bytes + mem.output_size_in_bytes
+         + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3)
+    ana = analyze_hlo(compiled.as_text())
+    rec["cost_per_device"] = {"flops": ana["flops"],
+                              "bytes_accessed": ana["bytes_accessed"]}
+    rec["collectives_per_device"] = ana["collectives"]
+    rec["roofline"] = roofline_terms(
+        ana["flops"], ana["bytes_accessed"],
+        ana["collectives"]["total"]["bytes"], 1, TPU_V5E)
+    # paper's headline metric: queries/sec at the memory roof
+    bound = rec["roofline"]["bound_s"]
+    rec["queries_per_sec_at_roof"] = (n_queries / bound) if bound else None
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", action="append", default=None)
+    ap.add_argument("--variant", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--beam", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--expand", type=int, default=None)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun_anns")
+    args = ap.parse_args()
+
+    global BEAM, MAX_ITERS, EXPAND
+    if args.beam:
+        BEAM = args.beam
+    if args.iters:
+        MAX_ITERS = args.iters
+    if args.expand:
+        EXPAND = args.expand
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    tag = ("multipod" if args.multi_pod else "singlepod") + args.tag
+    datasets = args.dataset or list(ANNS_DATASETS)
+    variants = args.variant or ["exact", "rabitq", "bruteforce"]
+    # extra variants: exact_bf16, rabitq_packed (--bits)
+    os.makedirs(args.out, exist_ok=True)
+    n_err = 0
+    for ds in datasets:
+        for variant in variants:
+            cell = f"{ds}__{variant}__{tag}"
+            print(f"[cell] {cell} ...", flush=True)
+            try:
+                rec = lower_anns_cell(ds, variant, mesh, bits=args.bits)
+                rec["status"] = "ok"
+                r = rec["roofline"]
+                print(f"  ok: compile {rec['compile_s']}s "
+                      f"mem {rec['memory_per_device_gb']}GB "
+                      f"dominant {r['dominant']} "
+                      f"qps@roof {rec['queries_per_sec_at_roof']:.3e}",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                rec = {"dataset": ds, "variant": variant, "status": "error",
+                       "error": repr(e), "traceback": traceback.format_exc()}
+                print(f"  ERROR: {e!r}", flush=True)
+                n_err += 1
+            with open(os.path.join(args.out, cell + ".json"), "w") as f:
+                json.dump(rec, f, indent=2, default=str)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Mesh shardings for params / optimizer / batches / decode state.
+
+Single source of truth: the logical-axis rule table in models/sharding_ctx
+plus the per-model spec trees (models.model.param_specs / state_specs).
+Everything here is mechanical translation logical-name -> NamedSharding.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import param_specs, state_specs
+from repro.models.sharding_ctx import DEFAULT_RULES
+from repro.training.train_loop import train_state_specs
+
+PyTree = Any
+
+
+def resolve_rules(mesh: Mesh, overrides: dict | None = None) -> dict:
+    """DEFAULT_RULES filtered to the mesh's axes (+ per-arch overrides)."""
+    names = set(mesh.axis_names)
+    merged = dict(DEFAULT_RULES)
+    if overrides:
+        merged.update(overrides)
+
+    def _filter(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in names else None
+        kept = tuple(a for a in v if a in names)
+        return kept if kept else None
+
+    return {k: _filter(v) for k, v in merged.items()}
+
+
+def _to_named(mesh: Mesh, rules: dict, spec_tree: PyTree) -> PyTree:
+    def one(spec):
+        return NamedSharding(
+            mesh, P(*[rules.get(n) if n is not None else None for n in spec]))
+    # plain tuples are logical specs; NamedTuples (TrainState) are containers
+    return jax.tree_util.tree_map(
+        one, spec_tree, is_leaf=lambda s: type(s) is tuple)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig,
+                    overrides: dict | None = None) -> PyTree:
+    rules = resolve_rules(mesh, overrides)
+    return _to_named(mesh, rules, param_specs(cfg))
+
+
+def train_state_shardings(mesh: Mesh, cfg: ModelConfig,
+                          overrides: dict | None = None) -> PyTree:
+    rules = resolve_rules(mesh, overrides)
+    ts = train_state_specs(param_specs(cfg))
+    return _to_named(mesh, rules, ts)
+
+
+def decode_state_shardings(mesh: Mesh, cfg: ModelConfig,
+                           overrides: dict | None = None) -> PyTree:
+    rules = resolve_rules(mesh, overrides)
+    if ("model" in mesh.axis_names
+            and cfg.num_kv_heads % mesh.shape["model"] != 0
+            and (overrides is None or "kv_seq" not in overrides)):
+        # split-KV decode: shard the cache SEQUENCE over the TP axis when
+        # kv heads can't tile it (starcoder2 kv=4 / chameleon kv=8 on a
+        # 16-wide axis). XLA partitions the softmax over the sharded seq
+        # dim with a small all-reduce of partial (max, sum, weighted-V).
+        rules = {**rules, "kv_heads": None, "kv_seq": "model"}
+    return _to_named(mesh, rules, state_specs(cfg))
+
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig,
+                    overrides: dict | None = None) -> PyTree:
+    """tokens/labels (B, S) or frames (B, S, D): batch over (pod, data)."""
+    rules = resolve_rules(mesh, overrides)
+    b = rules.get("batch")
+    tok = NamedSharding(mesh, P(b, None))
+    if cfg.frontend == "frames":
+        return {"frames": NamedSharding(mesh, P(b, None, None)),
+                "labels": tok}
+    return {"tokens": tok, "labels": tok}
+
+
+def logits_sharding(mesh: Mesh, overrides: dict | None = None):
+    rules = resolve_rules(mesh, overrides)
+    return NamedSharding(
+        mesh, P(rules.get("batch"), None, rules.get("act_vocab")))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def sanitize_shardings(shard_tree: PyTree, shape_tree: PyTree,
+                       mesh: Mesh) -> PyTree:
+    """Drop sharding axes whose shard count doesn't divide the dimension
+    (e.g. 4 kv heads on a 16-wide model axis -> replicate that dim).
+
+    shape_tree: matching pytree of ShapeDtypeStructs / arrays.
+    """
+    def one(sh: NamedSharding, shape) -> NamedSharding:
+        dims = getattr(shape, "shape", shape)
+        spec = list(sh.spec) + [None] * (len(dims) - len(sh.spec))
+        out = []
+        for d, v in zip(dims, spec):
+            if v is None:
+                out.append(None)
+                continue
+            axes = (v,) if isinstance(v, str) else tuple(v)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            out.append(v if d % n == 0 else None)
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree_util.tree_map(
+        one, shard_tree, shape_tree,
+        is_leaf=lambda s: isinstance(s, NamedSharding))

@@ -1,0 +1,148 @@
+"""Fault-tolerant training launcher.
+
+    python -m repro.launch.train --arch stablelm-1.6b --steps 200 \
+        --batch 8 --seq 256 --reduced --ckpt-dir /tmp/ckpt --resume
+
+Fault tolerance (DESIGN.md §7):
+  * checkpoints every --ckpt-every steps, atomic, step-tagged;
+  * --resume restarts from the newest complete checkpoint — because the
+    data pipeline is a pure function of (seed, step), replay is exact;
+  * the step loop retries once from the last checkpoint on transient
+    failure (the node-failure path on a real cluster: the scheduler
+    restarts the binary, which lands in the same code path);
+  * restoring onto a different mesh shape reshards automatically
+    (elastic scaling) since checkpoints are mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.synthetic import make_lm_batch
+from repro.launch import shardings as shd
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models.model import init_params, param_count
+from repro.models.sharding_ctx import sharding_rules
+from repro.training.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import TrainState, init_train_state, make_train_step
+
+
+def build(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    schedule = "wsd" if args.arch.startswith("minicpm") else "cosine"
+    opt = OptimizerConfig(peak_lr=args.lr, schedule=schedule,
+                          warmup_steps=min(100, args.steps // 10 + 1),
+                          total_steps=args.steps)
+    step_fn = make_train_step(cfg, opt, grad_accum=args.grad_accum)
+    return cfg, opt, step_fn
+
+
+def run(args) -> dict:
+    cfg, opt, step_fn = build(args)
+    mesh = None
+    if args.mesh == "debug":
+        mesh = make_debug_mesh()
+    elif args.mesh == "production":
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    key = jax.random.PRNGKey(args.seed)
+    if mesh is not None:
+        p_shd = shd.param_shardings(mesh, cfg)
+        with mesh, sharding_rules(mesh):
+            params = jax.jit(lambda k: init_params(cfg, k),
+                             out_shardings=None)(key)
+            state = init_train_state(cfg, params)
+            s_abs = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            s_shd = shd.sanitize_shardings(
+                shd.train_state_shardings(mesh, cfg), s_abs, mesh)
+            state = jax.device_put(state, s_shd)
+            jit_step = jax.jit(step_fn, in_shardings=(s_shd, None),
+                               out_shardings=(s_shd, None), donate_argnums=0)
+    else:
+        params = init_params(cfg, key)
+        state = init_train_state(cfg, params)
+        jit_step = jax.jit(step_fn, donate_argnums=0)
+        s_shd = None
+
+    print(f"arch={cfg.name} params={param_count(state.params)/1e6:.2f}M "
+          f"mesh={args.mesh}", flush=True)
+
+    start = 0
+    if args.resume and args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            state = restore_checkpoint(args.ckpt_dir, last, state, s_shd)
+            start = last
+            print(f"resumed from step {last}", flush=True)
+
+    metrics = {}
+    t0 = time.time()
+    step = start
+    retried = False
+    while step < args.steps:
+        try:
+            batch = make_lm_batch(cfg, args.batch, args.seq, args.seed, step)
+            if mesh is not None:
+                with mesh, sharding_rules(mesh):
+                    state, metrics = jit_step(state, batch)
+            else:
+                state, metrics = jit_step(state, batch)
+            step += 1
+            if step % args.log_every == 0 or step == args.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                dt = (time.time() - t0) / max(step - start, 1)
+                print(f"step {step:5d} loss {m['loss']:.4f} "
+                      f"ce {m['ce']:.4f} lr {m['lr']:.2e} "
+                      f"gnorm {m['grad_norm']:.2f} ({dt:.2f}s/step)",
+                      flush=True)
+            if args.ckpt_dir and step % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step, state)
+        except (RuntimeError, ValueError):
+            # transient-failure path: reload last checkpoint once
+            if retried or not args.ckpt_dir:
+                raise
+            retried = True
+            last = latest_step(args.ckpt_dir)
+            if last is None:
+                raise
+            print(f"step failed; retrying from checkpoint {last}", flush=True)
+            state = restore_checkpoint(args.ckpt_dir, last, state, s_shd)
+            step = last
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, step, state)
+    return {k: float(v) for k, v in metrics.items()} | {"steps": step}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "debug", "production"],
+                    default="none")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

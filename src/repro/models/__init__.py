@@ -1,0 +1,18 @@
+"""LM model substrate: raw-JAX (pytree params + pure fns) for the 10 archs."""
+
+from repro.models.model import (
+    init_params,
+    param_specs,
+    state_specs,
+    forward,
+    loss_fn,
+    init_decode_state,
+    decode_step,
+    prefill,
+    param_count,
+)
+
+__all__ = [
+    "init_params", "param_specs", "state_specs", "forward", "loss_fn",
+    "init_decode_state", "decode_step", "prefill", "param_count",
+]

@@ -1,0 +1,198 @@
+"""GQA attention: blockwise (flash-style) training/prefill + cached decode.
+
+Memory discipline: full S x S score materialization is impossible at the
+assignment shapes (prefill_32k would need TBs), so the train/prefill path is
+a pure-JAX blockwise attention — lax.scan over KV chunks per Q chunk with an
+online-softmax running (max, denom, acc). O(S * chunk) memory, autodiff
+works through it, and XLA overlaps the chunk DMAs. This is the jnp analogue
+of a Pallas flash kernel and lowers cleanly on both CPU (smoke tests) and
+the 512-device dry-run mesh.
+
+GQA: q heads H = G * Hk grouped as (B, S, Hk, G, Dh) so every einsum
+broadcasts over the kv head axis — kv heads shard over the `model` mesh axis
+(TP) without replication.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+from repro.models.sharding_ctx import constrain, shard_count
+
+Array = jax.Array
+
+_NEG = jnp.float32(-1e30)
+
+
+def attention_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, hk, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_init(k1, (d, h * dh)),
+        "wk": dense_init(k2, (d, hk * dh)),
+        "wv": dense_init(k3, (d, hk * dh)),
+        "wo": dense_init(k4, (h * dh, d)),
+    }
+
+
+def attention_spec(cfg: ModelConfig) -> dict:
+    return {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+            "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+
+
+def _project_qkv(params, x: Array, cfg: ModelConfig, positions: Array):
+    b, s, _ = x.shape
+    dt = x.dtype
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, h, dh)
+    k = (x @ params["wk"].astype(dt)).reshape(b, s, hk, dh)
+    v = (x @ params["wv"].astype(dt)).reshape(b, s, hk, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if hk % max(shard_count("act_kv"), 1) == 0:
+        # TP over (kv) heads — the default
+        q = constrain(q, ("batch", "seq", "act_heads", None))
+        k = constrain(k, ("batch", "seq", "act_kv", None))
+        v = constrain(v, ("batch", "seq", "act_kv", None))
+    else:
+        # context parallel: heads can't tile the axis (36 on 16) -> shard
+        # the sequence; XLA all-gathers K/V inside attention (§Perf #A2)
+        q = constrain(q, ("batch", "attn_seq", None, None))
+        k = constrain(k, ("batch", "attn_seq", None, None))
+        v = constrain(v, ("batch", "attn_seq", None, None))
+    return q, k, v
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                        q_offset: Array | int = 0, window: int = 0,
+                        q_chunk: int = 512, kv_chunk: int = 1024) -> Array:
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, Hk, Dh) -> (B, Sq, H, Dh).
+
+    q_offset: absolute position of q[0] relative to k[0] (prefill = 0).
+    window > 0 limits attention to the last `window` key positions.
+    """
+    b, sq, h, dh = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+
+    # NOTE (§Perf #A3, refuted): computing the KV loop on bf16 tiles with
+    # f32 row-stats measured WORSE under the fusion-level HLO accounting
+    # (+28% bytes from convert/copy fusions) — kept in f32; the real fix
+    # for score-block traffic is the Pallas flash kernel (§Perf #A4,
+    # kernels/flash_attention), which keeps blocks in VMEM entirely.
+    qg = q.reshape(b, nq, q_chunk, hk, g, dh).astype(jnp.float32)
+    kc = k.reshape(b, nkv, kv_chunk, hk, dh).astype(jnp.float32)
+    vc = v.reshape(b, nkv, kv_chunk, hk, dh).astype(jnp.float32)
+
+    q_pos = (jnp.arange(sq).reshape(nq, q_chunk) + q_offset)          # abs pos
+    k_pos = jnp.arange(skv).reshape(nkv, kv_chunk)
+
+    def one_q_chunk(carry, qi):
+        q_blk = qg[:, qi]                                  # (B, Tq, Hk, G, Dh)
+        qp = q_pos[qi]                                     # (Tq,)
+
+        def kv_body(st, ki):
+            m, l, acc = st
+            k_blk, v_blk = kc[:, ki], vc[:, ki]
+            kp = k_pos[ki]
+            s_blk = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            mask = jnp.ones((q_blk.shape[1], k_blk.shape[1]), bool)
+            if causal:
+                mask &= kp[None, :] <= qp[:, None]
+            if window > 0:
+                mask &= kp[None, :] > (qp[:, None] - window)
+            s_blk = jnp.where(mask[None, None, None], s_blk, _NEG)
+            new_m = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+            p = jnp.exp(s_blk - new_m[..., None])
+            corr = jnp.exp(m - new_m)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = (acc * corr[..., None]
+                   + jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk))
+            return (new_m, l, acc), None
+
+        m0 = jnp.full((b, hk, g, q_blk.shape[1]), _NEG, jnp.float32)
+        l0 = jnp.zeros_like(m0)
+        a0 = jnp.zeros((b, hk, g, q_blk.shape[1], dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,Hk,G,Tq,Dh)
+        out = out.transpose(0, 3, 1, 2, 4)                 # (B,Tq,Hk,G,Dh)
+        return carry, out
+
+    _, outs = jax.lax.scan(one_q_chunk, 0, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)   # (B,Sq,H,Dh)
+    return out.astype(q.dtype)
+
+
+def attention(params, x: Array, cfg: ModelConfig, positions: Array,
+              return_kv: bool = False):
+    """Full-sequence attention sublayer (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    if cfg.use_flash_kernel:
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(
+            q, k, v, causal=cfg.causal and not cfg.is_encoder,
+            window=cfg.sliding_window,
+            block_q=min(cfg.attn_chunk_q, 256), block_kv=cfg.attn_chunk_kv)
+    else:
+        out = blockwise_attention(
+            q, k, v, causal=cfg.causal and not cfg.is_encoder,
+            window=cfg.sliding_window,
+            q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    out = out @ params["wo"].astype(x.dtype)
+    out = constrain(out, ("batch", "res_seq", "act_embed"))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def decode_attention(params, x: Array, cfg: ModelConfig, k_cache: Array,
+                     v_cache: Array, pos: Array, *, window: int = 0
+                     ) -> tuple[Array, Array, Array]:
+    """Single-token decode with a KV cache.
+
+    x: (B, 1, D); k_cache/v_cache: (B, S_max, Hk, Dh); pos: scalar int32 —
+    number of tokens already in the cache (= this token's position).
+    For window caches, S_max == window and writes wrap (ring buffer).
+    Returns (out (B, 1, D), k_cache', v_cache').
+    """
+    b = x.shape[0]
+    h, hk, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // hk
+    s_max = k_cache.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+
+    slot = pos % s_max if window > 0 else pos
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+
+    qg = q.reshape(b, 1, hk, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg,
+                        k_cache.astype(jnp.float32)) * (dh ** -0.5)
+    s_idx = jnp.arange(s_max)
+    if window > 0:
+        # ring buffer: slots hold the last min(pos+1, window) positions, so
+        # every slot written so far is within the window by construction
+        written = jnp.minimum(pos + 1, s_max)
+        valid = s_idx < jnp.maximum(written, 1)
+    else:
+        valid = s_idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, h * dh).astype(x.dtype)
+    out = out @ params["wo"].astype(x.dtype)
+    return constrain(out, ("batch", None, "act_embed")), k_cache, v_cache

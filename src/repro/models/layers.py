@@ -1,0 +1,122 @@
+"""Building-block layers (raw JAX: init fns return pytrees, apply fns pure).
+
+Conventions:
+  * params are stored float32; compute casts to cfg.dtype (bf16 default);
+  * every init fn takes (key, cfg) and returns a dict pytree;
+  * matching *_spec fns return the same pytree shape holding LOGICAL
+    PartitionSpec name tuples — launch/shardings.py maps them to the mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding_ctx import constrain
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0) -> Array:
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std)
+
+
+# ------------------------------------------------------------------ RMSNorm
+def rmsnorm_init(cfg: ModelConfig, dim: int | None = None) -> dict:
+    return {"scale": jnp.ones((dim or cfg.d_model,), jnp.float32)}
+
+
+def rmsnorm_spec(cfg: ModelConfig, dim_name: str = "embed") -> dict:
+    return {"scale": (dim_name,)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    return inv  # (head_dim/2,)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, Dh), positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (...,S,1,Dh/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- SwiGLU MLP
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (cfg.d_model, d_ff)),
+        "w_up": dense_init(k2, (cfg.d_model, d_ff)),
+        "w_down": dense_init(k3, (d_ff, cfg.d_model)),
+    }
+
+
+def mlp_spec(cfg: ModelConfig) -> dict:
+    return {
+        "w_gate": ("embed", "ff"),
+        "w_up": ("embed", "ff"),
+        "w_down": ("ff", "embed"),
+    }
+
+
+def mlp(params: dict, x: Array, cfg: ModelConfig) -> Array:
+    dt = _dtype(cfg)
+    h = jax.nn.silu(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+    h = constrain(h, ("batch", "seq", "act_ff"))
+    out = h @ params["w_down"].astype(dt)
+    return constrain(out, ("batch", "res_seq", "act_embed"))
+
+
+# -------------------------------------------------------------- Embedding
+def embedding_init(key, cfg: ModelConfig) -> dict:
+    return {"table": dense_init(key, (cfg.padded_vocab, cfg.d_model), in_axis=1)}
+
+
+def embedding_spec(cfg: ModelConfig) -> dict:
+    return {"table": ("vocab", "embed")}
+
+
+def embed(params: dict, tokens: Array, cfg: ModelConfig) -> Array:
+    out = params["table"].astype(_dtype(cfg))[tokens]
+    # residual stream: sequence-parallel over the TP axis (see res_seq rule)
+    return constrain(out, ("batch", "res_seq", "act_embed"))
+
+
+def unembed_init(key, cfg: ModelConfig) -> dict:
+    return {"w_out": dense_init(key, (cfg.d_model, cfg.padded_vocab))}
+
+
+def unembed_spec(cfg: ModelConfig) -> dict:
+    return {"w_out": ("embed", "vocab")}
+
+
+def unembed(params: dict, x: Array, cfg: ModelConfig, embed_params=None) -> Array:
+    if cfg.tie_embeddings and embed_params is not None:
+        w = embed_params["table"].astype(_dtype(cfg)).T
+    else:
+        w = params["w_out"].astype(_dtype(cfg))
+    logits = x @ w
+    return constrain(logits, ("batch", "seq", "act_vocab"))

@@ -1,0 +1,457 @@
+"""Model assembly: init / forward / loss / decode for all 10 architectures.
+
+One dispatcher per family, all sharing the same conventions:
+  * layer params are STACKED along a leading scan axis and applied with
+    `lax.scan` — keeps HLO size and compile time O(1) in depth (MaxText
+    style), which is what makes 512-device dry-runs of 48-layer models
+    tractable;
+  * activation checkpointing (`cfg.remat`) wraps the scan body;
+  * every apply fn is pure; decode threads an explicit state pytree
+    (KV caches for attention families, recurrent states for ssm/hybrid).
+
+Families:
+  dense/vlm/audio  pre-norm GQA attention + SwiGLU MLP
+  moe              pre-norm GQA attention + top-k routed experts
+  ssm (xlstm)      alternating mLSTM / sLSTM blocks (scanned in pairs)
+  hybrid (zamba2)  groups of Mamba2 blocks + ONE SHARED attention block
+                   applied between groups (parameter sharing = zamba trick)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    attention,
+    attention_init,
+    attention_spec,
+    decode_attention,
+)
+from repro.models.layers import (
+    dense_init,
+    embed,
+    embedding_init,
+    embedding_spec,
+    mlp,
+    mlp_init,
+    mlp_spec,
+    rmsnorm,
+    rmsnorm_init,
+    rmsnorm_spec,
+    unembed,
+    unembed_init,
+    unembed_spec,
+)
+from repro.models.moe import moe_init, moe_spec, moe_with_aux
+from repro.models.sharding_ctx import constrain
+
+Array = jax.Array
+PyTree = Any
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# =========================================================== init helpers
+def _stack(fn, key, n: int) -> PyTree:
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _prepend_spec(tree: PyTree, axis_name=None) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: (axis_name,) + tuple(s), tree,
+        is_leaf=lambda s: isinstance(s, tuple))
+
+
+# ================================================================== init
+def init_params(cfg: ModelConfig, key: Array) -> PyTree:
+    keys = jax.random.split(key, 8)
+    params: dict = {"final_norm": rmsnorm_init(cfg)}
+
+    if cfg.frontend == "frames":
+        params["frontend"] = {"proj": dense_init(keys[0], (cfg.d_model,
+                                                           cfg.d_model))}
+    else:
+        params["embed"] = embedding_init(keys[0], cfg)
+    if not cfg.tie_embeddings:
+        params["unembed"] = unembed_init(keys[1], cfg)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def one_block(k):
+            ks = jax.random.split(k, 2)
+            blk = {"ln1": rmsnorm_init(cfg), "ln2": rmsnorm_init(cfg),
+                   "attn": attention_init(ks[0], cfg)}
+            if fam == "moe":
+                blk["moe"] = moe_init(ks[1], cfg)
+            else:
+                blk["mlp"] = mlp_init(ks[1], cfg)
+            return blk
+        params["blocks"] = _stack(one_block, keys[2], cfg.num_layers)
+    elif fam == "ssm":                       # xlstm: (L/2) x (mLSTM, sLSTM)
+        def one_pair(k):
+            ks = jax.random.split(k, 2)
+            return {"ln1": rmsnorm_init(cfg),
+                    "mlstm": ssm_mod.mlstm_init(ks[0], cfg),
+                    "ln2": rmsnorm_init(cfg),
+                    "slstm": ssm_mod.slstm_init(ks[1], cfg)}
+        params["pairs"] = _stack(one_pair, keys[2], cfg.num_layers // 2)
+    elif fam == "hybrid":                    # zamba2
+        groups = cfg.num_layers // cfg.attn_every
+
+        def one_mamba(k):
+            return {"ln": rmsnorm_init(cfg),
+                    "mamba": ssm_mod.mamba2_init(k, cfg)}
+
+        def one_group(k):
+            return _stack(one_mamba, k, cfg.attn_every)
+        params["mamba_groups"] = _stack(one_group, keys[2], groups)
+        params["shared_attn"] = {"ln": rmsnorm_init(cfg),
+                                 "attn": attention_init(keys[3], cfg)}
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    """Logical-axis PartitionSpec names mirroring init_params exactly."""
+    specs: dict = {"final_norm": rmsnorm_spec(cfg)}
+    if cfg.frontend == "frames":
+        specs["frontend"] = {"proj": ("embed", None)}
+    else:
+        specs["embed"] = embedding_spec(cfg)
+    if not cfg.tie_embeddings:
+        specs["unembed"] = unembed_spec(cfg)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe"):
+        blk = {"ln1": rmsnorm_spec(cfg), "ln2": rmsnorm_spec(cfg),
+               "attn": attention_spec(cfg)}
+        blk["moe" if fam == "moe" else "mlp"] = (
+            moe_spec(cfg) if fam == "moe" else mlp_spec(cfg))
+        specs["blocks"] = _prepend_spec(blk)
+    elif fam == "ssm":
+        pair = {"ln1": rmsnorm_spec(cfg),
+                "mlstm": ssm_mod.mlstm_spec(cfg),
+                "ln2": rmsnorm_spec(cfg),
+                "slstm": ssm_mod.slstm_spec(cfg)}
+        specs["pairs"] = _prepend_spec(pair)
+    elif fam == "hybrid":
+        mam = {"ln": rmsnorm_spec(cfg), "mamba": ssm_mod.mamba2_spec(cfg)}
+        specs["mamba_groups"] = _prepend_spec(_prepend_spec(mam))
+        specs["shared_attn"] = {"ln": rmsnorm_spec(cfg),
+                                "attn": attention_spec(cfg)}
+    return specs
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ================================================================ forward
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> Array:
+    if cfg.frontend == "frames":
+        x = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        x = x @ params["frontend"]["proj"].astype(x.dtype)
+        return constrain(x, ("batch", "res_seq", "act_embed"))
+    return embed(params["embed"], batch["tokens"], cfg)
+
+
+def _logits(params, cfg: ModelConfig, x: Array) -> Array:
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params.get("unembed"), x, cfg,
+                   embed_params=params.get("embed"))
+
+
+def forward(params: PyTree, cfg: ModelConfig, batch: dict,
+            with_aux: bool = False, return_hidden: bool = False):
+    """Full-sequence forward. batch: {"tokens": (B, S)} or
+    {"frames": (B, S, D)}. Returns logits (B, S, V) [, aux_loss].
+    return_hidden=True returns the final-norm hidden states instead of
+    logits (retrieval embeddings for serving/rag.py)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    eps = cfg.norm_eps
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "audio", "moe"):
+        def block(x, bp):
+            h = attention(bp["attn"], rmsnorm(bp["ln1"], x, eps), cfg,
+                          positions)
+            x = x + h
+            if fam == "moe":
+                h, aux = moe_with_aux(bp["moe"], rmsnorm(bp["ln2"], x, eps),
+                                      cfg)
+            else:
+                h = mlp(bp["mlp"], rmsnorm(bp["ln2"], x, eps), cfg)
+                aux = jnp.float32(0)
+            return x + h, aux
+        x, auxs = jax.lax.scan(_maybe_remat(block, cfg), x, params["blocks"])
+        aux = jnp.sum(auxs)
+    elif fam == "ssm":
+        def pair(x, bp):
+            x = x + ssm_mod.mlstm_forward(bp["mlstm"],
+                                          rmsnorm(bp["ln1"], x, eps), cfg)
+            x = x + ssm_mod.slstm_forward(bp["slstm"],
+                                          rmsnorm(bp["ln2"], x, eps), cfg)
+            return x, jnp.float32(0)
+        x, _ = jax.lax.scan(_maybe_remat(pair, cfg), x, params["pairs"])
+        aux = jnp.float32(0)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, gp):
+            def inner(x, bp):
+                return x + ssm_mod.mamba2_forward(
+                    bp["mamba"], rmsnorm(bp["ln"], x, eps), cfg), None
+            x, _ = jax.lax.scan(inner, x, gp)
+            h = attention(shared["attn"], rmsnorm(shared["ln"], x, eps), cfg,
+                          positions)
+            return x + h, jnp.float32(0)
+        x, _ = jax.lax.scan(_maybe_remat(group, cfg), x,
+                            params["mamba_groups"])
+        aux = jnp.float32(0)
+    else:
+        raise ValueError(fam)
+
+    if return_hidden:
+        hidden = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return (hidden, aux) if with_aux else hidden
+    logits = _logits(params, cfg, x)
+    return (logits, aux) if with_aux else logits
+
+
+def loss_fn(params: PyTree, cfg: ModelConfig, batch: dict
+            ) -> tuple[Array, dict]:
+    """Mean next-token (or frame-label) CE + MoE aux. labels: (B, S) int32,
+    negatives are masked out."""
+    logits, aux = forward(params, cfg, batch, with_aux=True)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # mask vocab padding columns
+    v = cfg.vocab_size
+    pad_mask = jnp.arange(logits.shape[-1]) < v
+    logits = jnp.where(pad_mask, logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(ce * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+    total = loss + AUX_LOSS_WEIGHT * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ================================================================= decode
+def _kv_shape(cfg: ModelConfig, batch: int, max_len: int, n_stack: int):
+    window = cfg.sliding_window
+    s = min(max_len, window) if window else max_len
+    return (n_stack, batch, s, cfg.num_kv_heads, cfg.head_dim)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Allocate the family-appropriate decode state."""
+    fam = cfg.family
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.is_encoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode state")
+    if fam in ("dense", "vlm", "moe"):
+        shape = _kv_shape(cfg, batch, max_len, cfg.num_layers)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+                "pos": jnp.int32(0)}
+    if fam == "ssm":
+        n = cfg.num_layers // 2
+        ml = jax.vmap(lambda _: ssm_mod.mlstm_state_init(cfg, batch))(
+            jnp.arange(n))
+        sl = jax.vmap(lambda _: ssm_mod.slstm_state_init(cfg, batch))(
+            jnp.arange(n))
+        return {"mlstm": ml, "slstm": sl, "pos": jnp.int32(0)}
+    if fam == "hybrid":
+        groups = cfg.num_layers // cfg.attn_every
+        mam = jax.vmap(lambda _: jax.vmap(
+            lambda __: ssm_mod.mamba2_state_init(cfg, batch))(
+                jnp.arange(cfg.attn_every)))(jnp.arange(groups))
+        shape = _kv_shape(cfg, batch, max_len, groups)
+        return {"mamba": mam, "k": jnp.zeros(shape, dt),
+                "v": jnp.zeros(shape, dt), "pos": jnp.int32(0)}
+    raise ValueError(fam)
+
+
+def state_specs(cfg: ModelConfig) -> dict:
+    """Logical sharding names for the decode state (mirrors init).
+
+    The cache sequence axis carries the logical name "kv_seq": on archs
+    whose kv-head count does not divide the model axis (starcoder2 kv=4,
+    chameleon kv=8 on a 16-wide axis), the launcher remaps
+    kv_heads->None / kv_seq->model — split-KV (flash-decoding style)
+    context parallelism, where each TP rank holds a sequence slice of the
+    cache and XLA combines the partial softmax terms with a small
+    all-reduce."""
+    fam = cfg.family
+    kv = (None, "batch", "kv_seq", "kv_heads", None)
+    if fam in ("dense", "vlm", "moe"):
+        return {"k": kv, "v": kv, "pos": ()}
+    if fam == "ssm":
+        ml = {"c": (None, "batch", "heads", None, None),
+              "n": (None, "batch", "heads", None),
+              "m": (None, "batch", "heads"),
+              "conv": (None, "batch", None, "ssm_inner")}
+        sl = {k: (None, "batch", None) for k in ("c", "n", "h", "m")}
+        return {"mlstm": ml, "slstm": sl, "pos": ()}
+    if fam == "hybrid":
+        mam = {"h": (None, None, "batch", "heads", None, None),
+               "conv": (None, None, "batch", None, "ssm_inner")}
+        return {"mamba": mam, "k": kv, "v": kv, "pos": ()}
+    raise ValueError(fam)
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, state: dict,
+                tokens: Array) -> tuple[Array, dict]:
+    """One token for the whole batch. tokens: (B, 1) int32. Returns
+    (logits (B, 1, V), new state)."""
+    x = _embed_inputs(params, cfg, {"tokens": tokens})
+    pos = state["pos"]
+    eps = cfg.norm_eps
+    fam = cfg.family
+
+    if fam in ("dense", "vlm", "moe"):
+        def block(x, xs):
+            bp, ck, cv = xs
+            h, ck, cv = decode_attention(
+                bp["attn"], rmsnorm(bp["ln1"], x, eps), cfg, ck, cv, pos,
+                window=cfg.sliding_window)
+            x = x + h
+            if fam == "moe":
+                h, _ = moe_with_aux(bp["moe"], rmsnorm(bp["ln2"], x, eps), cfg)
+            else:
+                h = mlp(bp["mlp"], rmsnorm(bp["ln2"], x, eps), cfg)
+            return x + h, (ck, cv)
+        x, (new_k, new_v) = jax.lax.scan(
+            block, x, (params["blocks"], state["k"], state["v"]))
+        new_state = {"k": new_k, "v": new_v, "pos": pos + 1}
+    elif fam == "ssm":
+        def pair(x, xs):
+            bp, mst, sst = xs
+            h, mst = ssm_mod.mlstm_step(bp["mlstm"],
+                                        rmsnorm(bp["ln1"], x, eps), mst, cfg)
+            x = x + h
+            h, sst = ssm_mod.slstm_step(bp["slstm"],
+                                        rmsnorm(bp["ln2"], x, eps), sst, cfg)
+            return x + h, (mst, sst)
+        x, (new_m, new_s) = jax.lax.scan(
+            pair, x, (params["pairs"], state["mlstm"], state["slstm"]))
+        new_state = {"mlstm": new_m, "slstm": new_s, "pos": pos + 1}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, xs):
+            gp, gst, ck, cv = xs
+
+            def inner(x, ys):
+                bp, st = ys
+                h, st = ssm_mod.mamba2_step(bp["mamba"],
+                                            rmsnorm(bp["ln"], x, eps), st, cfg)
+                return x + h, st
+            x, gst = jax.lax.scan(inner, x, (gp, gst))
+            h, ck, cv = decode_attention(
+                shared["attn"], rmsnorm(shared["ln"], x, eps), cfg, ck, cv,
+                pos, window=cfg.sliding_window)
+            return x + h, (gst, ck, cv)
+        x, (new_mam, new_k, new_v) = jax.lax.scan(
+            group, x, (params["mamba_groups"], state["mamba"],
+                       state["k"], state["v"]))
+        new_state = {"mamba": new_mam, "k": new_k, "v": new_v, "pos": pos + 1}
+    else:
+        raise ValueError(fam)
+
+    logits = _logits(params, cfg, x)
+    return logits, new_state
+
+
+def prefill(params: PyTree, cfg: ModelConfig, batch: dict,
+            max_len: int, last_only: bool = False) -> tuple[Array, dict]:
+    """Process a prompt, returning (logits, primed decode state).
+
+    Assumes prompt length <= cache capacity (and <= window for windowed
+    archs — longer prompts should chunk through decode_step).
+
+    last_only=True computes logits ONLY for the final position — for a
+    vocab-V model this removes the (B, S, V) logit tensor entirely
+    (2*T*d*V flops and its HBM round-trip); serving only ever samples
+    from the last position. §Perf hillclimb #A.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    eps = cfg.norm_eps
+    fam = cfg.family
+    state = init_decode_state(cfg, b, max_len)
+
+    def _place_kv(cache, kv):
+        # kv: (L, B, S, Hk, Dh) -> write at slot range [0, S); windowed
+        # caches keep the tail (ring slots align when S % window == 0,
+        # which holds for the assignment shapes: 32768 % 4096 == 0)
+        s_cache = cache.shape[2]
+        if kv.shape[2] > s_cache:
+            kv = kv[:, :, -s_cache:]
+        return jax.lax.dynamic_update_slice(
+            cache, kv.astype(cache.dtype), (0, 0, 0, 0, 0))
+
+    if fam in ("dense", "vlm", "moe"):
+        def block(x, bp):
+            h, (k, v) = attention(bp["attn"], rmsnorm(bp["ln1"], x, eps), cfg,
+                                  positions, return_kv=True)
+            x = x + h
+            if fam == "moe":
+                h, _ = moe_with_aux(bp["moe"], rmsnorm(bp["ln2"], x, eps), cfg)
+            else:
+                h = mlp(bp["mlp"], rmsnorm(bp["ln2"], x, eps), cfg)
+            return x + h, (k, v)
+        x, (ks, vs) = jax.lax.scan(block, x, params["blocks"])
+        state = {"k": _place_kv(state["k"], ks),
+                 "v": _place_kv(state["v"], vs), "pos": jnp.int32(s)}
+    elif fam == "ssm":
+        def pair(x, bp):
+            h, mst = ssm_mod.mlstm_forward(
+                bp["mlstm"], rmsnorm(bp["ln1"], x, eps), cfg,
+                return_state=True)
+            x = x + h
+            h, sst = ssm_mod.slstm_forward(
+                bp["slstm"], rmsnorm(bp["ln2"], x, eps), cfg,
+                return_state=True)
+            return x + h, (mst, sst)
+        x, (ml, sl) = jax.lax.scan(pair, x, params["pairs"])
+        state = {"mlstm": ml, "slstm": sl, "pos": jnp.int32(s)}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, gp):
+            def inner(x, bp):
+                h, st = ssm_mod.mamba2_forward(
+                    bp["mamba"], rmsnorm(bp["ln"], x, eps), cfg,
+                    return_state=True)
+                return x + h, st
+            x, gst = jax.lax.scan(inner, x, gp)
+            h, (k, v) = attention(shared["attn"],
+                                  rmsnorm(shared["ln"], x, eps), cfg,
+                                  positions, return_kv=True)
+            return x + h, (gst, k, v)
+        x, (mam, ks, vs) = jax.lax.scan(group, x, params["mamba_groups"])
+        state = {"mamba": mam, "k": _place_kv(state["k"], ks),
+                 "v": _place_kv(state["v"], vs), "pos": jnp.int32(s)}
+    else:
+        raise ValueError(fam)
+
+    if last_only:
+        x = x[:, -1:]
+    logits = _logits(params, cfg, x)
+    return logits, state

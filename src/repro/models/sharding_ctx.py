@@ -1,0 +1,168 @@
+"""Logical-axis sharding context (models never hardcode mesh axis names).
+
+Models annotate activations with LOGICAL axis names:
+
+    x = constrain(x, ("batch", "seq", "embed"))
+
+The launcher installs a rules table mapping logical -> mesh axes inside a
+`with sharding_rules(...)` block; outside any block `constrain` is identity,
+so the same model code runs single-device (smoke tests) and on the 512-chip
+production mesh (dry-run) unchanged.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None)
+# Param axes and activation axes are distinct namespaces: params FSDP-shard
+# their "embed" rows over `data` (ZeRO-3) while activation embed dims stay
+# unsharded — TP lives on the `model` axis for both.
+DEFAULT_RULES: dict[str, object] = {
+    # --- activations
+    "batch": ("pod", "data"),   # data parallel over pod+data
+    "seq": None,
+    "act_embed": None,
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_heads": "model",
+    "act_kv": "model",
+    "act_ssm": "model",
+    "expert_cap": None,
+    # residual-stream sequence axis: sharding it over `model` is Megatron
+    # sequence parallelism — activations carried between blocks shrink by
+    # the TP width; XLA inserts the all-gather/reduce-scatter pairs at the
+    # TP boundaries. Set to None for the paper-faithful TP-only baseline.
+    "res_seq": "model",
+    # decode KV-cache sequence axis (split-KV decode when kv_heads can't
+    # shard; remapped per-arch by launch/shardings.py)
+    "kv_seq": None,
+    # chunk-local MoE dispatch slabs (§Perf #B2): chunks span ALL mesh
+    # axes — the residual stream is already (batch x data, seq x model)
+    # sharded, so slicing tokens into per-device chunks needs NO reshard;
+    # dispatch/combine scatters stay device-local and the expert weights
+    # all-gather instead (FSDP-style, ~1000x fewer collective bytes than
+    # resharding token buffers).
+    "moe_chunk": ("pod", "data", "model"),
+    # context-parallel attention fallback (§Perf #A2): when head counts
+    # don't tile the model axis (minicpm/starcoder2: 36 heads on 16), the
+    # q/k/v SEQUENCE dim shards instead — XLA all-gathers K/V per layer
+    # (ring-attention-lite), trading a small collective for 16x less
+    # attention HBM traffic vs replication.
+    "attn_seq": "model",
+    # --- params
+    "embed": "data",            # FSDP / ZeRO-3 within pod
+    "ff": "model",              # tensor parallel
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "expert": "model",          # expert parallel (shared w/ activations)
+    "ssm_inner": "model",
+    "layers": None,             # scan-stacked leading dim
+}
+
+
+def current_rules() -> dict | None:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def sharding_rules(mesh, rules: dict | None = None):
+    """Install mesh + logical rules for constrain() within the block."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes the mesh doesn't have (e.g. "pod" on single-pod meshes)
+    names = set(mesh.axis_names)
+
+    def _filter(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in names else None
+        kept = tuple(a for a in v if a in names)
+        return kept if kept else None
+
+    merged = {k: _filter(v) for k, v in merged.items()}
+    prev_rules = getattr(_state, "rules", None)
+    prev_mesh = getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = merged, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_rules, prev_mesh
+
+
+def logical_to_spec(names: tuple[str | None, ...],
+                    rules: dict | None = None) -> P:
+    rules = rules if rules is not None else current_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def shard_count(name: str) -> int:
+    """How many ways logical axis `name` shards on the current mesh."""
+    rules = current_rules()
+    mesh = current_mesh()
+    if rules is None or mesh is None:
+        return 1
+    v = rules.get(name)
+    if v is None:
+        return 1
+    axes = (v,) if isinstance(v, str) else v
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, names: tuple[str | None, ...]) -> jax.Array:
+    """Annotate activation sharding by logical axis names (no-op w/o mesh).
+
+    Axes whose mesh-shard count does not divide the dimension are dropped
+    (replicated) rather than unevenly sharded — e.g. 36 attention heads on
+    a 16-wide model axis constrain on the fused H*Dh projection instead.
+    """
+    rules = current_rules()
+    mesh = current_mesh()
+    if rules is None or mesh is None:
+        return x
+
+    def _axis_size(v) -> int:
+        if v is None:
+            return 1
+        axes = (v,) if isinstance(v, str) else v
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+
+    resolved = []
+    used: set = set()
+    for dim, name in zip(x.shape, names):
+        v = rules.get(name) if name is not None else None
+        if v is not None:
+            axes = (v,) if isinstance(v, str) else tuple(v)
+            # first-come-first-served: a mesh axis already consumed by an
+            # earlier dim is dropped from later dims (e.g. moe_chunk spans
+            # (data, model); the expert dim then stays unsharded)
+            axes = tuple(a for a in axes if a not in used)
+            v = (axes[0] if len(axes) == 1 else axes) if axes else None
+        if v is not None and dim % _axis_size(v) == 0:
+            resolved.append(v)
+            used.update((v,) if isinstance(v, str) else v)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*resolved)))

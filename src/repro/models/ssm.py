@@ -1,0 +1,513 @@
+"""State-space + recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM/sLSTM).
+
+Mamba2 uses the chunked SSD algorithm (Dao & Gu 2024): intra-chunk work is
+quadratic (chunk x chunk) matmuls — MXU food — and inter-chunk state flows
+through a tiny lax.scan. O(S) memory/compute in sequence length, which is
+what makes the long_500k decode cell feasible for the ssm/hybrid archs.
+
+xLSTM (Beck et al. 2024): mLSTM (matrix memory, parallel-chunked with exact
+log-space stabilization) and sLSTM (scalar memory, inherently sequential ->
+lax.scan over time with block-diagonal per-head recurrence).
+
+All blocks expose three entry points: full-sequence forward (train),
+single-step (decode with carried state), and init/state-init.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.sharding_ctx import constrain
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------- causal conv
+def causal_conv1d(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C), b: (C,)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def conv_step(x_t: Array, buf: Array, w: Array, b: Array
+              ) -> tuple[Array, Array]:
+    """One decode step of the causal conv. x_t: (B, C); buf: (B, K-1, C)
+    holds the previous inputs. Returns (y_t, new_buf)."""
+    k = w.shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b
+    return y.astype(x_t.dtype), window[:, 1:]
+
+
+# ===================================================================== SSD
+
+def _fit_chunk(s: int, chunk: int) -> int:
+    """Largest divisor of s that is <= chunk (ragged smoke-test shapes)."""
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def _segsum(log_a: Array) -> Array:
+    """(..., Q) per-step log decays -> (..., Q, Q) lower-tri cumulative
+    log-decay matrix: out[t, s] = sum_{u=s+1..t} log_a[u] for s <= t."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # (.., t, s)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x: Array, dt: Array, a_log: Array, b_in: Array, c_in: Array,
+             chunk: int, h_init: Array | None = None
+             ) -> tuple[Array, Array]:
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); a_log: (H,) (A = -exp(a_log));
+    b_in/c_in: (B,S,N). Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    b, s, h, p = x.shape
+    n = b_in.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    bf = b_in.astype(jnp.float32).reshape(b, nc, chunk, n)
+    cf = c_in.astype(jnp.float32).reshape(b, nc, chunk, n)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))               # (H,) negative
+    la = dtf * a                                          # (b,nc,q,h) log dec
+    la_cs = jnp.cumsum(la, axis=2)                        # within-chunk csum
+
+    # ---- intra-chunk (quadratic): M[t,s] = CB[t,s]*exp(seg)*dt[s]
+    seg = _segsum(jnp.moveaxis(la, 2, -1))                # (b,nc,h,q,q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cf, bf)            # (b,nc,q,q)
+    m = cb[:, :, None] * jnp.exp(seg) * jnp.moveaxis(dtf, 2, -1)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", m, xf)
+
+    # ---- chunk states: S_c = sum_s exp(la_end - la_cs[s]) dt_s B_s x_s
+    rem = jnp.exp(la_cs[:, :, -1:, :] - la_cs)            # (b,nc,q,h)
+    dbx = jnp.einsum("bckn,bckh,bckhp->bchnp", bf, dtf * rem, xf)
+    chunk_decay = jnp.exp(la_cs[:, :, -1, :])             # (b,nc,h)
+
+    def scan_body(h_prev, inp):
+        cd, s_c = inp                                     # (b,h), (b,h,n,p)
+        h_new = cd[..., None, None] * h_prev + s_c
+        return h_new, h_prev
+
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if h_init is None
+          else h_init.astype(jnp.float32))
+    h_final, h_prevs = jax.lax.scan(
+        scan_body, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(dbx, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (b,nc,h,n,p)
+
+    # ---- inter-chunk: y_t += exp(la_cs[t]) * C_t . h_prev
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", cf, h_prevs) \
+        * jnp.exp(la_cs)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(x_t: Array, dt_t: Array, a_log: Array, b_t: Array, c_t: Array,
+             h: Array) -> tuple[Array, Array]:
+    """One decode step. x_t: (B,H,P); dt_t: (B,H); b_t/c_t: (B,N);
+    h: (B,H,N,P) -> (y (B,H,P), h')."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt_t.astype(jnp.float32) * a)         # (B,H)
+    dbx = jnp.einsum("bn,bh,bhp->bhnp", b_t.astype(jnp.float32),
+                     dt_t.astype(jnp.float32), x_t.astype(jnp.float32))
+    h = decay[..., None, None] * h + dbx
+    y = jnp.einsum("bn,bhnp->bhp", c_t.astype(jnp.float32), h)
+    return y.astype(x_t.dtype), h
+
+
+# ------------------------------------------------------------ Mamba2 block
+def mamba2_init(key, cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    n, h = cfg.ssm_state_dim, cfg.n_ssm_heads
+    kconv = cfg.ssm_conv_dim
+    keys = jax.random.split(key, 4)
+    conv_ch = di + 2 * n
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di + 2 * n + h)),
+        "conv_w": dense_init(keys[1], (kconv, conv_ch)) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(keys[2], (di, d)),
+    }
+
+
+def mamba2_spec(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "a_log": ("ssm_inner",),
+        "d_skip": ("ssm_inner",),
+        "dt_bias": ("ssm_inner",),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _mamba2_pre(params, x, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state_dim, cfg.n_ssm_heads
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt_pre = zxbcdt[..., -h:]
+    return z, xbc, dt_pre
+
+
+def mamba2_forward(params, x: Array, cfg: ModelConfig,
+                   return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D) [, decode state]."""
+    b, s, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state_dim, cfg.n_ssm_heads
+    p = di // h
+    kconv = cfg.ssm_conv_dim
+    z, xbc_raw, dt_pre = _mamba2_pre(params, x, cfg)
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, params["conv_w"], params["conv_b"]))
+    x_in = xbc[..., :di].reshape(b, s, h, p)
+    b_in = xbc[..., di:di + n]
+    c_in = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + params["dt_bias"])
+    x_in = constrain(x_in, ("batch", "seq", "act_ssm", None))
+    y, h_final = ssd_scan(x_in, dt, params["a_log"], b_in, c_in,
+                          _fit_chunk(s, cfg.ssm_chunk))
+    y = y.astype(jnp.float32)
+    y = y + params["d_skip"][None, None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(z.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, 1e-5)
+    y = constrain(y, ("batch", "seq", "act_ssm"))
+    out = y @ params["out_proj"].astype(z.dtype)
+    out = constrain(out, ("batch", "res_seq", "act_embed"))
+    if not return_state:
+        return out
+    # conv buffer holds the last K-1 PRE-conv inputs
+    pad = max(kconv - 1 - s, 0)
+    tail = xbc_raw[:, max(s - (kconv - 1), 0):]
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    state = {"h": h_final, "conv": tail.astype(jnp.float32)}
+    return out, state
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int) -> dict:
+    di, n, h = cfg.d_inner, cfg.ssm_state_dim, cfg.n_ssm_heads
+    p = di // h
+    kconv = cfg.ssm_conv_dim
+    return {
+        "h": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((batch, kconv - 1, di + 2 * n), jnp.float32),
+    }
+
+
+def mamba2_step(params, x_t: Array, state: dict, cfg: ModelConfig
+                ) -> tuple[Array, dict]:
+    """x_t: (B, 1, D) -> (y (B, 1, D), state')."""
+    b = x_t.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state_dim, cfg.n_ssm_heads
+    p = di // h
+    z, xbc, dt_pre = _mamba2_pre(params, x_t, cfg)
+    xbc_t, conv_buf = conv_step(xbc[:, 0], state["conv"], params["conv_w"],
+                                params["conv_b"])
+    xbc_t = jax.nn.silu(xbc_t)
+    x_in = xbc_t[..., :di].reshape(b, h, p)
+    b_in = xbc_t[..., di:di + n]
+    c_in = xbc_t[..., di + n:]
+    dt = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + params["dt_bias"])
+    y, h_new = ssd_step(x_in, dt, params["a_log"], b_in, c_in, state["h"])
+    y = y.astype(jnp.float32) + params["d_skip"][None, :, None] \
+        * x_in.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(z.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, 1e-5)
+    out = y @ params["out_proj"].astype(z.dtype)
+    return out, {"h": h_new, "conv": conv_buf}
+
+
+# =================================================================== mLSTM
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = 2 * d                                            # up-projection x2
+    keys = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(keys[0], (d, di)),
+        "conv_w": dense_init(keys[1], (4, di)) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_q": dense_init(keys[2], (di, di)),
+        "w_k": dense_init(keys[3], (di, di)),
+        "w_v": dense_init(keys[4], (di, di)),
+        "w_i": dense_init(keys[5], (di, cfg.n_ssm_heads)),
+        "w_f": dense_init(keys[6], (di, cfg.n_ssm_heads)),
+        "f_bias": 3.0 * jnp.ones((cfg.n_ssm_heads,), jnp.float32),
+        "w_o_gate": dense_init(keys[7], (d, di)),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "w_down": dense_init(jax.random.fold_in(key, 99), (di, d)),
+    }
+
+
+def mlstm_spec(cfg: ModelConfig) -> dict:
+    return {
+        "w_up": ("embed", "ssm_inner"), "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",), "w_q": ("ssm_inner", None),
+        "w_k": ("ssm_inner", None), "w_v": ("ssm_inner", None),
+        "w_i": ("ssm_inner", None), "w_f": ("ssm_inner", None),
+        "f_bias": (None,), "w_o_gate": ("embed", "ssm_inner"),
+        "norm_scale": ("ssm_inner",),
+        "w_down": ("ssm_inner", "embed"),
+    }
+
+
+def mlstm_chunked(q: Array, k: Array, v: Array, i_pre: Array, f_pre: Array,
+                  chunk: int, state: tuple | None = None
+                  ) -> tuple[Array, tuple]:
+    """Exact log-space stabilized chunked mLSTM.
+
+    q/k/v: (B,S,H,Dk|Dv); i_pre/f_pre: (B,S,H) raw gate pre-activations.
+    state: (C (B,H,Dk,Dv), n (B,H,Dk), m (B,H)) or None.
+    Returns (y (B,S,H,Dv), final state).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0
+    scale = dk ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(b, nc, chunk, h, dk)
+    kf = k.astype(jnp.float32).reshape(b, nc, chunk, h, dk)
+    vf = v.astype(jnp.float32).reshape(b, nc, chunk, h, dv)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,S,H)
+    logf = logf.reshape(b, nc, chunk, h)
+    itil = i_pre.astype(jnp.float32).reshape(b, nc, chunk, h)
+
+    f_cs = jnp.cumsum(logf, axis=2)                       # (b,nc,q,h)
+    f_tot = f_cs[:, :, -1, :]                             # (b,nc,h)
+
+    # intra log weights: D[t,s] = f_cs[t] - f_cs[s] + itil[s], s <= t
+    seg = _segsum(jnp.moveaxis(logf, 2, -1))              # (b,nc,h,q,q)
+    dlog = seg + jnp.moveaxis(itil, 2, -1)[:, :, :, None, :]
+    m_intra = jnp.max(dlog, axis=-1)                      # (b,nc,h,q)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    # sequential pass over chunks (tiny state, nc steps)
+    def chunk_body(carry, idx):
+        c_p, n_p, m_p = carry
+        f_c = f_cs[:, idx]                                # (b,q,h)
+        dl = dlog[:, idx]                                 # (b,h,q,q)
+        mi = m_intra[:, idx]                              # (b,h,q)
+        # combined stabilizer per step t
+        m_inter = jnp.moveaxis(f_c, 1, -1) + m_p[:, :, None]   # (b,h,q)
+        m_t = jnp.maximum(mi, m_inter)
+        m_t = jnp.maximum(m_t, -1e30)                     # avoid -inf - -inf
+        w_intra = jnp.exp(dl - m_t[..., None])            # (b,h,q,s)
+        qc = qf[:, idx]                                   # (b,q,h,dk)
+        scores = jnp.einsum("bqhk,bshk->bhqs", qc, kf[:, idx])
+        y_intra = jnp.einsum("bhqs,bshd->bqhd", w_intra * scores, vf[:, idx])
+        n_intra = jnp.einsum("bhqs,bshk->bqhk", w_intra, kf[:, idx])
+        w_inter = jnp.exp(m_inter - m_t)                  # (b,h,q)
+        y_inter = jnp.einsum("bqhk,bhkd->bqhd", qc, c_p) \
+            * jnp.moveaxis(w_inter, 1, -1)[..., None]
+        num = y_intra + y_inter
+        qn_intra = jnp.einsum("bqhk,bqhk->bqh", qc, n_intra)
+        qn_inter = jnp.einsum("bqhk,bhk->bqh", qc, n_p) \
+            * jnp.moveaxis(w_inter, 1, -1)
+        denom = jnp.maximum(jnp.abs(qn_intra + qn_inter),
+                            jnp.exp(-jnp.moveaxis(m_t, 1, -1)))
+        y_t = num / (denom[..., None] + 1e-30)
+
+        # state update to end of chunk
+        ft = f_tot[:, idx]                                # (b,h)
+        m_state_in = jnp.moveaxis(
+            ft[:, None, :] - f_cs[:, idx] + itil[:, idx], 1, -1)  # (b,h,q)
+        m_new = jnp.maximum(m_p + ft, jnp.max(m_state_in, axis=-1))
+        m_new = jnp.maximum(m_new, -1e30)
+        w_state = jnp.exp(m_state_in - m_new[..., None])  # (b,h,q)
+        c_new = jnp.exp(m_p + ft - m_new)[..., None, None] * c_p \
+            + jnp.einsum("bhs,bshk,bshd->bhkd", w_state, kf[:, idx], vf[:, idx])
+        n_new = jnp.exp(m_p + ft - m_new)[..., None] * n_p \
+            + jnp.einsum("bhs,bshk->bhk", w_state, kf[:, idx])
+        return (c_new, n_new, m_new), y_t
+
+    (c_f, n_f, m_f), ys = jax.lax.scan(chunk_body, (c0, n0, m0),
+                                       jnp.arange(nc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dv)
+    return y.astype(q.dtype), (c_f, n_f, m_f)
+
+
+def mlstm_forward(params, x: Array, cfg: ModelConfig,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.n_ssm_heads
+    u = x @ params["w_up"].astype(x.dtype)                # (B,S,2D)
+    uc = jax.nn.silu(causal_conv1d(u, params["conv_w"], params["conv_b"]))
+    di = u.shape[-1]
+    dk = di // h
+    q = (uc @ params["w_q"].astype(x.dtype)).reshape(b, s, h, dk)
+    k = (uc @ params["w_k"].astype(x.dtype)).reshape(b, s, h, dk)
+    v = (u @ params["w_v"].astype(x.dtype)).reshape(b, s, h, dk)
+    i_pre = uc @ params["w_i"].astype(x.dtype)
+    f_pre = uc @ params["w_f"].astype(x.dtype) + params["f_bias"]
+    y, (c_f, n_f, m_f) = mlstm_chunked(q, k, v, i_pre, f_pre,
+                                       _fit_chunk(s, cfg.ssm_chunk))
+    y = y.reshape(b, s, di)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, 1e-5)
+    o = jax.nn.sigmoid(x @ params["w_o_gate"].astype(x.dtype))
+    out = (y * o) @ params["w_down"].astype(x.dtype)
+    if not return_state:
+        return out
+    kc = params["conv_w"].shape[0]
+    pad = max(kc - 1 - s, 0)
+    tail = u[:, max(s - (kc - 1), 0):]
+    if pad:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    state = {"c": c_f, "n": n_f, "m": m_f, "conv": tail.astype(jnp.float32)}
+    return out, state
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.n_ssm_heads
+    di = 2 * cfg.d_model
+    dk = di // h
+    return {
+        "c": jnp.zeros((batch, h, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), jnp.float32),
+    }
+
+
+def mlstm_step(params, x_t: Array, state: dict, cfg: ModelConfig
+               ) -> tuple[Array, dict]:
+    """x_t: (B, 1, D)."""
+    b = x_t.shape[0]
+    h = cfg.n_ssm_heads
+    u = x_t @ params["w_up"].astype(x_t.dtype)
+    di = u.shape[-1]
+    dk = di // h
+    uc_t, conv_buf = conv_step(u[:, 0], state["conv"], params["conv_w"],
+                               params["conv_b"])
+    uc_t = jax.nn.silu(uc_t)
+    q = (uc_t @ params["w_q"].astype(x_t.dtype)).reshape(b, h, dk) \
+        .astype(jnp.float32) * dk ** -0.5
+    k = (uc_t @ params["w_k"].astype(x_t.dtype)).reshape(b, h, dk) \
+        .astype(jnp.float32)
+    v = (u[:, 0] @ params["w_v"].astype(x_t.dtype)).reshape(b, h, dk) \
+        .astype(jnp.float32)
+    itil = (uc_t @ params["w_i"].astype(x_t.dtype)).astype(jnp.float32)
+    ftil = (uc_t @ params["w_f"].astype(x_t.dtype)
+            + params["f_bias"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(ftil)
+    m_new = jnp.maximum(state["m"] + logf, itil)
+    fw = jnp.exp(state["m"] + logf - m_new)
+    iw = jnp.exp(itil - m_new)
+    c = fw[..., None, None] * state["c"] + iw[..., None, None] \
+        * jnp.einsum("bhk,bhd->bhkd", k, v)
+    n = fw[..., None] * state["n"] + iw[..., None] * k
+    qn = jnp.einsum("bhk,bhk->bh", q, n)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new)) + 1e-30
+    y = jnp.einsum("bhk,bhkd->bhd", q, c) / denom[..., None]
+    y = y.reshape(b, 1, di).astype(x_t.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, 1e-5)
+    o = jax.nn.sigmoid(x_t @ params["w_o_gate"].astype(x_t.dtype))
+    out = (y * o) @ params["w_down"].astype(x_t.dtype)
+    return out, {"c": c, "n": n, "m": m_new, "conv": conv_buf}
+
+
+# =================================================================== sLSTM
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = 4                                                 # spec: 4 heads
+    dh = d // h
+    keys = jax.random.split(key, 3)
+    ff = max(8, int(d * 4 / 3) // 8 * 8)
+    return {
+        "w_in": dense_init(keys[0], (d, 4 * d)),
+        "r": jax.vmap(lambda k: dense_init(k, (dh, 4 * dh)))(
+            jax.random.split(keys[1], h)),
+        "bias": jnp.zeros((4 * d,), jnp.float32)
+                 .at[d:2 * d].set(3.0),                   # forget-gate bias
+        "w_ff_up": dense_init(keys[2], (d, ff)),
+        "w_ff_down": dense_init(jax.random.fold_in(key, 7), (ff, d)),
+    }
+
+
+def slstm_spec(cfg: ModelConfig) -> dict:
+    return {"w_in": ("embed", None), "r": (None, None, None),
+            "bias": (None,), "w_ff_up": ("embed", "ff"),
+            "w_ff_down": ("ff", "embed")}
+
+
+def _slstm_cell(params, g_x: Array, carry: tuple, d: int):
+    """One timestep. g_x: (B, 4D) input part; carry: (c, n, h, m) each (B, D)."""
+    c, n, hid, m = carry
+    h_heads = 4
+    dh = d // h_heads
+    hh = hid.reshape(-1, h_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh, params["r"].astype(hid.dtype))
+    g = g_x + rec.reshape(-1, 4 * d) + params["bias"].astype(hid.dtype)
+    gi, gf, gz, go = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    m_new = jnp.maximum(gf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    c_new = f * c + i * jnp.tanh(gz)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(params, x: Array, cfg: ModelConfig,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    g_all = x @ params["w_in"].astype(x.dtype)            # (B,S,4D)
+    c0 = jnp.zeros((b, d), jnp.float32)
+    carry = (c0, c0, c0, c0)
+
+    def step(carry, g_t):
+        return _slstm_cell(params, g_t, carry, d)
+
+    (c_f, n_f, h_f, m_f), hs = jax.lax.scan(step, carry,
+                                            jnp.moveaxis(g_all, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)            # (B,S,D)
+    ff = jax.nn.silu(y @ params["w_ff_up"].astype(x.dtype))
+    out = ff @ params["w_ff_down"].astype(x.dtype)
+    if not return_state:
+        return out
+    return out, {"c": c_f, "n": n_f, "h": h_f, "m": m_f}
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_step(params, x_t: Array, state: dict, cfg: ModelConfig
+               ) -> tuple[Array, dict]:
+    d = cfg.d_model
+    g_t = (x_t[:, 0] @ params["w_in"].astype(x_t.dtype))
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), h_out = _slstm_cell(params, g_t, carry, d)
+    y = h_out[:, None, :].astype(x_t.dtype)
+    ff = jax.nn.silu(y @ params["w_ff_up"].astype(x_t.dtype))
+    out = ff @ params["w_ff_down"].astype(x_t.dtype)
+    return out, {"c": c, "n": n, "h": h, "m": m}

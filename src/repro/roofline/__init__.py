@@ -1,0 +1,11 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import (
+    TPU_V5E,
+    collective_bytes_from_hlo,
+    roofline_terms,
+    model_flops,
+)
+
+__all__ = ["TPU_V5E", "collective_bytes_from_hlo", "roofline_terms",
+           "model_flops"]

@@ -1,0 +1,124 @@
+"""Three-term roofline from compiled artifacts (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs   / (chips * peak_FLOPs)
+    memory     = HLO_bytes   / (chips * HBM_bw)
+    collective = coll_bytes  / (chips * ICI_link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (XLA's whole-program
+counts — note these are GLOBAL across devices). collective bytes are NOT in
+cost_analysis: we parse the optimized HLO text and sum the RESULT-shape
+bytes of every collective op (the received payload per collective; the
+convention is documented in EXPERIMENTS.md — consistent across cells, which
+is what matters for comparing configurations).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+
+
+TPU_V5E = HwSpec(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                 ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction: %name = TYPE[dims]{...} opcode(...)  OR tuple result
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every TYPE[dims] group in a result type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, dict]:
+    """Per-collective-kind {bytes, count} + total, from optimized HLO text.
+
+    Matches lines of the form:
+        %x = bf16[...]{...} all-gather(...), ...
+        %y = (f32[...], f32[...]) all-reduce(...), ...
+    Result-shape bytes are counted once per op (fusion wrappers like
+    all-reduce-start/-done are deduplicated by counting only -start for
+    async pairs).
+    """
+    out: dict[str, dict] = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?\S+\s*=\s*(.+?)\s+([\w-]+)\(", line)
+        if not m:
+            continue
+        result_type, opcode = m.group(1), m.group(2)
+        base = None
+        for kind in _COLLECTIVES:
+            if opcode == kind or opcode == kind + "-start":
+                base = kind
+                break
+        if base is None:
+            continue
+        out[base]["bytes"] += _shape_bytes(result_type)
+        out[base]["count"] += 1
+    out["total"] = {
+        "bytes": sum(v["bytes"] for k, v in out.items() if k != "total"),
+        "count": sum(v["count"] for k, v in out.items() if k != "total"),
+    }
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, n_chips: int = 1,
+                   hw: HwSpec = TPU_V5E) -> dict[str, float]:
+    """Seconds per step for each roofline term + the dominant one.
+
+    IMPORTANT: under SPMD partitioning, ``compiled.cost_analysis()`` and the
+    compiled HLO text describe the PER-DEVICE program (verified empirically:
+    an 8-way-sharded matmul reports 1/8 the flops). So pass the per-device
+    numbers with n_chips=1 — equivalent to the spec's
+    HLO_FLOPs_global / (chips * peak) under perfect balance.
+    """
+    compute = flops / (n_chips * hw.peak_flops)
+    memory = bytes_accessed / (n_chips * hw.hbm_bw)
+    collective = collective_bytes / (n_chips * hw.ici_bw)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    return {
+        **terms,
+        "dominant": dom,
+        "bound_s": bound,
+        # achievable fraction of the compute roof given the other terms
+        "roofline_fraction": compute / bound if bound > 0 else 0.0,
+    }
+
+
+def model_flops(n_params_active: int, n_tokens: int,
+                training: bool = True) -> float:
+    """MODEL_FLOPS = 6*N*D for a train step (2 fwd + 4 bwd per param-token),
+    2*N*D for inference."""
+    mult = 6.0 if training else 2.0
+    return mult * n_params_active * n_tokens

@@ -1,0 +1,424 @@
+"""Loop-aware FLOP / byte / collective counting from optimized HLO text.
+
+WHY THIS EXISTS: ``compiled.cost_analysis()`` counts a while-loop body ONCE
+(verified: an 8-step scanned matmul reports 1/8 the flops of its unrolled
+twin). Every production-relevant program here is scan-over-layers (plus
+scan-over-chunks inside attention/SSD and scan-over-time in sLSTM), so raw
+cost_analysis undercounts by 1–3 orders of magnitude.
+
+This module re-derives the counts from ``compiled.as_text()``:
+
+  1. parse the module into computations + instructions (symbol table of
+     result shapes);
+  2. find every `while` op, read its trip count from the `constant(N)`
+     feeding the `compare(..., direction=LT)` in its condition computation
+     (exactly how lax.scan lowers), and propagate EXECUTION MULTIPLIERS
+     down the call graph (nested scans multiply);
+  3. FLOPs: sum dot/convolution/matmul-custom-call ops — output elements x
+     2 x contracting size — each weighted by its computation's multiplier;
+  4. bytes: operand bytes + result bytes per top-level instruction (the
+     fusion-granularity accounting XLA's own model uses), weighted;
+  5. collectives: result-shape bytes per op kind, weighted.
+
+Validated in tests/test_roofline.py against cost_analysis on unrolled
+programs (agreement within a few % on flops).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# ops whose "bytes accessed" is effectively zero (aliasing/bookkeeping) or
+# accounted elsewhere: while/call bodies count their own traffic; collective
+# payloads belong to the collective roofline term, not the HBM term.
+_FREE_OPS = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "opt-barrier", "partition-id", "replica-id", "domain",
+    "get-dimension-size", "while", "call", "conditional",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "reduce-scatter-start", "all-to-all-start", "collective-permute-start",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->\s*.+\{\s*$")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) over every TYPE[dims] group in a type str."""
+    elems = 0
+    byts = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+def _dims_of(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str            # everything after the opening paren
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: list = field(default_factory=list)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append(Instr(
+                name=im.group(1), result_type=im.group(2).strip(),
+                opcode=im.group(3), rest=im.group(4), line=line.strip()))
+    return comps
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Names inside the top-level call parens."""
+    depth = 0
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        token += ch
+    for part in token.split(","):
+        part = part.strip()
+        pm = re.search(r"%([\w\.\-]+)", part)
+        if pm:
+            out.append(pm.group(1))
+    return out
+
+
+def _attr(rest: str, key: str) -> str | None:
+    m = re.search(key + r"=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _attr_dims(line: str, key: str) -> list[int]:
+    m = re.search(key + r"=\{([\d,]*)\}", line)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+class HloAnalysis:
+    """Loop-corrected counts for one optimized HLO module."""
+
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.sym: dict[str, str] = {}
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                self.sym[ins.name] = ins.result_type
+            # computation parameters: "%name (p0: f32[..], p1: ..) -> .."
+        # parameter shapes from the instruction form "%p = f32[..] parameter(0)"
+        self.mult = self._multipliers()
+
+    # ------------------------------------------------------------- loops
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        consts = []
+        for ins in comp.instrs:
+            if ins.opcode == "constant" and ins.result_type.startswith("s32"):
+                m = re.search(r"constant\((\d+)\)", ins.line)
+                if m:
+                    consts.append(int(m.group(1)))
+            # constants may also be referenced via fusion wrappers; scan raw
+        if not consts:
+            for ins in comp.instrs:
+                for m in re.finditer(r"constant\((\d+)\)", ins.line):
+                    consts.append(int(m.group(1)))
+        return max(consts) if consts else 1
+
+    def _multipliers(self) -> dict[str, float]:
+        entry = next((c.name for c in self.comps.values() if c.is_entry),
+                     None)
+        mult = {name: 0.0 for name in self.comps}
+        if entry is None:
+            return {name: 1.0 for name in self.comps}
+        mult[entry] = 1.0
+        # propagate through while/call/conditional edges to fixpoint
+        for _ in range(64):
+            changed = False
+            new = dict(mult)
+            for comp in self.comps.values():
+                m = mult[comp.name]
+                if m == 0.0:
+                    continue
+                for ins in comp.instrs:
+                    if ins.opcode == "while":
+                        body = _attr(ins.rest, "body")
+                        cond = _attr(ins.rest, "condition")
+                        trip = self._trip_count(cond) if cond else 1
+                        if body in new:
+                            want = m * trip
+                            if new[body] < want:
+                                new[body] = want
+                                changed = True
+                    elif ins.opcode in ("call", "conditional",
+                                        "async-start"):
+                        for key in ("to_apply", "calls", "branch_computations",
+                                    "true_computation", "false_computation"):
+                            tgt = _attr(ins.rest, key)
+                            if tgt in new and new[tgt] < m:
+                                new[tgt] = m
+                                changed = True
+            mult = new
+            if not changed:
+                break
+        return mult
+
+    # ------------------------------------------------------------- flops
+    def _dot_flops(self, ins: Instr) -> float:
+        out_elems, _ = _shape_elems_bytes(ins.result_type)
+        ops = _operand_names(ins.rest)
+        contracting = _attr_dims(ins.line, "lhs_contracting_dims")
+        k = 1
+        if ops:
+            lhs_dims = _dims_of(self.sym.get(ops[0], ""))
+            for c in contracting:
+                if c < len(lhs_dims):
+                    k *= lhs_dims[c]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, ins: Instr) -> float:
+        out_elems, _ = _shape_elems_bytes(ins.result_type)
+        ops = _operand_names(ins.rest)
+        if len(ops) < 2:
+            return 0.0
+        kern_dims = _dims_of(self.sym.get(ops[1], ""))
+        # kernel = spatial... x in_ch/groups x out_ch; conservative: product
+        # of all but the output-feature dim
+        k = 1
+        for d in kern_dims[:-1]:
+            k *= d
+        m = re.search(r"feature_group_count=(\d+)", ins.line)
+        groups = int(m.group(1)) if m else 1
+        return 2.0 * out_elems * max(k // max(groups, 1), 1)
+
+    def _custom_call_flops(self, ins: Instr) -> float:
+        if "matmul" not in ins.line and "dot" not in ins.line.lower():
+            return 0.0
+        ops = _operand_names(ins.rest)
+        out_elems, _ = _shape_elems_bytes(ins.result_type)
+        if ops:
+            lhs = _dims_of(self.sym.get(ops[0], ""))
+            out = _dims_of(ins.result_type)
+            if lhs and out:
+                shared = set(lhs) - set(out)
+                k = max(shared) if shared else (lhs[-1] if lhs else 1)
+                return 2.0 * out_elems * k
+        return 0.0
+
+    # ------------------------------------------------------------- bytes
+    def _fusion_operand_bytes(self, ins: Instr) -> int:
+        """Operand traffic of a fusion op, accounting for operands that are
+        only dynamic-sliced/gathered INSIDE the fusion (stacked scan xs,
+        embedding tables): those read slice-sized data, not the buffer."""
+        fc_name = _attr(ins.rest, "calls")
+        comp = self.comps.get(fc_name) if fc_name else None
+        operands = _operand_names(ins.rest)
+        if comp is None:
+            total = 0
+            for name in operands:
+                _, nb = _shape_elems_bytes(self.sym.get(name, ""))
+                total += nb
+            return total
+        params: dict[int, Instr] = {}
+        for i2 in comp.instrs:
+            if i2.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i2.line)
+                if m:
+                    params[int(m.group(1))] = i2
+        total = 0
+        for idx, opname in enumerate(operands):
+            _, full = _shape_elems_bytes(self.sym.get(opname, ""))
+            pin = params.get(idx)
+            if pin is None:
+                total += full
+                continue
+            uses = [i2 for i2 in comp.instrs
+                    if pin.name in _operand_names(i2.rest)]
+            slicey = ("dynamic-slice", "gather", "dynamic-update-slice")
+            if uses and all(u.opcode in slicey for u in uses):
+                sliced = 0
+                for u in uses:
+                    if u.opcode == "dynamic-update-slice":
+                        ops_u = _operand_names(u.rest)
+                        if len(ops_u) >= 2:
+                            upd = ops_u[1]
+                            # update operand may be a fusion param or local
+                            _, ub = _shape_elems_bytes(
+                                self.sym.get(upd, ""))
+                            sliced += 2 * ub
+                    else:
+                        _, ub = _shape_elems_bytes(u.result_type)
+                        sliced += ub
+                total += min(sliced, full) if sliced else full
+            else:
+                total += full
+        return total
+
+    def _fusion_output_bytes(self, ins: Instr) -> int:
+        """Fusion write traffic: a root dynamic-update-slice aliases its
+        big operand in place — only the update region is written."""
+        _, full = _shape_elems_bytes(ins.result_type)
+        fc_name = _attr(ins.rest, "calls")
+        comp = self.comps.get(fc_name) if fc_name else None
+        if comp is None or not comp.instrs:
+            return full
+        by_name = {i2.name: i2 for i2 in comp.instrs}
+        root = next((i2 for i2 in comp.instrs if "ROOT" in i2.line),
+                    comp.instrs[-1])
+
+        def one(i2: Instr) -> int:
+            if i2.opcode == "dynamic-update-slice":
+                ops_u = _operand_names(i2.rest)
+                if len(ops_u) >= 2:
+                    u = by_name.get(ops_u[1])
+                    if u is not None:
+                        _, ub = _shape_elems_bytes(u.result_type)
+                        return ub
+                    _, ub = _shape_elems_bytes(self.sym.get(ops_u[1], ""))
+                    if ub:
+                        return ub
+            _, b = _shape_elems_bytes(i2.result_type)
+            return b
+
+        if root.opcode == "tuple":
+            total = 0
+            for name in _operand_names(root.rest):
+                i2 = by_name.get(name)
+                total += one(i2) if i2 is not None else 0
+            return min(total, full) if total else full
+        return min(one(root), full)
+
+    # ------------------------------------------------------------ totals
+    def analyze(self, top_k: int = 0) -> dict:
+        flops = 0.0
+        byts = 0.0
+        contributors: list[tuple[float, str, str]] = []
+        coll = {k: {"bytes": 0.0, "count": 0.0} for k in COLLECTIVE_KINDS}
+        for comp in self.comps.values():
+            m = self.mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            if comp.name.startswith("fused_") or ".fused" in comp.name:
+                continue  # fusion internals: counted at the fusion op
+            for ins in comp.instrs:
+                op = ins.opcode
+                if op == "dot":
+                    flops += m * self._dot_flops(ins)
+                elif op == "convolution":
+                    flops += m * self._conv_flops(ins)
+                elif op == "custom-call":
+                    flops += m * self._custom_call_flops(ins)
+                base = None
+                for kind in COLLECTIVE_KINDS:
+                    if op == kind or op == kind + "-start":
+                        base = kind
+                        break
+                if base is not None:
+                    _, b = _shape_elems_bytes(ins.result_type)
+                    coll[base]["bytes"] += m * b
+                    coll[base]["count"] += m
+                if op in _FREE_OPS or op.endswith("-done"):
+                    continue
+                _, ob = _shape_elems_bytes(ins.result_type)
+                lowname = ins.name.lower()
+                if op == "dynamic-slice" or op == "gather" or \
+                        "dynamic-slice" in lowname or "gather" in lowname:
+                    # slicing/gathering reads only output-sized data, not
+                    # the whole operand buffer (embedding tables, scan xs)
+                    b_here = m * 2 * ob
+                elif op == "dynamic-update-slice" or \
+                        "dynamic-update-slice" in lowname:
+                    ops_n = _operand_names(ins.rest)
+                    ub = 0
+                    if len(ops_n) >= 2:
+                        _, ub = _shape_elems_bytes(self.sym.get(ops_n[1], ""))
+                    # in-place: read + write the update region only
+                    b_here = m * 2 * ub
+                elif op == "fusion":
+                    b_here = m * (self._fusion_output_bytes(ins)
+                                  + self._fusion_operand_bytes(ins))
+                else:
+                    ib = 0
+                    for name in _operand_names(ins.rest):
+                        _, nb = _shape_elems_bytes(self.sym.get(name, ""))
+                        ib += nb
+                    b_here = m * (ob + ib)
+                byts += b_here
+                if top_k:
+                    contributors.append((b_here, comp.name, ins.line[:140]))
+        coll_total = sum(v["bytes"] for v in coll.values())
+        out = {
+            "flops": flops,
+            "bytes_accessed": byts,
+            "collectives": {**coll, "total": {
+                "bytes": coll_total,
+                "count": sum(v["count"] for v in coll.values())}},
+        }
+        if top_k:
+            contributors.sort(reverse=True)
+            out["top_bytes"] = [
+                {"bytes": b, "comp": c, "instr": l}
+                for b, c, l in contributors[:top_k]]
+        return out
+
+
+def analyze_hlo(text: str) -> dict:
+    return HloAnalysis(text).analyze()

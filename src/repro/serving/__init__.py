@@ -1,0 +1,6 @@
+"""Serving: batched KV-cache decode + retrieval-augmented serving (RAG)."""
+
+from repro.serving.serve_loop import generate, make_serve_step
+from repro.serving.rag import RagPipeline
+
+__all__ = ["generate", "make_serve_step", "RagPipeline"]

@@ -1,0 +1,58 @@
+"""Batched decode serving loop.
+
+`make_serve_step` returns the one-token step the dry-run lowers for the
+decode_32k / long_500k cells; `generate` is the host driver used by the
+examples (greedy or temperature sampling).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, init_decode_state, prefill
+
+Array = jax.Array
+PyTree = Any
+
+
+def make_serve_step(cfg: ModelConfig):
+    """(params, state, tokens (B,1)) -> (logits (B,1,V), state')."""
+
+    def serve_step(params, state, tokens):
+        return decode_step(params, cfg, state, tokens)
+
+    return serve_step
+
+
+def generate(params: PyTree, cfg: ModelConfig, prompts: Array, *,
+             max_new_tokens: int, max_len: int | None = None,
+             temperature: float = 0.0, seed: int = 0) -> Array:
+    """Greedy/temperature generation. prompts: (B, S) int32 ->
+    (B, S + max_new_tokens)."""
+    b, s = prompts.shape
+    max_len = max_len or (s + max_new_tokens)
+    logits, state = jax.jit(
+        lambda p, t: prefill(p, cfg, {"tokens": t}, max_len=max_len)
+    )(params, prompts)
+    step = jax.jit(make_serve_step(cfg))
+
+    key = jax.random.PRNGKey(seed)
+    cur = _sample(logits[:, -1], temperature, key)
+    out = [prompts, cur]
+    for i in range(max_new_tokens - 1):
+        logits, state = step(params, state, cur)
+        key = jax.random.fold_in(key, i)
+        cur = _sample(logits[:, -1], temperature, key)
+        out.append(cur)
+    return jnp.concatenate(out, axis=1)
+
+
+def _sample(logits: Array, temperature: float, key: Array) -> Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]

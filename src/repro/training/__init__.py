@@ -1,0 +1,18 @@
+"""Training substrate: optimizer, train loop, checkpointing, compression."""
+
+from repro.training.optimizer import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    schedule_fn,
+)
+from repro.training.train_loop import TrainState, make_train_step, train_state_specs
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.training.compression import compress_tree, decompress_tree
+
+__all__ = [
+    "OptimizerConfig", "adamw_init", "adamw_update", "schedule_fn",
+    "TrainState", "make_train_step", "train_state_specs",
+    "save_checkpoint", "restore_checkpoint", "latest_step",
+    "compress_tree", "decompress_tree",
+]

@@ -1,0 +1,96 @@
+"""AdamW + LR schedules, raw JAX (no optax in this container).
+
+Schedules: cosine (default), WSD (warmup-stable-decay — MiniCPM's schedule,
+arXiv:2404.06395), constant. All pure functions of the step so restarts are
+exact.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    schedule: str = "cosine"          # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: final fraction spent decaying
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule_fn(cfg: OptimizerConfig, step: Array) -> Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    total = float(cfg.total_steps)
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(total - cfg.warmup_steps, 1), 0.0, 1.0)
+        base = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 \
+            * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "wsd":
+        decay_start = total * (1 - cfg.decay_frac)
+        frac = jnp.clip((s - decay_start) / max(total - decay_start, 1),
+                        0.0, 1.0)
+        base = 1.0 - (1 - cfg.min_lr_frac) * frac      # stable, then linear
+    elif cfg.schedule == "constant":
+        base = jnp.float32(1.0)
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.peak_lr * warm * base
+
+
+def adamw_init(params: PyTree) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+            "step": jnp.int32(0)}
+
+
+def _global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: OptimizerConfig, grads: PyTree, opt_state: dict,
+                 params: PyTree) -> tuple[PyTree, dict, dict]:
+    """One AdamW step with global-norm clipping. Returns
+    (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree_util.tree_map(
+        lambda mm, g: b1 * mm + (1 - b1) * g, opt_state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * g * g, opt_state["v"], grads)
+    t = step.astype(jnp.float32)
+    mhat_c = 1.0 / (1 - b1 ** t)
+    vhat_c = 1.0 / (1 - b2 ** t)
+    lr = schedule_fn(cfg, step)
+
+    def upd(p, mm, vv):
+        u = (mm * mhat_c) / (jnp.sqrt(vv * vhat_c) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, \
+        {"lr": lr, "grad_norm": gnorm}

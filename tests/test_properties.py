@@ -1,0 +1,188 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distances import (
+    mips_augment_data,
+    mips_augment_query,
+    pairwise_l2_squared,
+)
+from repro.core.rabitq import (
+    SUPPORTED_BITS,
+    pack_codes,
+    packed_bytes_per_vector,
+    rabitq_encode,
+    rabitq_estimate,
+    rabitq_preprocess_query,
+    rabitq_train,
+    unpack_codes,
+)
+from repro.core.robust_prune import dedup_sort_candidates, robust_prune_batch
+from repro.kernels.topk.ops import topk
+from repro.kernels.topk.ref import topk_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------- pack/unpack
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from(SUPPORTED_BITS),
+    n=st.integers(1, 20),
+    d=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(bits, n, d, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 2**bits, (n, d)), jnp.uint8)
+    assert (np.asarray(unpack_codes(pack_codes(codes, bits), bits, d))
+            == np.asarray(codes)).all()
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from(SUPPORTED_BITS), d=st.integers(1, 2048))
+def test_packed_size_formula(bits, d):
+    """Paper §5.1: size = dims*m bits + 2 floats."""
+    b = packed_bytes_per_vector(d, bits)
+    assert b == int(np.ceil(d * bits / 8)) + 8
+
+
+# --------------------------------------------------------------- estimator
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), d=st.sampled_from([64, 128, 256]))
+def test_rabitq_estimate_nonnegative_and_finite(seed, d):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(50, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+    params = rabitq_train(jax.random.PRNGKey(seed), x, bits=4)
+    codes = rabitq_encode(params, x)
+    est = rabitq_estimate(codes, rabitq_preprocess_query(params, q))
+    a = np.asarray(est)
+    assert np.isfinite(a).all() and (a >= 0).all()
+
+
+def test_rabitq_error_shrinks_with_dims():
+    """JL concentration: relative estimator error ~ O(1/sqrt(D))."""
+    rng = np.random.default_rng(0)
+    med = {}
+    for d in (32, 512):
+        x = jnp.asarray(rng.normal(size=(200, d)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(8, d)), jnp.float32)
+        params = rabitq_train(jax.random.PRNGKey(0), x, bits=1)
+        codes = rabitq_encode(params, x)
+        est = np.asarray(rabitq_estimate(
+            codes, rabitq_preprocess_query(params, q)))
+        true = np.asarray(pairwise_l2_squared(q, x))
+        med[d] = np.median(np.abs(est - true) / (true + 1e-9))
+    assert med[512] < med[32]
+
+
+# -------------------------------------------------------------- robust prune
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(20, 80),
+    c=st.integers(4, 40),
+    r=st.integers(2, 16),
+    alpha=st.floats(1.0, 2.0),
+)
+def test_robust_prune_invariants(seed, n, c, r, alpha):
+    rng = np.random.default_rng(seed)
+    vectors = jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)
+    pivots = jnp.asarray(rng.integers(0, n, (5,)), jnp.int32)
+    cand = jnp.asarray(rng.integers(-1, n, (5, c)), jnp.int32)
+    pv = vectors[jnp.maximum(pivots, 0)]
+    cv = vectors[jnp.maximum(cand, 0)]
+    dists = jnp.sum((cv - pv[:, None]) ** 2, -1)
+    dists = jnp.where(cand >= 0, dists, jnp.inf)
+    res = robust_prune_batch(vectors, pivots, cand, dists, jnp.int32(n),
+                             degree_bound=r, alpha=float(alpha),
+                             chunk_size=8)
+    sel = np.asarray(res.selected_ids)
+    nsel = np.asarray(res.n_selected)
+    # 1. degree bound respected
+    assert ((sel >= 0).sum(1) <= r).all()
+    assert (nsel <= r).all()
+    # 2. no self loops, no out-of-range, no duplicates
+    for i in range(5):
+        live = sel[i][sel[i] >= 0]
+        assert len(set(live.tolist())) == len(live)
+        assert (live != int(pivots[i])).all()
+        assert (live < n).all()
+    # 3. selected dists ascending (insertion order == distance order)
+    sd = np.asarray(res.selected_dists)
+    for i in range(5):
+        fin = sd[i][np.isfinite(sd[i])]
+        assert (np.diff(fin) >= -1e-5).all()
+
+
+def test_alpha_monotonicity():
+    """Larger alpha prunes less aggressively => degree >= smaller alpha."""
+    rng = np.random.default_rng(3)
+    n, c, r = 100, 60, 32
+    vectors = jnp.asarray(rng.normal(size=(n, 16)), jnp.float32)
+    pivots = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    cand = jnp.asarray(rng.integers(0, n, (4, c)), jnp.int32)
+    pv = vectors[pivots]
+    cv = vectors[cand]
+    dists = jnp.sum((cv - pv[:, None]) ** 2, -1)
+    n1 = robust_prune_batch(vectors, pivots, cand, dists, jnp.int32(n),
+                            degree_bound=r, alpha=1.0).n_selected
+    n2 = robust_prune_batch(vectors, pivots, cand, dists, jnp.int32(n),
+                            degree_bound=r, alpha=1.5).n_selected
+    assert (np.asarray(n2) >= np.asarray(n1)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dedup_sort(seed):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(-1, 10, (3, 20)), jnp.int32)
+    dists = jnp.asarray(rng.uniform(0, 10, (3, 20)), jnp.float32)
+    pivots = jnp.asarray([0, 1, 2], jnp.int32)
+    si, sd = dedup_sort_candidates(ids, dists, pivots, jnp.int32(10))
+    si, sd = np.asarray(si), np.asarray(sd)
+    for i in range(3):
+        live = si[i][si[i] >= 0]
+        assert len(set(live.tolist())) == len(live)      # unique
+        assert (live != i).all()                          # no self
+        fin = sd[i][np.isfinite(sd[i])]
+        assert (np.diff(fin) >= -1e-6).all()              # sorted
+        assert len(fin) == len(live)                      # aligned
+
+
+# --------------------------------------------------------------------- topk
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    q=st.integers(1, 12),
+    c=st.integers(2, 200),
+)
+def test_topk_matches_ref(seed, q, c):
+    rng = np.random.default_rng(seed)
+    k = min(5, c)
+    d = jnp.asarray(rng.normal(size=(q, c)), jnp.float32)
+    i = jnp.arange(q * c, dtype=jnp.int32).reshape(q, c)
+    od, oi = topk(d, i, k)
+    rd, ri = topk_ref(d, i, k)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(rd), rtol=1e-6)
+    assert (np.asarray(oi) == np.asarray(ri)).all()
+
+
+# --------------------------------------------------------------------- mips
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 64))
+def test_mips_reduction_exact(seed, d):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(50, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+    da = np.asarray(pairwise_l2_squared(mips_augment_query(q),
+                                        mips_augment_data(x)))
+    ip = np.asarray(q @ x.T)
+    for i in range(4):
+        assert da[i].argmin() == ip[i].argmax()
+        # full ranking preserved, not just argmax
+        assert (np.argsort(da[i]) == np.argsort(-ip[i])).all()

@@ -1,0 +1,113 @@
+"""HLO analyzer + roofline term correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (
+    TPU_V5E,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+from repro.roofline.hlo_analyzer import HloAnalysis, analyze_hlo
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_flops_exact_on_scan_vs_unrolled():
+    """Loop-corrected flops from the SCANNED program == unrolled truth."""
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    x = jax.ShapeDtypeStruct((64, 96), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 96, 96), jnp.float32)
+    c_s = _compile(lambda x, ws: jax.lax.scan(body, x, ws)[0], x, ws)
+    c_u = _compile(lambda x, ws: jax.lax.scan(body, x, ws, unroll=True)[0],
+                   x, ws)
+    truth = c_u.cost_analysis()["flops"]
+    assert analyze_hlo(c_s.as_text())["flops"] == pytest.approx(truth)
+    assert analyze_hlo(c_u.as_text())["flops"] == pytest.approx(truth)
+
+
+def test_nested_scan_multipliers():
+    def inner(x, w):
+        return jnp.tanh(x @ w), None
+
+    def outer(x, ws):
+        x, _ = jax.lax.scan(inner, x, ws)
+        return x, None
+
+    x = jax.ShapeDtypeStruct((96, 96), jnp.float32)
+    wss = jax.ShapeDtypeStruct((3, 4, 96, 96), jnp.float32)
+    c = _compile(lambda x, wss: jax.lax.scan(outer, x, wss)[0], x, wss)
+    got = analyze_hlo(c.as_text())["flops"]
+    assert got == pytest.approx(3 * 4 * 2 * 96**3, rel=0.01)
+
+
+def test_bytes_close_to_xla_on_loop_free():
+    def f(a, b):
+        return jnp.tanh(a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    c = _compile(f, a, a)
+    ana = analyze_hlo(c.as_text())
+    xla = c.cost_analysis()["bytes accessed"]
+    assert ana["bytes_accessed"] == pytest.approx(xla, rel=0.5)
+
+
+def test_cost_analysis_undercounts_loops():
+    """The raison d'etre: document XLA's body-counted-once behaviour."""
+    def body(x, w):
+        return jnp.tanh(x @ w), None
+
+    x = jax.ShapeDtypeStruct((64, 96), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 96, 96), jnp.float32)
+    c = _compile(lambda x, ws: jax.lax.scan(body, x, ws)[0], x, ws)
+    raw = c.cost_analysis()["flops"]
+    corrected = analyze_hlo(c.as_text())["flops"]
+    assert corrected > 5 * raw  # ~8x
+
+
+def test_roofline_terms_dominance():
+    # compute-bound
+    r = roofline_terms(1e15, 1e9, 1e6, 1, TPU_V5E)
+    assert r["dominant"] == "compute_s"
+    assert r["roofline_fraction"] == pytest.approx(1.0)
+    # memory-bound
+    r = roofline_terms(1e12, 1e13, 1e6, 1, TPU_V5E)
+    assert r["dominant"] == "memory_s"
+    assert r["roofline_fraction"] < 1.0
+    # collective-bound
+    r = roofline_terms(1e12, 1e9, 1e12, 1, TPU_V5E)
+    assert r["dominant"] == "collective_s"
+
+
+def test_model_flops():
+    assert model_flops(1000, 10, training=True) == 6000 * 10
+    assert model_flops(1000, 10, training=False) == 2000 * 10
+
+
+def test_collective_parse_shapes():
+    hlo = """
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %a = f32[16]{0} parameter(0)
+  %ar = f32[16]{0} all-reduce(%a), replica_groups={}
+  %ag = f32[128,64]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %r = f32[16]{0} bitcast(%ar)
+}
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-reduce"]["bytes"] == 16 * 4
+    assert got["all-gather"]["bytes"] == 128 * 64 * 4
+    assert got["total"]["count"] == 2
+
+
+def test_analyzer_collectives_weighted_by_loops():
+    """Collectives inside a scan body count once per iteration."""
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (subprocess tests cover this)")
