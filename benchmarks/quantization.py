@@ -17,12 +17,14 @@ from benchmarks.common import BENCH_PARAMS, Csv, dataset, time_call
 from repro.core.index import JasperIndex
 from repro.core.pq import pq_distance, pq_encode, pq_train
 from repro.core.rabitq import (
+    packed_dim,
     rabitq_encode,
     rabitq_estimate,
     rabitq_preprocess_query,
     rabitq_train,
 )
 from repro.core.distances import pairwise_l2_squared
+from repro.kernels.rabitq_dot import ops as rops
 
 
 def run(csv: Csv, name: str = "gist", k: int = 1, n: int | None = None
@@ -32,17 +34,32 @@ def run(csv: Csv, name: str = "gist", k: int = 1, n: int | None = None
     q = jnp.asarray(queries)
 
     # ---- distance-computation microbenchmark (the Fig 12 kernel-level gap)
+    # bytes the estimator reads per candidate: packed codes + 2 f32 metadata
+    # = ceil(D*m/8) + 8, vs 4*D for the exact f32 row (§5.1 / Fig 5)
+    d = x.shape[1]
+    exact_bytes = 4 * d
     us_exact = time_call(jax.jit(lambda q, x: pairwise_l2_squared(q, x)),
                          q, x)
-    csv.add(f"quant/{name}/distance/exact", us_exact, "full f32")
+    csv.add(f"quant/{name}/distance/exact", us_exact,
+            f"full f32 {exact_bytes}B/cand")
 
     params_r = rabitq_train(jax.random.PRNGKey(0), x, bits=4)
     codes_r = rabitq_encode(params_r, x)
+    rq_bytes = packed_dim(d, 4) + 8
     qq = rabitq_preprocess_query(params_r, q)
     us_rq = time_call(jax.jit(lambda c, qq: rabitq_estimate(c, qq)),
                       codes_r, qq)
     csv.add(f"quant/{name}/distance/rabitq4", us_rq,
-            f"{us_exact / us_rq:.2f}x vs exact (sequential codes)")
+            f"{us_exact / us_rq:.2f}x vs exact (sequential codes) "
+            f"{rq_bytes}B/cand ({exact_bytes / rq_bytes:.1f}x fewer bytes)")
+
+    # fused Pallas estimator over the same canonical packed codes
+    us_rk = time_call(lambda: rops.rabitq_distance(
+        codes_r.packed, codes_r.data_add, codes_r.data_rescale,
+        qq.q_rot, qq.query_add, qq.query_sumq, bits=4))
+    csv.add(f"quant/{name}/distance/rabitq4_kernel", us_rk,
+            f"fused unpack+dot+epilogue {rq_bytes}B/cand "
+            "(interpret on CPU)")
 
     params_p = pq_train(jax.random.PRNGKey(0), x,
                         n_subspaces=max(4, ds.dims // 64))
@@ -68,6 +85,8 @@ def run(csv: Csv, name: str = "gist", k: int = 1, n: int | None = None
     for label, fn in (
         ("exact", lambda: idx.search(queries, k, beam_width=64)),
         ("rabitq", lambda: idx.search_rabitq(queries, k, beam_width=64)),
+        ("rabitq_kernel", lambda: idx.search_rabitq(
+            queries, k, beam_width=64, use_kernels=True)),
     ):
         us = time_call(fn)
         ids, _ = fn()

@@ -1,50 +1,92 @@
 """Paper Fig 8: query recall/throughput curves across the five datasets.
 
-Beam width sweeps the recall/throughput trade-off; both the exact path
-(Jasper) and the estimated path (Jasper RaBitQ) are measured. Recall is
-k@k vs brute force, as in the paper.
+Beam width sweeps the recall/throughput trade-off; the exact path (Jasper),
+the jnp estimator path, and the fused Pallas kernel path (Jasper RaBitQ)
+are all measured. Recall is k@k vs brute force, as in the paper.
+
+Besides the CSV rows, emits BENCH_queries.json recording bytes-moved per
+candidate (the paper's central quantity: ceil(D*m/8) + 8 packed vs 4*D
+exact) and QPS per beam width, to seed the perf trajectory.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 
 from benchmarks.common import BENCH_PARAMS, Csv, dataset, time_call
 from repro.core.index import JasperIndex
+from repro.core.rabitq import packed_dim
 
 BEAMS = (8, 16, 32, 64)
+BITS = 4
 
 
 def run(csv: Csv, datasets=("bigann", "deep", "gist"), k: int = 10,
-        n: int | None = None) -> None:
+        n: int | None = None, out_json: str | None = "BENCH_queries.json"
+        ) -> list[dict]:
+    records: list[dict] = []
     for name in datasets:
         data, queries, ds = dataset(name, n)
         quant = None if ds.metric == "mips" else "rabitq"
         idx = JasperIndex(ds.dims, capacity=data.shape[0], metric=ds.metric,
                           construction=BENCH_PARAMS,
-                          quantization=quant, bits=4)
+                          quantization=quant, bits=BITS)
         idx.build(data)
         gt, _ = idx.brute_force(queries, k)
         gt = np.asarray(gt)
+        d = idx.store_dims
 
         def recall(ids):
             ids = np.asarray(ids)
             return np.mean([len(set(ids[i]) & set(gt[i])) / k
                             for i in range(ids.shape[0])])
 
-        for beam in BEAMS:
-            us = time_call(lambda: idx.search(queries, k, beam_width=beam))
-            ids, _ = idx.search(queries, k, beam_width=beam)
-            qps = queries.shape[0] / (us / 1e6)
-            csv.add(f"queries/{name}/exact/beam{beam}", us,
-                    f"recall@{k}={recall(ids):.3f} {qps:.0f} q/s")
-            if quant:
-                us = time_call(
-                    lambda: idx.search_rabitq(queries, k, beam_width=beam))
-                ids, _ = idx.search_rabitq(queries, k, beam_width=beam)
+        # bytes the estimator reads per scored candidate (codes + metadata)
+        bytes_per_cand = {
+            "exact": 4 * d,
+            "rabitq": packed_dim(d, BITS) + 8,
+            "rabitq_kernel": packed_dim(d, BITS) + 8,
+        }
+
+        paths = [("exact", lambda beam: idx.search(
+            queries, k, beam_width=beam))]
+        if quant:
+            paths += [
+                ("rabitq", lambda beam: idx.search_rabitq(
+                    queries, k, beam_width=beam)),
+                ("rabitq_kernel", lambda beam: idx.search_rabitq(
+                    queries, k, beam_width=beam, use_kernels=True)),
+            ]
+
+        for label, fn in paths:
+            for beam in BEAMS:
+                us = time_call(lambda fn=fn, beam=beam: fn(beam))
+                ids, _ = fn(beam)
                 qps = queries.shape[0] / (us / 1e6)
-                csv.add(f"queries/{name}/rabitq/beam{beam}", us,
-                        f"recall@{k}={recall(ids):.3f} {qps:.0f} q/s")
+                rec = recall(ids)
+                csv.add(f"queries/{name}/{label}/beam{beam}", us,
+                        f"recall@{k}={rec:.3f} {qps:.0f} q/s "
+                        f"{bytes_per_cand[label]}B/cand")
+                records.append({
+                    "dataset": name, "path": label, "beam": beam, "k": k,
+                    "dims": d, "bits": BITS if label != "exact" else None,
+                    "bytes_per_candidate": bytes_per_cand[label],
+                    "us_per_batch": round(us, 1),
+                    "qps": round(qps, 1),
+                    "recall": round(float(rec), 4),
+                })
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"note": ("CPU interpret-mode timings — relative "
+                                "ordering only; bytes_per_candidate is the "
+                                "hardware-independent quantity"),
+                       "records": records}, f, indent=2)
+        print(f"# wrote {os.path.abspath(out_json)}", flush=True)
+    return records
 
 
 if __name__ == "__main__":

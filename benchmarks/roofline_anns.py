@@ -69,8 +69,10 @@ def run(csv: Csv, names=("deep", "gist"), n: int | None = None) -> None:
                 f"intensity vs exact)")
 
         # ---- fused Pallas-kernel intensity (the paper's Fig 9 numbers):
-        # the jnp path above double-materializes dequantized codes in HBM;
-        # the kernel keeps unpack local to VMEM, so per candidate row:
+        # the jnp path above now gathers the canonical PACKED codes (same
+        # HBM bytes as the kernel) but materializes the unpacked (Q, K, D)
+        # buffer between ops; the kernel keeps unpack local to VMEM, so
+        # per candidate row:
         #   exact : 2*D flops per (4*D + 8) bytes         ~0.5 F/B
         #   rabitq: 2*D flops per (D*m/8 + 8 + 8) bytes   ~8x higher @ m=4
         # (+8 = accumulator/output amortized; matches paper 0.7-0.95 vs

@@ -41,6 +41,8 @@ SECTIONS = {
     "loads": lambda csv, fast: loads.run(csv),
     # paper Figs 10-11
     "tiles": lambda csv, fast: tiles.run(csv),
+    # per-hop frontier merge A/B (partial top-L vs full sort vs kernel)
+    "merge": lambda csv, fast: tiles.run_merge_ab(csv),
     # paper Fig 9 / §6.5
     "roofline_anns": lambda csv, fast: roofline_anns.run(
         csv, n=3000 if fast else None),

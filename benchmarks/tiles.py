@@ -14,10 +14,12 @@ block shapes and report:
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, time_call
+from repro.core.beam_search import MERGE_FNS
 from repro.kernels.distance import ops as dops
 
 SWEEP = [
@@ -48,7 +50,52 @@ def run(csv: Csv, q: int = 128, c: int = 1024, d: int = 256) -> None:
                 f"vmem={vmem / 1024:.0f}KB intensity={intensity:.2f}F/B")
 
 
+MERGE_SWEEP = [
+    # (queries, beam_width L, candidates E*R)
+    (128, 16, 64),
+    (128, 32, 64),
+    (128, 64, 64),
+    (128, 64, 256),
+    (512, 32, 64),
+    (512, 64, 256),
+]
+
+
+def run_merge_ab(csv: Csv) -> None:
+    """A/B the per-hop frontier merge: full sort vs partial top-L.
+
+    The sort orders all L + E*R entries; the partial merges select the
+    best L without ordering the discarded tail. Results must be
+    identical — the timing delta is the per-hop merge cost cut.
+    """
+    rng = np.random.default_rng(3)
+    for q, beam, cand in MERGE_SWEEP:
+        f_dists = jnp.sort(
+            jnp.asarray(rng.exponential(size=(q, beam)), jnp.float32), axis=1)
+        f_ids = jnp.asarray(rng.integers(0, 10000, (q, beam)), jnp.int32)
+        f_vis = jnp.asarray(rng.random((q, beam)) < 0.5)
+        c_ids = jnp.asarray(rng.integers(-1, 10000, (q, cand)), jnp.int32)
+        c_dists = jnp.where(
+            c_ids >= 0,
+            jnp.asarray(rng.exponential(size=(q, cand)), jnp.float32),
+            jnp.inf)
+        ref = None
+        for name, fn in MERGE_FNS.items():
+            jfn = jax.jit(fn, static_argnames=("beam_width",))
+            out = jfn(f_ids, f_dists, f_vis, c_ids, c_dists, beam_width=beam)
+            if ref is None:
+                ref = out
+            else:
+                assert (np.asarray(out[0]) == np.asarray(ref[0])).all(), name
+            us = time_call(lambda jfn=jfn: jfn(f_ids, f_dists, f_vis,
+                                               c_ids, c_dists,
+                                               beam_width=beam))
+            csv.add(f"merge/q{q}_L{beam}_C{cand}/{name}", us,
+                    f"sorted={beam + cand} -> kept={beam}")
+
+
 if __name__ == "__main__":
     c = Csv()
     c.header()
     run(c)
+    run_merge_ab(c)

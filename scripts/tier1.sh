@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Tier-1 verification entry point — the single command builders and CI run.
+#
+#   scripts/tier1.sh          full tier-1 suite (fail-fast, as the driver runs it)
+#   scripts/tier1.sh smoke    fast smoke subset only (core ANNS + kernels)
+#
+# Extra args after the mode are forwarded to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+mode="${1:-full}"
+if [ "$#" -gt 0 ]; then shift; fi
+
+case "$mode" in
+  full)
+    python -m pytest -x -q "$@"
+    ;;
+  smoke)
+    # fast subset: the search/quantization hot path + kernel oracles
+    python -m pytest -q -k "not slow" \
+      tests/test_core_anns.py tests/test_kernels.py "$@"
+    ;;
+  *)
+    echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2
+    exit 2
+    ;;
+esac

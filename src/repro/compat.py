@@ -1,0 +1,26 @@
+"""jax version compatibility helpers (see also kernels/compat.py).
+
+The codebase targets current jax spellings; these shims keep it running on
+older releases (0.4.x) where the same functionality lives under different
+names. Keep this module dependency-free: it is imported at module scope
+across core/, launch/, training/, and models/.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """jax.shard_map on current jax; experimental.shard_map on 0.4.x.
+
+    `check_vma` maps to the older API's `check_rep` (same semantics: verify
+    per-shard replication/varying-axis annotations).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

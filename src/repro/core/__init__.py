@@ -20,15 +20,21 @@ from repro.core.rabitq import (
     rabitq_estimate,
     pack_codes,
     unpack_codes,
+    packed_dim,
+    packed_bytes_per_vector,
 )
 from repro.core.pq import PQParams, pq_train, pq_encode, pq_distance
 from repro.core.vamana import VamanaGraph, init_graph, graph_degree_stats
 from repro.core.beam_search import (
+    MERGE_STRATEGIES,
     BeamSearchResult,
     beam_search,
     beam_search_quantized,
     make_exact_scorer,
     make_rabitq_scorer,
+    merge_frontier_kernel,
+    merge_frontier_sort,
+    merge_frontier_topk,
 )
 from repro.core.robust_prune import robust_prune_batch
 from repro.core.construction import batch_insert, build_graph
@@ -42,10 +48,13 @@ __all__ = [
     "RaBitQParams", "RaBitQCodes", "RaBitQQuery",
     "rabitq_train", "rabitq_encode", "rabitq_preprocess_query",
     "rabitq_estimate", "pack_codes", "unpack_codes",
+    "packed_dim", "packed_bytes_per_vector",
     "PQParams", "pq_train", "pq_encode", "pq_distance",
     "VamanaGraph", "init_graph", "graph_degree_stats",
-    "BeamSearchResult", "beam_search", "beam_search_quantized",
+    "MERGE_STRATEGIES", "BeamSearchResult",
+    "beam_search", "beam_search_quantized",
     "make_exact_scorer", "make_rabitq_scorer",
+    "merge_frontier_sort", "merge_frontier_topk", "merge_frontier_kernel",
     "robust_prune_batch",
     "batch_insert", "build_graph",
     "JasperIndex",

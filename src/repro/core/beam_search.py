@@ -31,7 +31,9 @@ from repro.core.vamana import VamanaGraph
 Array = jax.Array
 ScoreFn = Callable[[Array], Array]  # (Q, K) int32 ids -> (Q, K) f32 dists
 
-_INF = jnp.float32(jnp.inf)
+# python scalar, not a device array: module-level jnp constants become
+# leaked tracers if the module is first imported inside an active trace
+_INF = float("inf")
 
 
 class BeamSearchResult(NamedTuple):
@@ -74,11 +76,16 @@ def make_rabitq_scorer(codes: RaBitQCodes, query: RaBitQQuery) -> ScoreFn:
     return score
 
 
-def _merge_frontier(f_ids, f_dists, f_vis, c_ids, c_dists, beam_width):
-    """Sort-merge candidates into the frontier, keeping the best L.
+MERGE_STRATEGIES = ("topk", "sort", "kernel")
+
+
+def merge_frontier_sort(f_ids, f_dists, f_vis, c_ids, c_dists, beam_width):
+    """Reference merge: full sort over the L + E*R concatenation.
 
     Single stable multi-operand sort — the TPU-native replacement for the
-    paper's in-shared-memory insertion (XLA lowers to a fused sort).
+    paper's in-shared-memory insertion (XLA lowers to a fused sort). Kept
+    as the reference/fallback; the partial merges below select the same
+    top L without ordering the (discarded) tail.
     """
     all_d = jnp.concatenate([f_dists, c_dists], axis=1)
     all_i = jnp.concatenate([f_ids, c_ids], axis=1)
@@ -88,10 +95,53 @@ def _merge_frontier(f_ids, f_dists, f_vis, c_ids, c_dists, beam_width):
     return si[:, :beam_width], sd[:, :beam_width], sv[:, :beam_width]
 
 
+def merge_frontier_topk(f_ids, f_dists, f_vis, c_ids, c_dists, beam_width):
+    """Partial top-L merge: one top_k pass instead of a full sort.
+
+    lax.top_k over the negated distances selects the L smallest (ties
+    break toward the lower position = the frontier half, matching the
+    stable sort's ordering), then a single gather carries ids + visited
+    bits along. Work drops from sort(L+E*R) to select-L — the per-hop
+    merge cost cut of §Perf #C3.
+    """
+    all_d = jnp.concatenate([f_dists, c_dists], axis=1)
+    all_i = jnp.concatenate([f_ids, c_ids], axis=1)
+    all_v = jnp.concatenate([f_vis, jnp.zeros_like(c_ids, dtype=jnp.bool_)], axis=1)
+    neg, pos = jax.lax.top_k(-all_d, beam_width)
+    return (jnp.take_along_axis(all_i, pos, axis=1), -neg,
+            jnp.take_along_axis(all_v, pos, axis=1))
+
+
+def merge_frontier_kernel(f_ids, f_dists, f_vis, c_ids, c_dists, beam_width):
+    """Partial top-L merge via the Pallas min-extraction kernel.
+
+    Reuses kernels/topk: L sequential argmin+mask passes over the VMEM
+    tile, fully vectorized across the query block. Positions come back
+    from the kernel; ids + visited ride along through one gather.
+    """
+    from repro.kernels.topk.ops import topk
+
+    all_d = jnp.concatenate([f_dists, c_dists], axis=1)
+    all_i = jnp.concatenate([f_ids, c_ids], axis=1)
+    all_v = jnp.concatenate([f_vis, jnp.zeros_like(c_ids, dtype=jnp.bool_)], axis=1)
+    pos_in = jax.lax.broadcasted_iota(jnp.int32, all_d.shape, 1)
+    sd, pos = topk(all_d, pos_in, beam_width)
+    return (jnp.take_along_axis(all_i, pos, axis=1), sd,
+            jnp.take_along_axis(all_v, pos, axis=1))
+
+
+MERGE_FNS = {
+    "sort": merge_frontier_sort,
+    "topk": merge_frontier_topk,
+    "kernel": merge_frontier_kernel,
+}
+
+
 def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None = None,
                 *, beam_width: int, max_iters: int,
                 fixed_trip: bool = False,
-                expand_per_iter: int = 1) -> BeamSearchResult:
+                expand_per_iter: int = 1,
+                merge_strategy: str = "topk") -> BeamSearchResult:
     """Run greedy beam search for a batch of queries.
 
     graph:      VamanaGraph (read-only snapshot — purity gives ParlayANN's
@@ -108,7 +158,19 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 number of distance computations, at a small recall cost
                 from coarser expansion ordering. The visited log records
                 only the FIRST pick per iteration — construction uses E=1.
+    merge_strategy: "topk" (default — partial top-L merge, one lax.top_k
+                pass), "sort" (reference full sort-merge), or "kernel"
+                (Pallas min-extraction top-k). All three select the same
+                frontier; see benchmarks/tiles.py for the A/B.
     """
+    if merge_strategy not in MERGE_STRATEGIES:
+        raise ValueError(
+            f"merge_strategy must be one of {MERGE_STRATEGIES}, "
+            f"got {merge_strategy!r}")
+    merge = MERGE_FNS[merge_strategy]
+    # scorers that mask invalid ids to +inf themselves (fused kernel
+    # epilogues) let the loop skip its jnp masking pass over (Q, E*R)
+    self_masking = getattr(score_fn, "self_masking", False)
     adj = graph.adjacency
     n_valid = graph.n_valid
     degree = adj.shape[1]
@@ -185,9 +247,12 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
         nbrs = jnp.where(valid, nbrs, -1)
 
         d = score_fn(nbrs)                                 # (Q, E*R)
-        d = jnp.where(valid, d, _INF)
+        if not self_masking:
+            # invalid entries carry id -1 (set above), so a self-masking
+            # scorer has already written +inf for exactly `~valid`
+            d = jnp.where(valid, d, _INF)
 
-        f_ids, f_dists, f_vis = _merge_frontier(
+        f_ids, f_dists, f_vis = merge(
             f_ids, f_dists, f_vis, nbrs, d, beam_width=l_width)
         return (it + 1, f_ids, f_dists, f_vis, vlog, vdlog, hops)
 
@@ -209,16 +274,34 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                           query: RaBitQQuery, *, beam_width: int,
                           max_iters: int,
                           rerank_score_fn: ScoreFn | None = None,
-                          fixed_trip: bool = False) -> BeamSearchResult:
+                          fixed_trip: bool = False,
+                          expand_per_iter: int = 1,
+                          use_kernels: bool = False,
+                          merge_strategy: str = "topk",
+                          interpret: bool | None = None) -> BeamSearchResult:
     """Beam search on RaBitQ estimated distances (Jasper RaBitQ).
+
+    use_kernels routes scoring through the fused Pallas estimator kernel
+    (in-VMEM unpack + MXU dot + epilogue with invalid-id masking) over the
+    canonical packed codes; otherwise the jnp estimator path is used. Both
+    read the same packed HBM bytes. expand_per_iter mirrors the exact
+    path's multi-expansion (§Perf #C1).
 
     Optionally reranks the final frontier with exact distances — the standard
     RaBitQ recipe for recovering recall lost to the estimator.
     """
-    score = make_rabitq_scorer(codes, query)
+    if use_kernels:
+        # deferred import: core stays importable without the kernels package
+        from repro.kernels.rabitq_dot.ops import make_rabitq_kernel_scorer
+        score = make_rabitq_kernel_scorer(codes, query,
+                                          n_valid=graph.n_valid,
+                                          interpret=interpret)
+    else:
+        score = make_rabitq_scorer(codes, query)
     res = beam_search(graph, score, query.q_rot.shape[0],
                       beam_width=beam_width, max_iters=max_iters,
-                      fixed_trip=fixed_trip)
+                      fixed_trip=fixed_trip, expand_per_iter=expand_per_iter,
+                      merge_strategy=merge_strategy)
     if rerank_score_fn is None:
         return res
     exact_d = rerank_score_fn(res.frontier_ids)

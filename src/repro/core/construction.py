@@ -36,7 +36,7 @@ from repro.core.medoid import compute_medoid
 
 Array = jax.Array
 
-_INF = jnp.float32(jnp.inf)
+_INF = float("inf")
 
 
 @dataclass(frozen=True)

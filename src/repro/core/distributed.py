@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.beam_search import beam_search, make_exact_scorer
 from repro.core.construction import (
     ConstructionParams,
@@ -41,7 +42,7 @@ from repro.core.vamana import VamanaGraph, init_graph
 
 Array = jax.Array
 
-_INF = jnp.float32(jnp.inf)
+_INF = float("inf")
 
 
 @dataclass(frozen=True)
@@ -107,7 +108,7 @@ def sharded_search_fn(mesh: Mesh, spec: ShardSpec, *, capacity_per_shard: int,
     scal_spec = P(row_axes)
     q_spec = P(spec.query_axis, None)
     out_spec = P(spec.query_axis, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_search, mesh=mesh,
         in_specs=(vec_spec, scal_spec, vec_spec, scal_spec, scal_spec, q_spec),
         out_specs=(out_spec, out_spec),
@@ -135,7 +136,7 @@ def sharded_insert_fn(mesh: Mesh, spec: ShardSpec, *, batch_size_per_shard: int,
 
     vec_spec = P(spec.row_axes, None)
     scal_spec = P(spec.row_axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_insert, mesh=mesh,
         in_specs=(vec_spec, scal_spec, vec_spec, scal_spec, scal_spec,
                   scal_spec),
@@ -154,7 +155,7 @@ def sharded_bootstrap_fn(mesh: Mesh, spec: ShardSpec, *, n0: int,
 
     vec_spec = P(spec.row_axes, None)
     scal_spec = P(spec.row_axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_boot, mesh=mesh,
         in_specs=(vec_spec, vec_spec, scal_spec, scal_spec),
         out_specs=(vec_spec, scal_spec, scal_spec),

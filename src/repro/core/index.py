@@ -35,7 +35,9 @@ from repro.core.distances import (
 from repro.core.rabitq import (
     RaBitQCodes,
     RaBitQParams,
+    pack_codes,
     packed_bytes_per_vector,
+    packed_dim,
     rabitq_encode,
     rabitq_preprocess_query,
     rabitq_train,
@@ -46,9 +48,9 @@ Array = jax.Array
 
 
 @partial(jax.jit, static_argnames=("k", "beam_width", "max_iters",
-                                   "expand", "use_kernels"))
+                                   "expand", "use_kernels", "merge"))
 def _search_exact(vectors, vec_sqnorm, graph, queries, *, k, beam_width,
-                  max_iters, expand=1, use_kernels=False):
+                  max_iters, expand=1, use_kernels=False, merge="topk"):
     if use_kernels:
         # Pallas gather-distance kernel path (chunked-load strategy);
         # interpret mode on CPU, Mosaic on TPU
@@ -59,18 +61,23 @@ def _search_exact(vectors, vec_sqnorm, graph, queries, *, k, beam_width,
         score = make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
     res = beam_search(graph, score, queries.shape[0],
                       beam_width=beam_width, max_iters=max_iters,
-                      expand_per_iter=expand)
+                      expand_per_iter=expand, merge_strategy=merge)
     return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
 
 
-@partial(jax.jit, static_argnames=("k", "beam_width", "max_iters", "rerank"))
+@partial(jax.jit, static_argnames=("k", "beam_width", "max_iters", "rerank",
+                                   "expand", "use_kernels", "merge"))
 def _search_rabitq(vectors, vec_sqnorm, graph, codes, rparams, queries, *,
-                   k, beam_width, max_iters, rerank):
+                   k, beam_width, max_iters, rerank, expand=1,
+                   use_kernels=False, merge="topk"):
     q = rabitq_preprocess_query(rparams, queries)
     rerank_fn = (make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
                  if rerank else None)
     res = beam_search_quantized(graph, codes, q, beam_width=beam_width,
-                                max_iters=max_iters, rerank_score_fn=rerank_fn)
+                                max_iters=max_iters, rerank_score_fn=rerank_fn,
+                                expand_per_iter=expand,
+                                use_kernels=use_kernels,
+                                merge_strategy=merge)
     return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
 
 
@@ -142,19 +149,24 @@ class JasperIndex:
             if self.rabitq_params is None:
                 key = jax.random.PRNGKey(self.seed)
                 self.rabitq_params = rabitq_train(key, rows, bits=self.bits)
-                empty = rabitq_encode(self.rabitq_params,
-                                      jnp.zeros((1, self.store_dims)))
+                # capacity-allocated PACKED buffer: ceil(D*m/8) bytes per row
+                # is the only full-width code array ever resident in HBM
                 self.rabitq_codes = RaBitQCodes(
-                    codes=jnp.zeros((self.capacity, self.store_dims), jnp.uint8),
+                    packed=jnp.zeros(
+                        (self.capacity, packed_dim(self.store_dims, self.bits)),
+                        jnp.uint8),
                     data_add=jnp.zeros((self.capacity,), jnp.float32),
-                    data_rescale=jnp.zeros((self.capacity,), jnp.float32))
-                del empty
+                    data_rescale=jnp.zeros((self.capacity,), jnp.float32),
+                    bits=self.bits, dims=self.store_dims)
+            # encode -> pack is fused inside rabitq_encode; streaming inserts
+            # stay incremental .at[ids].set row updates on the packed buffer
             enc = rabitq_encode(self.rabitq_params, rows)
             self.rabitq_codes = RaBitQCodes(
-                codes=self.rabitq_codes.codes.at[ids].set(enc.codes),
+                packed=self.rabitq_codes.packed.at[ids].set(enc.packed),
                 data_add=self.rabitq_codes.data_add.at[ids].set(enc.data_add),
                 data_rescale=self.rabitq_codes.data_rescale.at[ids].set(
-                    enc.data_rescale))
+                    enc.data_rescale),
+                bits=self.bits, dims=self.store_dims)
 
     # ------------------------------------------------------------- build/insert
     def build(self, data: np.ndarray | Array, *, refine: bool = False,
@@ -190,36 +202,49 @@ class JasperIndex:
     # ------------------------------------------------------------------ search
     def search(self, queries: np.ndarray | Array, k: int = 10, *,
                beam_width: int | None = None, max_iters: int | None = None,
-               expand: int = 1, use_kernels: bool = False
-               ) -> tuple[Array, Array]:
+               expand: int = 1, use_kernels: bool = False,
+               merge: str = "topk") -> tuple[Array, Array]:
         """Exact-distance beam search. Returns (ids (Q,k), dists (Q,k)).
 
         expand > 1: multi-expansion (CAGRA-style) — E frontier nodes per
         iteration, ~E x fewer sequential steps (§Perf #C1).
         use_kernels: score with the Pallas gather-distance kernel.
+        merge: frontier merge strategy ("topk" | "sort" | "kernel").
         """
         q = self._prep_query(queries)
         bw = beam_width or max(k, 32)
         mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
         ids, dists, _ = _search_exact(self.vectors, self.vec_sqnorm, self.graph,
                                       q, k=k, beam_width=bw, max_iters=mi,
-                                      expand=expand, use_kernels=use_kernels)
+                                      expand=expand, use_kernels=use_kernels,
+                                      merge=merge)
         return ids, dists
 
     def search_rabitq(self, queries: np.ndarray | Array, k: int = 10, *,
                       beam_width: int | None = None,
-                      max_iters: int | None = None, rerank: bool = True
-                      ) -> tuple[Array, Array]:
-        """RaBitQ estimated-distance beam search (Jasper RaBitQ)."""
+                      max_iters: int | None = None, rerank: bool = True,
+                      expand: int = 1, use_kernels: bool = False,
+                      merge: str = "topk") -> tuple[Array, Array]:
+        """RaBitQ estimated-distance beam search (Jasper RaBitQ).
+
+        use_kernels: score with the fused Pallas estimator kernel (in-VMEM
+        unpack + MXU dot + masking epilogue) over the canonical packed
+        codes — the paper's §5.1 hot path. The jnp estimator path reads
+        the same packed bytes and is the parity oracle.
+        expand > 1: multi-expansion, as in exact search (§Perf #C1).
+        merge: frontier merge strategy ("topk" partial merge by default,
+        "sort" reference, "kernel" Pallas min-extraction).
+        """
         if self.rabitq_codes is None:
             raise RuntimeError("index was not built with quantization='rabitq'")
         q = self._prep_query(queries)
         bw = beam_width or max(k, 32)
-        mi = max_iters or (2 * bw + 8)
+        mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
         ids, dists, _ = _search_rabitq(self.vectors, self.vec_sqnorm, self.graph,
                                        self.rabitq_codes, self.rabitq_params, q,
                                        k=k, beam_width=bw, max_iters=mi,
-                                       rerank=rerank)
+                                       rerank=rerank, expand=expand,
+                                       use_kernels=use_kernels, merge=merge)
         return ids, dists
 
     def brute_force(self, queries: np.ndarray | Array, k: int = 10
@@ -242,7 +267,6 @@ class JasperIndex:
 
     # ----------------------------------------------------------------- memory
     def memory_stats(self) -> dict[str, float]:
-        n = max(self.size, 1)
         full = self.store_dims * 4
         stats = {
             "vector_bytes_per_row": float(full),
@@ -252,13 +276,29 @@ class JasperIndex:
             stats["rabitq_bytes_per_row"] = float(
                 packed_bytes_per_vector(self.store_dims, self.bits))
             stats["compression_ratio"] = full / stats["rabitq_bytes_per_row"]
+            if self.rabitq_codes is not None:
+                # actual packed bytes resident in HBM (not the formula):
+                # packed codes + the two f32 metadata arrays, capacity rows
+                c = self.rabitq_codes
+                resident = (c.packed.size * c.packed.dtype.itemsize
+                            + c.data_add.size * c.data_add.dtype.itemsize
+                            + c.data_rescale.size
+                            * c.data_rescale.dtype.itemsize)
+                stats["rabitq_resident_bytes"] = float(resident)
+                stats["rabitq_resident_bytes_per_row"] = (
+                    resident / self.capacity)
         return stats
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> None:
-        """Atomic checkpoint (tmp + rename): graph, vectors, quantizer."""
+        """Atomic checkpoint (tmp + rename): graph, vectors, quantizer.
+
+        The tmp name always carries the ".npz" suffix np.savez would
+        otherwise append implicitly, so the final os.replace is
+        deterministic (no exists() race on the suffixed name).
+        """
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = path + ".tmp"
+        tmp = path + ".tmp.npz"
         arrays = {
             "vectors": np.asarray(self.vectors),
             "adjacency": np.asarray(self.graph.adjacency),
@@ -267,7 +307,7 @@ class JasperIndex:
         }
         if self.rabitq_codes is not None:
             arrays |= {
-                "rq_codes": np.asarray(self.rabitq_codes.codes),
+                "rq_packed": np.asarray(self.rabitq_codes.packed),
                 "rq_add": np.asarray(self.rabitq_codes.data_add),
                 "rq_rescale": np.asarray(self.rabitq_codes.data_rescale),
                 "rq_rotation": np.asarray(self.rabitq_params.rotation),
@@ -280,8 +320,7 @@ class JasperIndex:
             "mips_max_sqnorm": self._mips_max_sqnorm,
         }
         np.savez(tmp, **arrays)
-        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp,
-                   path)
+        os.replace(tmp, path)
         with open(path + ".meta.json", "w") as f:
             json.dump(meta, f)
 
@@ -301,12 +340,21 @@ class JasperIndex:
             adjacency=jnp.asarray(data["adjacency"]),
             n_valid=jnp.asarray(data["n_valid"]),
             medoid=jnp.asarray(data["medoid"]))
-        if meta["quantization"] == "rabitq" and "rq_codes" in data:
+        has_codes = "rq_packed" in data or "rq_codes" in data
+        if meta["quantization"] == "rabitq" and has_codes:
             idx.rabitq_params = RaBitQParams(
                 rotation=jnp.asarray(data["rq_rotation"]),
                 centroid=jnp.asarray(data["rq_centroid"]), bits=meta["bits"])
+            if "rq_packed" in data:
+                packed = jnp.asarray(data["rq_packed"])
+            else:
+                # legacy checkpoint with unpacked uint8[N, D] codes:
+                # pack on load so the resident form is canonical
+                packed = pack_codes(jnp.asarray(data["rq_codes"]),
+                                    meta["bits"])
             idx.rabitq_codes = RaBitQCodes(
-                codes=jnp.asarray(data["rq_codes"]),
+                packed=packed,
                 data_add=jnp.asarray(data["rq_add"]),
-                data_rescale=jnp.asarray(data["rq_rescale"]))
+                data_rescale=jnp.asarray(data["rq_rescale"]),
+                bits=meta["bits"], dims=idx.store_dims)
         return idx

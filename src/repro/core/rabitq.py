@@ -31,9 +31,12 @@ first principles and validate the O(1/sqrt(D)) error bound in tests).
 TPU adaptation (DESIGN.md §2): the GPU implementation exploits sequential
 16-byte loads; on TPU the estimator inner product <codes, q_rot> over a tile
 of candidates IS a matmul (C_tile x D) @ (D x Q_tile) and runs on the MXU —
-see kernels/rabitq_dot. Codes are stored bit-packed (pack_codes) for the
-8x/4x/2x memory-footprint reduction and unpacked in-kernel with shift/mask
-VPU ops (the TPU analogue of the paper's in-warp bit arithmetic).
+see kernels/rabitq_dot. The PACKED form (pack_codes) is the canonical
+device-resident representation: RaBitQCodes stores uint8[N, ceil(D*m/8)]
+and nothing wider, so the 8x/4x/2x memory-footprint reduction the paper
+reports is what actually sits in HBM. Consumers either unpack on the fly
+(jnp reference paths) or unpack in-kernel with shift/mask VPU ops (the TPU
+analogue of the paper's in-warp bit arithmetic).
 """
 
 from __future__ import annotations
@@ -70,18 +73,37 @@ class RaBitQParams:
         return self.rotation.shape[0]
 
 
-class RaBitQCodes(NamedTuple):
-    """Per-vector quantized storage.
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("packed", "data_add", "data_rescale"),
+         meta_fields=("bits", "dims"))
+@dataclass(frozen=True)
+class RaBitQCodes:
+    """Per-vector quantized storage — packed codes are canonical.
 
-    codes:        uint8[N, D]  integer codes in [0, 2^m - 1] (unpacked form;
-                  use pack_codes for the wire/HBM representation)
+    packed:       uint8[N, ceil(D*bits/8)]  bit-packed integer codes (the
+                  only full-width device array; see pack_codes for layout)
     data_add:     f32[N]
     data_rescale: f32[N]
+    bits / dims:  pytree metadata (static python ints under jit)
     """
 
-    codes: Array
+    packed: Array
     data_add: Array
     data_rescale: Array
+    bits: int
+    dims: int
+
+    def unpacked(self) -> Array:
+        """Transient uint8[N, D] view (materialized on demand, never stored)."""
+        return unpack_codes(self.packed, self.bits, self.dims)
+
+    def gather_unpacked(self, ids: Array) -> Array:
+        """Gather rows in packed form, then unpack: ids[...] -> uint8[..., D].
+
+        The gather moves ceil(D*bits/8) bytes per row — the sequential-load
+        win the paper measures — and the unpack is cheap VPU shift/mask work.
+        """
+        return unpack_codes(self.packed[ids], self.bits, self.dims)
 
 
 class RaBitQQuery(NamedTuple):
@@ -132,15 +154,19 @@ def _encode(vectors: Array, rotation: Array, centroid: Array, bits: int) -> RaBi
     ip = jnp.sum(o_bar * o, axis=-1)                     # <o_bar, o>
     rescale = -2.0 * norm * delta / jnp.where(jnp.abs(ip) > _EPS, ip, 1.0)
     rescale = jnp.where(norm > _EPS, rescale, 0.0)
+    # encode -> pack fused under one jit: the unpacked uint8[N, D] form is a
+    # transient value inside this trace, never a resident buffer
     return RaBitQCodes(
-        codes=u.astype(jnp.uint8),
+        packed=pack_codes(u.astype(jnp.uint8), bits),
         data_add=norm2,
         data_rescale=rescale,
+        bits=bits,
+        dims=vectors.shape[1],
     )
 
 
 def rabitq_encode(params: RaBitQParams, vectors: Array) -> RaBitQCodes:
-    """Quantize (N, D) vectors -> codes + metadata."""
+    """Quantize (N, D) vectors -> packed codes + metadata."""
     return _encode(vectors, params.rotation, params.centroid, params.bits)
 
 
@@ -171,12 +197,13 @@ def rabitq_estimate(codes: RaBitQCodes, query: RaBitQQuery,
     brute-force rerank and tests).
     """
     if candidate_ids is None:
-        dot = query.q_rot @ codes.codes.astype(jnp.float32).T     # (Q, N)
+        dot = query.q_rot @ codes.unpacked().astype(jnp.float32).T  # (Q, N)
         add = codes.data_add[None, :]
         rsc = codes.data_rescale[None, :]
     else:
         safe = jnp.maximum(candidate_ids, 0)
-        c = codes.codes[safe].astype(jnp.float32)                 # (Q, K, D)
+        # gather PACKED rows (the bytes that actually move), unpack after
+        c = codes.gather_unpacked(safe).astype(jnp.float32)         # (Q, K, D)
         dot = jnp.einsum("qkd,qd->qk", c, query.q_rot)
         add = codes.data_add[safe]
         rsc = codes.data_rescale[safe]
@@ -195,31 +222,33 @@ def packed_dim(dims: int, bits: int) -> int:
 
 
 def pack_codes(codes: Array, bits: int) -> Array:
-    """uint8[N, D] (values < 2^m) -> uint8[N, ceil(D*m/8)].
+    """uint8[..., D] (values < 2^m) -> uint8[..., ceil(D*m/8)].
 
     Little-endian within each byte: code j of a byte occupies bits
-    [j*m, (j+1)*m). D is zero-padded to a multiple of (8//m).
+    [j*m, (j+1)*m). D is zero-padded to a multiple of (8//m). Leading
+    dimensions are preserved (rows pack independently).
     """
     if bits not in SUPPORTED_BITS:
         raise ValueError(f"bits must be one of {SUPPORTED_BITS}")
     cpb = 8 // bits
-    n, d = codes.shape
+    d = codes.shape[-1]
     d_pad = packed_dim(d, bits) * cpb
-    c = jnp.pad(codes, ((0, 0), (0, d_pad - d))).astype(jnp.uint32)
-    c = c.reshape(n, d_pad // cpb, cpb)
-    shifts = (jnp.arange(cpb, dtype=jnp.uint32) * bits)[None, None, :]
+    widths = [(0, 0)] * (codes.ndim - 1) + [(0, d_pad - d)]
+    c = jnp.pad(codes, widths).astype(jnp.uint32)
+    c = c.reshape(*codes.shape[:-1], d_pad // cpb, cpb)
+    shifts = jnp.arange(cpb, dtype=jnp.uint32) * bits
     packed = jnp.sum(c << shifts, axis=-1)
     return packed.astype(jnp.uint8)
 
 
 def unpack_codes(packed: Array, bits: int, dims: int) -> Array:
-    """Inverse of pack_codes -> uint8[N, dims]."""
+    """Inverse of pack_codes -> uint8[..., dims] (leading dims preserved)."""
     cpb = 8 // bits
     mask = jnp.uint32(2**bits - 1)
-    p = packed.astype(jnp.uint32)[:, :, None]
-    shifts = (jnp.arange(cpb, dtype=jnp.uint32) * bits)[None, None, :]
+    p = packed.astype(jnp.uint32)[..., None]
+    shifts = jnp.arange(cpb, dtype=jnp.uint32) * bits
     u = (p >> shifts) & mask
-    u = u.reshape(packed.shape[0], -1)[:, :dims]
+    u = u.reshape(*packed.shape[:-1], -1)[..., :dims]
     return u.astype(jnp.uint8)
 
 

@@ -21,8 +21,8 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-_INF = jnp.float32(jnp.inf)
-_BIG_ID = jnp.int32(2**30)
+_INF = float("inf")
+_BIG_ID = 2**30
 
 
 class PruneResult(NamedTuple):

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-INVALID = jnp.int32(-1)
+INVALID = -1  # python int: safe to create at import time under any trace
 
 
 class VamanaGraph(NamedTuple):

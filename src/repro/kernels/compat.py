@@ -1,0 +1,15 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+The kernels target the current `pltpu.CompilerParams` spelling; older jax
+releases (<= 0.4.x) expose the same dataclass as `TPUCompilerParams`.
+Resolving the name here keeps every kernel module importable (and its
+tests runnable in interpret mode) on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

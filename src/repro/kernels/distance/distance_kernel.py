@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 Array = jax.Array
 
 
@@ -73,7 +75,7 @@ def pairwise_l2_pallas(q: Array, x: Array, qsq: Array, xsq: Array, *,
         out_specs=pl.BlockSpec((block_q, block_c), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qn, cn), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_q, block_c), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, x, qsq.reshape(-1, 1), xsq.reshape(-1, 1))
@@ -147,7 +149,7 @@ def gather_l2_chunked_pallas(q: Array, cand: Array, cand_sq: Array, *,
         ],
         out_specs=pl.BlockSpec((block_q, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((qn, k), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(q, qsq, cand, cand_sq)

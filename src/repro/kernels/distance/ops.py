@@ -20,7 +20,7 @@ from repro.kernels.distance.distance_kernel import (
 
 Array = jax.Array
 
-_INF = jnp.float32(jnp.inf)
+_INF = float("inf")
 
 
 def _auto_interpret() -> bool:
@@ -113,4 +113,6 @@ def make_kernel_scorer(vectors: Array, queries: Array, n_valid: Array,
         masked = jnp.where(in_range, ids, -1)
         return fn(queries, v, vec_sqnorm, masked, interpret=interpret)
 
+    # gather wrappers return +inf for masked ids; beam_search skips its pass
+    score.self_masking = True
     return score

@@ -7,15 +7,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.rabitq import RaBitQCodes, RaBitQQuery, pack_codes
+from repro.core.rabitq import RaBitQCodes, RaBitQQuery
 from repro.kernels.rabitq_dot.rabitq_kernel import (
     rabitq_distance_pallas,
     rabitq_gather_distance_pallas,
+    rabitq_search_step_pallas,
 )
 
 Array = jax.Array
-
-_INF = jnp.float32(jnp.inf)
 
 
 def _auto_interpret() -> bool:
@@ -90,22 +89,58 @@ def rabitq_gather_distance(cand_packed: Array, cand_add: Array,
     return out[:qn]
 
 
+@partial(jax.jit, static_argnames=("bits", "block_q", "interpret"))
+def rabitq_search_step(cand_packed: Array, cand_add: Array,
+                       cand_rescale: Array, ids: Array, n_valid: Array,
+                       q_rot: Array, query_add: Array, query_sumq: Array, *,
+                       bits: int, block_q: int = 8,
+                       interpret: bool | None = None) -> Array:
+    """Fused search-step: (Q, K, P) gathered codes + raw beam ids -> (Q, K)
+    estimates with invalid-id masking fused into the kernel epilogue."""
+    if interpret is None:
+        interpret = _auto_interpret()
+    qn, k, p = cand_packed.shape
+    cpb = 8 // bits
+    p_pad = _pad_to(cand_packed, 128, 2)
+    d_need = p_pad.shape[2] * cpb
+    q_pad = q_rot.astype(jnp.float32)
+    if q_pad.shape[1] < d_need:
+        q_pad = jnp.pad(q_pad, ((0, 0), (0, d_need - q_pad.shape[1])))
+    out = rabitq_search_step_pallas(
+        _pad_to(p_pad, block_q, 0),
+        _pad_to(cand_add, block_q, 0),
+        _pad_to(cand_rescale, block_q, 0),
+        _pad_to(ids.astype(jnp.int32), block_q, 0, value=-1),
+        jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
+        _pad_to(q_pad, block_q, 0),
+        _pad_to(query_add, block_q, 0),
+        _pad_to(query_sumq, block_q, 0),
+        bits=bits, block_q=block_q, interpret=interpret)
+    return out[:qn]
+
+
 def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
-                              bits: int, n_valid: Array,
+                              n_valid: Array,
                               interpret: bool | None = None):
-    """Beam-search ScoreFn: bulk-gather candidate code rows (chunked-load
-    strategy), then one fused unpack+dot+epilogue kernel per query tile."""
-    packed = pack_codes(codes.codes, bits)           # (N, P)
+    """Beam-search ScoreFn over the canonical PACKED codes.
+
+    Bulk-gathers candidate code rows in packed form (chunked-load strategy:
+    ceil(D*bits/8) + 8 bytes per candidate instead of 4*D), then runs one
+    fused unpack + estimator + masking-epilogue kernel per query tile. No
+    re-packing ever happens — codes.packed is the HBM-resident array.
+    """
+    packed = codes.packed                            # (N, P) — canonical
 
     def score(ids: Array) -> Array:
-        in_range = (ids >= 0) & (ids < n_valid)
-        safe = jnp.maximum(jnp.where(in_range, ids, 0), 0)
+        safe = jnp.maximum(ids, 0)
         cand = packed[safe]                          # (Q, K, P) bulk gather
         dadd = codes.data_add[safe]
         drs = codes.data_rescale[safe]
-        out = rabitq_gather_distance(cand, dadd, drs, query.q_rot,
-                                     query.query_add, query.query_sumq,
-                                     bits=bits, interpret=interpret)
-        return jnp.where(in_range, out, _INF)
+        return rabitq_search_step(cand, dadd, drs, ids, n_valid,
+                                  query.q_rot, query.query_add,
+                                  query.query_sumq, bits=codes.bits,
+                                  interpret=interpret)
 
+    # masking happens in the kernel epilogue; beam_search skips its own pass
+    score.self_masking = True
     return score

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 Array = jax.Array
 
 
@@ -66,6 +68,29 @@ def _rabitq_gather_kernel(q_ref, qadd_ref, qsum_ref, codes_ref, dadd_ref,
     o_ref[...] = jnp.maximum(est, 0.0)
 
 
+def _rabitq_search_step_kernel(nvalid_ref, q_ref, qadd_ref, qsum_ref,
+                               ids_ref, codes_ref, dadd_ref, drs_ref,
+                               o_ref, *, bits: int):
+    """Fused search step: unpack + estimator + epilogue masking.
+
+    Same math as _rabitq_gather_kernel, plus the beam-search validity mask
+    (ids >= 0 and ids < n_valid -> else +inf) fused into the epilogue so no
+    separate jnp masking pass runs over the (Q, K) output. n_valid arrives
+    as a scalar in SMEM.
+    """
+    tq, k, p = codes_ref.shape
+    codes = _unpack_tile(codes_ref[...].reshape(tq * k, p), bits)
+    codes = codes.reshape(tq, k, -1)                 # (TQ, K, D)
+    dot = jax.lax.dot_general(
+        codes, q_ref[...], (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (TQ, K)
+    est = dadd_ref[...] + qadd_ref[...] + drs_ref[...] * (dot - qsum_ref[...])
+    ids = ids_ref[...]
+    valid = (ids >= 0) & (ids < nvalid_ref[0])
+    o_ref[...] = jnp.where(valid, jnp.maximum(est, 0.0),
+                           jnp.float32(jnp.inf))
+
+
 def rabitq_gather_distance_pallas(cand_packed: Array, cand_add: Array,
                                   cand_rescale: Array, q_rot: Array,
                                   query_add: Array, query_sumq: Array, *,
@@ -93,11 +118,49 @@ def rabitq_gather_distance_pallas(cand_packed: Array, cand_add: Array,
         ],
         out_specs=pl.BlockSpec((block_q, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((qn, k), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(q_rot, query_add.reshape(-1, 1), query_sumq.reshape(-1, 1),
       cand_packed, cand_add, cand_rescale)
+
+
+def rabitq_search_step_pallas(cand_packed: Array, cand_add: Array,
+                              cand_rescale: Array, ids: Array,
+                              n_valid: Array, q_rot: Array,
+                              query_add: Array, query_sumq: Array, *,
+                              bits: int, block_q: int = 8,
+                              interpret: bool = False) -> Array:
+    """Fused search-step form: gather tiles + raw beam ids + n_valid.
+
+    cand_packed: (Q, K, P) uint8; ids: (Q, K) int32 (may contain -1 /
+    out-of-range); n_valid: (1, 1) int32 -> (Q, K) estimates with invalid
+    candidates already masked to +inf in the kernel epilogue.
+    """
+    qn, k, p = cand_packed.shape
+    d = q_rot.shape[1]
+    assert p * (8 // bits) == d, (p, bits, d)
+    grid = (qn // block_q,)
+    return pl.pallas_call(
+        functools.partial(_rabitq_search_step_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qn, k), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(n_valid.reshape(-1), q_rot, query_add.reshape(-1, 1),
+      query_sumq.reshape(-1, 1), ids, cand_packed, cand_add, cand_rescale)
 
 
 def rabitq_distance_pallas(packed: Array, data_add: Array, data_rescale: Array,
@@ -127,7 +190,7 @@ def rabitq_distance_pallas(packed: Array, data_add: Array, data_rescale: Array,
         ],
         out_specs=pl.BlockSpec((block_q, block_c), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((qn, cn), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(q_rot, query_add.reshape(-1, 1), query_sumq.reshape(-1, 1),

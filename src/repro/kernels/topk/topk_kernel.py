@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 Array = jax.Array
 
 
@@ -65,7 +67,7 @@ def topk_pallas(dists: Array, ids: Array, k: int, *, block_q: int = 8,
             jax.ShapeDtypeStruct((qn, k), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((block_q, c), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(dists, ids)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ANNS_DATASETS
 from repro.core.beam_search import beam_search, make_exact_scorer
 from repro.core.rabitq import RaBitQCodes, RaBitQQuery
@@ -55,15 +56,16 @@ def _local_search_exact(vectors, vec_sqnorm, adjacency, n_valid, medoid,
 
 def _local_search_rabitq(codes, data_add, data_rescale, adjacency, n_valid,
                          medoid, q_rot, query_add, query_sumq, *,
-                         row_axes, cap, k, bits=None, dims=None):
+                         row_axes, cap, k, bits, dims, fused=False):
     from repro.core.beam_search import make_rabitq_scorer
     graph = VamanaGraph(adjacency=adjacency, n_valid=n_valid[0],
                         medoid=medoid[0])
     rq = RaBitQQuery(q_rot=q_rot, query_add=query_add, query_sumq=query_sumq)
-    if bits is None:
+    if not fused:
+        # composable jnp estimator over the canonical PACKED codes
         score = make_rabitq_scorer(
-            RaBitQCodes(codes=codes, data_add=data_add,
-                        data_rescale=data_rescale), rq)
+            RaBitQCodes(packed=codes, data_add=data_add,
+                        data_rescale=data_rescale, bits=bits, dims=dims), rq)
     else:
         # PACKED codes (rows, D*bits/8): HBM reads shrink by 8/bits vs the
         # unpacked uint8 path and 4*8/bits vs f32 exact — the unpack is
@@ -138,7 +140,7 @@ def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
             "vec_sqnorm": jax.ShapeDtypeStruct((rows,), f32),
             "queries": jax.ShapeDtypeStruct((n_queries, d), f32),
         }
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda v, sq, a, nv, m, q: _local_search_exact(
                 v, sq, a, nv, m, q, row_axes=row_axes, cap=cap, k=K),
             mesh=mesh,
@@ -154,8 +156,10 @@ def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
                      NamedSharding(mesh, sc_spec),
                      NamedSharding(mesh, q_spec))
     elif variant in ("rabitq", "rabitq_packed"):
-        packed = variant == "rabitq_packed"
-        p_dim = (d * bits + 7) // 8 if packed else d
+        fused = variant == "rabitq_packed"
+        # packed codes are the canonical HBM form for BOTH variants; the
+        # variants differ only in scorer (composable jnp vs hand-fused)
+        p_dim = (d * bits + 7) // 8
         structs |= {
             "codes": jax.ShapeDtypeStruct((rows, p_dim), jnp.uint8),
             "data_add": jax.ShapeDtypeStruct((rows,), f32),
@@ -164,11 +168,11 @@ def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
             "query_add": jax.ShapeDtypeStruct((n_queries,), f32),
             "query_sumq": jax.ShapeDtypeStruct((n_queries,), f32),
         }
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda c, da, dr, a, nv, m, qr, qa, qs: _local_search_rabitq(
                 c, da, dr, a, nv, m, qr, qa, qs,
                 row_axes=row_axes, cap=cap, k=K,
-                bits=bits if packed else None, dims=d),
+                bits=bits, dims=d, fused=fused),
             mesh=mesh,
             in_specs=(row_spec, sc_spec, sc_spec, row_spec, sc_spec, sc_spec,
                       q_spec, q1_spec, q1_spec),
@@ -201,7 +205,7 @@ def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
                 gdists = -neg2
                 gids = jnp.take_along_axis(gi, pos, axis=1)
             return gids, gdists
-        fn = jax.shard_map(
+        fn = shard_map(
             bf, mesh=mesh,
             in_specs=(row_spec, sc_spec, sc_spec, q_spec),
             out_specs=(q_spec, q_spec), check_vma=False)

@@ -24,7 +24,7 @@ from repro.models.sharding_ctx import constrain, shard_count
 
 Array = jax.Array
 
-_NEG = jnp.float32(-1e30)
+_NEG = -1e30
 
 
 def attention_init(key, cfg: ModelConfig) -> dict:

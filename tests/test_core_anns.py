@@ -188,11 +188,31 @@ def test_save_load_roundtrip(tmp_path, built_index):
     idx, _ = built_index
     p = str(tmp_path / "idx.npz")
     idx.save(p)
+    # atomic checkpoint: exactly the final file + meta, no stray tmp
+    assert sorted(x.name for x in tmp_path.iterdir()) == [
+        "idx.npz", "idx.npz.meta.json"]
     idx2 = JasperIndex.load(p)
     q = randn(10, 48)
     i1, d1 = idx.search(q, 5, beam_width=32)
     i2, d2 = idx2.search(q, 5, beam_width=32)
     assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+def test_save_load_roundtrip_quantized(tmp_path, built_index):
+    """The packed quantizer state survives save/load bit-exactly."""
+    idx, _ = built_index
+    p = str(tmp_path / "q.npz")
+    idx.save(p)
+    idx2 = JasperIndex.load(p)
+    assert (np.asarray(idx2.rabitq_codes.packed)
+            == np.asarray(idx.rabitq_codes.packed)).all()
+    assert idx2.rabitq_codes.bits == idx.rabitq_codes.bits
+    q = randn(10, 48)
+    i1, d1 = idx.search_rabitq(q, 5, beam_width=32)
+    i2, d2 = idx2.search_rabitq(q, 5, beam_width=32)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_beam_search_visited_log(built_index):
@@ -243,6 +263,83 @@ def test_kernel_backed_search_matches_jnp(built_index):
     assert (np.asarray(i1) == np.asarray(i2)).all()
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
                                rtol=1e-4, atol=1e-3)
+
+
+def test_rabitq_codes_packed_resident(built_index):
+    """Packed codes are the ONLY full-width code array after build/insert."""
+    from repro.core.rabitq import packed_dim
+    idx, _ = built_index
+    c = idx.rabitq_codes
+    assert c.packed.shape == (idx.capacity, packed_dim(idx.store_dims, 4))
+    assert c.packed.dtype == jnp.uint8
+    # the dataclass holds no unpacked uint8[N, D] buffer
+    assert set(type(c).__dataclass_fields__) == {
+        "packed", "data_add", "data_rescale", "bits", "dims"}
+    stats = idx.memory_stats()
+    expected = (c.packed.shape[0] * c.packed.shape[1]   # packed codes
+                + 2 * 4 * idx.capacity)                 # two f32 metadata
+    assert stats["rabitq_resident_bytes"] == expected
+
+
+def test_rabitq_kernel_search_matches_jnp(built_index):
+    """search_rabitq(use_kernels=True) parity with the jnp estimator path."""
+    idx, _ = built_index
+    rng = np.random.default_rng(55)
+    q = jnp.asarray(rng.normal(size=(50, 48)), jnp.float32)
+    i1, d1 = idx.search_rabitq(q, 10, beam_width=48)
+    i2, d2 = idx.search_rabitq(q, 10, beam_width=48, use_kernels=True)
+    gt, _ = idx.brute_force(q, 10)
+
+    def rec(ids):
+        ids, g = np.asarray(ids), np.asarray(gt)
+        return np.mean([len(set(ids[i]) & set(g[i])) / 10
+                        for i in range(ids.shape[0])])
+    # same recall within the acceptance tolerance, near-identical frontiers
+    assert abs(rec(i1) - rec(i2)) <= 0.01, (rec(i1), rec(i2))
+    assert np.mean(np.asarray(i1) == np.asarray(i2)) > 0.95
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_rabitq_kernel_search_no_rerank(built_index):
+    """Kernel parity holds on the raw estimator frontier too (rerank off)."""
+    idx, _ = built_index
+    q = randn(12, 48)
+    i1, d1 = idx.search_rabitq(q, 10, beam_width=32, rerank=False)
+    i2, d2 = idx.search_rabitq(q, 10, beam_width=32, rerank=False,
+                               use_kernels=True)
+    assert np.mean(np.asarray(i1) == np.asarray(i2)) > 0.95
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_merge_strategies_equivalent(built_index):
+    """sort / topk / kernel merges select identical frontiers."""
+    idx, _ = built_index
+    q = randn(9, 48)
+    ids_ref, d_ref = idx.search(q, 10, beam_width=32, merge="sort")
+    for merge in ("topk", "kernel"):
+        ids, d = idx.search(q, 10, beam_width=32, merge=merge)
+        assert (np.asarray(ids) == np.asarray(ids_ref)).all(), merge
+        np.testing.assert_allclose(np.asarray(d), np.asarray(d_ref),
+                                   rtol=1e-6, err_msg=merge)
+    with pytest.raises(ValueError):
+        idx.search(q, 10, beam_width=32, merge="bogus")
+
+
+def test_rabitq_multi_expand(built_index):
+    """Quantized multi-expansion keeps recall (parity with exact expand)."""
+    idx, _ = built_index
+    rng = np.random.default_rng(66)
+    q = jnp.asarray(rng.normal(size=(40, 48)), jnp.float32)
+    gt, _ = idx.brute_force(q, 10)
+    i1, _ = idx.search_rabitq(q, 10, beam_width=48, expand=1)
+    i4, _ = idx.search_rabitq(q, 10, beam_width=48, expand=4)
+
+    def rec(ids):
+        ids, g = np.asarray(ids), np.asarray(gt)
+        return np.mean([len(set(ids[i]) & set(g[i])) / 10 for i in range(40)])
+    assert rec(i4) > rec(i1) - 0.05, (rec(i1), rec(i4))
 
 
 def test_multi_expand_search_api(built_index):

@@ -10,12 +10,25 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# prepended to every subprocess script: mesh construction compatible with
+# both current jax (explicit AxisType) and 0.4.x (no axis_types kwarg)
+PREAMBLE = """
+import jax
+def make_mesh(shape, axes):
+    try:
+        ats = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=ats)
+    except AttributeError:
+        return jax.make_mesh(shape, axes)
+"""
+
 
 def run_with_devices(script: str, n: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+    out = subprocess.run([sys.executable, "-c",
+                          PREAMBLE + textwrap.dedent(script)],
                          capture_output=True, text=True, env=env,
                          timeout=1200)
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
@@ -28,8 +41,7 @@ def test_sharded_index_build_search_insert():
         from repro.core.distributed import ShardedJasperIndex
         from repro.core.construction import ConstructionParams
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         rng = np.random.default_rng(0)
         N, D, Q = 4096, 32, 64
         data = rng.normal(size=(N, D)).astype(np.float32)
@@ -118,8 +130,7 @@ def test_compressed_psum_close_to_exact():
         from jax.sharding import PartitionSpec as P
         from repro.training.compression import compressed_psum
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         g = jnp.asarray(np.random.default_rng(0).normal(size=(8, 512)),
                         jnp.float32)
 
@@ -129,8 +140,9 @@ def test_compressed_psum_close_to_exact():
             return exact, approx
 
         keys = jax.random.split(jax.random.PRNGKey(0), 8)
-        fn = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
-                           out_specs=(P(), P()), check_vma=False)
+        from repro.compat import shard_map
+        fn = shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+                       out_specs=(P(), P()), check_vma=False)
         exact, approx = fn(g, keys)
         rel = float(jnp.max(jnp.abs(exact - approx))
                     / (jnp.max(jnp.abs(exact)) + 1e-9))
@@ -147,10 +159,8 @@ def test_checkpoint_reshards_across_mesh_shapes():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.training.checkpoint import save_checkpoint, restore_checkpoint
 
-        mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh1 = make_mesh((4, 2), ("data", "model"))
+        mesh2 = make_mesh((2, 4), ("data", "model"))
         x = jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)
         tree = {"w": jax.device_put(
             x, NamedSharding(mesh1, P("data", "model")))}
@@ -171,8 +181,7 @@ def test_collectives_counted_with_loop_multiplier():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.roofline.hlo_analyzer import analyze_hlo
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
 
         def body(x, w):
             y = x @ w
@@ -213,8 +222,7 @@ def test_compressed_dp_step_tracks_exact():
         cfg = dataclasses.replace(ARCHS["stablelm-1.6b"].reduced(),
                                   dtype="float32")
         opt = OptimizerConfig(peak_lr=1e-3, total_steps=20, warmup_steps=0)
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         step_c = make_dp_train_step_compressed(cfg, opt, mesh, compress=True)
         step_e = make_dp_train_step_compressed(cfg, opt, mesh, compress=False)
         # separate buffers: step donation would otherwise alias them

@@ -106,7 +106,7 @@ def test_rabitq_kernel_vs_ref(bits, q, n, d):
     params = rabitq_train(jax.random.PRNGKey(0), db, bits=bits)
     codes = rabitq_encode(params, db)
     qq = rabitq_preprocess_query(params, qv)
-    packed = pack_codes(codes.codes, bits)
+    packed = codes.packed                    # canonical — already packed
     ref = rabitq_distance_ref(packed, codes.data_add, codes.data_rescale,
                               qq.q_rot, qq.query_add, qq.query_sumq,
                               bits=bits, dims=d)
@@ -128,7 +128,7 @@ def test_rabitq_gather_kernel(bits):
     params = rabitq_train(jax.random.PRNGKey(1), db, bits=bits)
     codes = rabitq_encode(params, db)
     qq = rabitq_preprocess_query(params, qv)
-    packed = pack_codes(codes.codes, bits)
+    packed = codes.packed
     ids = jnp.asarray(RNG.integers(0, n, (q, k)), jnp.int32)
     out = rops.rabitq_gather_distance(
         packed[ids], codes.data_add[ids], codes.data_rescale[ids],
@@ -140,14 +140,54 @@ def test_rabitq_gather_kernel(bits):
     np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-3, atol=1e-2)
 
 
+@pytest.mark.parametrize("dims", [1, 3, 7, 33, 100, 129])
 @pytest.mark.parametrize("bits", [1, 2, 4, 8])
-def test_pack_unpack_roundtrip(bits):
+def test_pack_unpack_roundtrip(bits, dims):
+    """Round-trips across all SUPPORTED_BITS x odd/non-multiple dims."""
     codes = jnp.asarray(
-        RNG.integers(0, 2**bits, (13, 100)), jnp.uint8)
+        RNG.integers(0, 2**bits, (13, dims)), jnp.uint8)
     packed = pack_codes(codes, bits)
-    assert packed.shape[1] == int(np.ceil(100 * bits / 8))
-    un = unpack_codes(packed, bits, 100)
+    assert packed.shape[1] == int(np.ceil(dims * bits / 8))
+    un = unpack_codes(packed, bits, dims)
     assert (np.asarray(un) == np.asarray(codes)).all()
+
+
+@pytest.mark.parametrize("bits", [1, 4])
+def test_pack_unpack_leading_dims(bits):
+    """(Q, K, D) batches pack/unpack row-independently."""
+    codes = jnp.asarray(RNG.integers(0, 2**bits, (5, 7, 50)), jnp.uint8)
+    packed = pack_codes(codes, bits)
+    assert packed.shape == (5, 7, int(np.ceil(50 * bits / 8)))
+    un = unpack_codes(packed, bits, 50)
+    assert (np.asarray(un) == np.asarray(codes)).all()
+
+
+@pytest.mark.parametrize("bits", [1, 4, 8])
+def test_rabitq_search_step_kernel_masks_invalid(bits):
+    """Fused search-step kernel: estimator + in-kernel invalid-id masking."""
+    from repro.kernels.rabitq_dot.ref import rabitq_search_step_ref
+
+    n, d, q, k = 80, 96, 11, 13
+    n_valid = 60
+    db, qv = randn(n, d), randn(q, d)
+    params = rabitq_train(jax.random.PRNGKey(2), db, bits=bits)
+    codes = rabitq_encode(params, db)
+    qq = rabitq_preprocess_query(params, qv)
+    # ids include -1 (padding) and >= n_valid (stale graph edges)
+    ids = jnp.asarray(RNG.integers(-1, n, (q, k)), jnp.int32)
+    safe = jnp.maximum(ids, 0)
+    cand = codes.packed[safe]
+    out = rops.rabitq_search_step(
+        cand, codes.data_add[safe], codes.data_rescale[safe], ids,
+        jnp.int32(n_valid), qq.q_rot, qq.query_add, qq.query_sumq,
+        bits=bits)
+    ref = rabitq_search_step_ref(
+        cand, codes.data_add[safe], codes.data_rescale[safe], ids,
+        n_valid, qq.q_rot, qq.query_add, qq.query_sumq, bits=bits, dims=d)
+    mask = np.asarray((ids >= 0) & (ids < n_valid))
+    assert (np.isinf(np.asarray(out)) == ~mask).all()
+    np.testing.assert_allclose(np.asarray(out)[mask], np.asarray(ref)[mask],
+                               rtol=1e-3, atol=1e-2)
 
 
 # -------------------------------------------------------------------- topk

@@ -18,6 +18,12 @@ def _compile(fn, *args):
     return jax.jit(fn).lower(*args).compile()
 
 
+def _cost(compiled):
+    """cost_analysis() returns a dict on current jax, [dict] on older jax."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
 def test_flops_exact_on_scan_vs_unrolled():
     """Loop-corrected flops from the SCANNED program == unrolled truth."""
     def body(x, w):
@@ -28,7 +34,7 @@ def test_flops_exact_on_scan_vs_unrolled():
     c_s = _compile(lambda x, ws: jax.lax.scan(body, x, ws)[0], x, ws)
     c_u = _compile(lambda x, ws: jax.lax.scan(body, x, ws, unroll=True)[0],
                    x, ws)
-    truth = c_u.cost_analysis()["flops"]
+    truth = _cost(c_u)["flops"]
     assert analyze_hlo(c_s.as_text())["flops"] == pytest.approx(truth)
     assert analyze_hlo(c_u.as_text())["flops"] == pytest.approx(truth)
 
@@ -55,7 +61,7 @@ def test_bytes_close_to_xla_on_loop_free():
     a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
     c = _compile(f, a, a)
     ana = analyze_hlo(c.as_text())
-    xla = c.cost_analysis()["bytes accessed"]
+    xla = _cost(c)["bytes accessed"]
     assert ana["bytes_accessed"] == pytest.approx(xla, rel=0.5)
 
 
@@ -67,7 +73,7 @@ def test_cost_analysis_undercounts_loops():
     x = jax.ShapeDtypeStruct((64, 96), jnp.float32)
     ws = jax.ShapeDtypeStruct((8, 96, 96), jnp.float32)
     c = _compile(lambda x, ws: jax.lax.scan(body, x, ws)[0], x, ws)
-    raw = c.cost_analysis()["flops"]
+    raw = _cost(c)["flops"]
     corrected = analyze_hlo(c.as_text())["flops"]
     assert corrected > 5 * raw  # ~8x
 
