@@ -19,6 +19,7 @@ from benchmarks import (
     queries,
     roofline_anns,
     tiles,
+    updates,
 )
 from benchmarks.common import Csv
 
@@ -29,6 +30,9 @@ SECTIONS = {
     # paper Figs 6-7
     "incremental": lambda csv, fast: incremental.run(
         csv, n=4000 if fast else None),
+    # mutation engine: deletes/s, consolidation, recall vs churn
+    "updates": lambda csv, fast: updates.run(
+        csv, n=2000 if fast else None),
     # paper Fig 8
     "queries": lambda csv, fast: queries.run(
         csv, datasets=("bigann", "deep") if fast else

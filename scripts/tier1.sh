@@ -21,6 +21,9 @@ case "$mode" in
     # fast subset: the search/quantization hot path + kernel oracles
     python -m pytest -q -k "not slow" \
       tests/test_core_anns.py tests/test_kernels.py "$@"
+    # mutation-engine churn scenario end-to-end on synthetic data
+    # (insert/delete/consolidate interleaved through the serving loop)
+    python examples/streaming_updates.py --churn --quick
     ;;
   *)
     echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2

@@ -24,6 +24,14 @@ from repro.core.rabitq import (
     packed_bytes_per_vector,
 )
 from repro.core.pq import PQParams, pq_train, pq_encode, pq_distance
+from repro.core.mutations import (
+    MutationState,
+    bitmap_gather,
+    delete_rows,
+    init_mutation_state,
+    pack_bitmap,
+    unpack_bitmap,
+)
 from repro.core.vamana import VamanaGraph, init_graph, graph_degree_stats
 from repro.core.beam_search import (
     MERGE_STRATEGIES,
@@ -37,7 +45,7 @@ from repro.core.beam_search import (
     merge_frontier_topk,
 )
 from repro.core.robust_prune import robust_prune_batch
-from repro.core.construction import batch_insert, build_graph
+from repro.core.construction import batch_insert, batch_insert_at, build_graph
 from repro.core.index import JasperIndex
 
 __all__ = [
@@ -50,12 +58,14 @@ __all__ = [
     "rabitq_estimate", "pack_codes", "unpack_codes",
     "packed_dim", "packed_bytes_per_vector",
     "PQParams", "pq_train", "pq_encode", "pq_distance",
+    "MutationState", "init_mutation_state", "delete_rows",
+    "bitmap_gather", "pack_bitmap", "unpack_bitmap",
     "VamanaGraph", "init_graph", "graph_degree_stats",
     "MERGE_STRATEGIES", "BeamSearchResult",
     "beam_search", "beam_search_quantized",
     "make_exact_scorer", "make_rabitq_scorer",
     "merge_frontier_sort", "merge_frontier_topk", "merge_frontier_kernel",
     "robust_prune_batch",
-    "batch_insert", "build_graph",
+    "batch_insert", "batch_insert_at", "build_graph",
     "JasperIndex",
 ]

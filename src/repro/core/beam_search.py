@@ -141,7 +141,9 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 *, beam_width: int, max_iters: int,
                 fixed_trip: bool = False,
                 expand_per_iter: int = 1,
-                merge_strategy: str = "topk") -> BeamSearchResult:
+                merge_strategy: str = "topk",
+                tombstone_bits: Array | None = None,
+                traverse_deleted: bool = True) -> BeamSearchResult:
     """Run greedy beam search for a batch of queries.
 
     graph:      VamanaGraph (read-only snapshot — purity gives ParlayANN's
@@ -162,6 +164,15 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 pass), "sort" (reference full sort-merge), or "kernel"
                 (Pallas min-extraction top-k). All three select the same
                 frontier; see benchmarks/tiles.py for the A/B.
+    tombstone_bits: optional packed row bitmap (core.mutations). Tombstoned
+                ids are guaranteed absent from the returned frontier.
+    traverse_deleted: True (default) keeps tombstoned nodes walkable — they
+                occupy beam slots and their out-edges are followed, which
+                preserves connectivity between consolidations (FreshDiskANN
+                semantics); only the *final* frontier is filtered. False
+                masks them during scoring as well (fused into self-masking
+                kernel epilogues), the cheaper mode once `consolidate` has
+                repaired the graph around them.
     """
     if merge_strategy not in MERGE_STRATEGIES:
         raise ValueError(
@@ -171,6 +182,12 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
     # scorers that mask invalid ids to +inf themselves (fused kernel
     # epilogues) let the loop skip its jnp masking pass over (Q, E*R)
     self_masking = getattr(score_fn, "self_masking", False)
+    # exclude-mode tombstone masking for jnp scorers happens in the loop's
+    # own masking pass; self-masking scorers fold the bitmap in-kernel
+    exclude_in_body = (tombstone_bits is not None and not traverse_deleted
+                       and not self_masking)
+    if tombstone_bits is not None:
+        from repro.core.mutations import bitmap_gather  # lazy: no cycle
     adj = graph.adjacency
     n_valid = graph.n_valid
     degree = adj.shape[1]
@@ -244,6 +261,8 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
         in_range = (nbrs >= 0) & (nbrs < n_valid)
         dup = jnp.any(nbrs[:, :, None] == f_ids[:, None, :], axis=2)
         valid = in_range & ~dup
+        if exclude_in_body:
+            valid &= ~bitmap_gather(tombstone_bits, nbrs)
         nbrs = jnp.where(valid, nbrs, -1)
 
         d = score_fn(nbrs)                                 # (Q, E*R)
@@ -264,6 +283,14 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
         state = jax.lax.while_loop(cond, body, state)
 
     _, f_ids, f_dists, f_vis, vlog, vdlog, hops = state
+    if tombstone_bits is not None:
+        # returnability filter: tombstoned frontier entries drop to the
+        # tail as (+inf, -1) — searches NEVER return deleted ids, whatever
+        # the traversal mode was
+        dead = bitmap_gather(tombstone_bits, f_ids)
+        f_dists = jnp.where(dead, _INF, f_dists)
+        f_dists, f_ids = jax.lax.sort((f_dists, f_ids), dimension=1,
+                                      is_stable=True, num_keys=1)
     # mask unconverged +inf padding back to -1 ids
     f_ids = jnp.where(jnp.isfinite(f_dists), f_ids, -1)
     return BeamSearchResult(frontier_ids=f_ids, frontier_dists=f_dists,
@@ -278,6 +305,8 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                           expand_per_iter: int = 1,
                           use_kernels: bool = False,
                           merge_strategy: str = "topk",
+                          tombstone_bits: Array | None = None,
+                          traverse_deleted: bool = True,
                           interpret: bool | None = None) -> BeamSearchResult:
     """Beam search on RaBitQ estimated distances (Jasper RaBitQ).
 
@@ -287,21 +316,28 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
     read the same packed HBM bytes. expand_per_iter mirrors the exact
     path's multi-expansion (§Perf #C1).
 
+    tombstone_bits/traverse_deleted mirror `beam_search`; in exclude mode
+    the kernel path folds the bitmap into the search-step epilogue (one
+    byte-gather per candidate rides along with the packed-code gather).
+
     Optionally reranks the final frontier with exact distances — the standard
     RaBitQ recipe for recovering recall lost to the estimator.
     """
     if use_kernels:
         # deferred import: core stays importable without the kernels package
         from repro.kernels.rabitq_dot.ops import make_rabitq_kernel_scorer
-        score = make_rabitq_kernel_scorer(codes, query,
-                                          n_valid=graph.n_valid,
-                                          interpret=interpret)
+        score = make_rabitq_kernel_scorer(
+            codes, query, n_valid=graph.n_valid,
+            tombstone_bits=(None if traverse_deleted else tombstone_bits),
+            interpret=interpret)
     else:
         score = make_rabitq_scorer(codes, query)
     res = beam_search(graph, score, query.q_rot.shape[0],
                       beam_width=beam_width, max_iters=max_iters,
                       fixed_trip=fixed_trip, expand_per_iter=expand_per_iter,
-                      merge_strategy=merge_strategy)
+                      merge_strategy=merge_strategy,
+                      tombstone_bits=tombstone_bits,
+                      traverse_deleted=traverse_deleted)
     if rerank_score_fn is None:
         return res
     exact_d = rerank_score_fn(res.frontier_ids)

@@ -111,22 +111,50 @@ def _group_reverse_edges(dst: Array, src: Array, dist: Array, rev_cap: int
     return touched, in_ids, in_dists
 
 
-@partial(jax.jit, static_argnames=("batch_size", "params", "already_inserted"))
 def batch_insert(vectors: Array, graph: VamanaGraph, batch_start: Array,
                  *, batch_size: int, params: ConstructionParams,
                  already_inserted: bool = False,
                  vec_sqnorm: Array | None = None) -> VamanaGraph:
     """Insert vectors[batch_start : batch_start + batch_size] into the graph.
 
-    With already_inserted=True this is a REFINEMENT pass over existing
-    vertices (Vamana's second pass): n_valid does not advance and the point
-    may rediscover itself (pruned as a self-edge).
+    Contiguous-range wrapper over `batch_insert_at` (the common bulk-build
+    case). With already_inserted=True this is a REFINEMENT pass over
+    existing vertices (Vamana's second pass): n_valid does not advance and
+    the point may rediscover itself (pruned as a self-edge).
+    """
+    new_ids = batch_start + jnp.arange(batch_size, dtype=jnp.int32)
+    return batch_insert_at(vectors, graph, new_ids, params=params,
+                           already_inserted=already_inserted,
+                           vec_sqnorm=vec_sqnorm)
+
+
+@partial(jax.jit, static_argnames=("params", "already_inserted"))
+def batch_insert_at(vectors: Array, graph: VamanaGraph, new_ids: Array,
+                    *, params: ConstructionParams,
+                    already_inserted: bool = False,
+                    vec_sqnorm: Array | None = None,
+                    tombstone_bits: Array | None = None) -> VamanaGraph:
+    """Insert the (already written) rows `new_ids` into the graph.
+
+    new_ids need not be contiguous: the mutation subsystem reuses freed
+    slots, so a streaming batch is typically [reused ids..., tail ids...].
+    n_valid is the HIGH-WATER mark — it advances only past fresh tail ids.
+    Reused slots are unreachable in the snapshot (consolidation removed
+    every edge into them), so they cannot surface as their own candidates.
+
+    tombstone_bits: packed row bitmap (core.mutations) — tombstoned rows
+    stay traversable during candidate search but are excluded from every
+    pruned edge list, so new vertices never link to deleted ones.
     """
     r = params.degree_bound
     adj = graph.adjacency
     n_old = graph.n_valid
-    new_ids = batch_start + jnp.arange(batch_size, dtype=jnp.int32)
+    batch_size = new_ids.shape[0]
     queries = vectors[new_ids]
+    live = None
+    if tombstone_bits is not None:
+        from repro.core.mutations import unpack_bitmap  # lazy: no cycle
+        live = ~unpack_bitmap(tombstone_bits, adj.shape[0])
 
     # ---- Step 1: snapshot beam search ------------------------------------
     score = make_exact_scorer(vectors, queries, n_old, vec_sqnorm)
@@ -140,7 +168,7 @@ def batch_insert(vectors: Array, graph: VamanaGraph, batch_start: Array,
     # ---- Step 2: forward prune -------------------------------------------
     fwd = robust_prune_batch(vectors, new_ids, cand_ids, cand_dists, n_old,
                              degree_bound=r, alpha=params.alpha,
-                             chunk_size=params.prune_chunk)
+                             chunk_size=params.prune_chunk, live=live)
     adj = adj.at[new_ids].set(fwd.selected_ids)
 
     # ---- Step 3: reverse edges (full sort + batched prune) ----------------
@@ -155,16 +183,20 @@ def batch_insert(vectors: Array, graph: VamanaGraph, batch_start: Array,
     exist_dists = _adjacency_distances(vectors, touched, exist_rows,
                                        params.prune_chunk)
 
-    n_after = n_old if already_inserted else n_old + batch_size
+    # high-water mark: contiguous batches advance by B; slot-reusing batches
+    # advance only past the largest fresh tail id
+    n_after = (n_old if already_inserted
+               else jnp.maximum(n_old, jnp.max(new_ids) + 1))
     cand2_ids = jnp.concatenate([exist_rows, in_ids], axis=1)
     cand2_dists = jnp.concatenate([exist_dists, in_dists], axis=1)
     rev = robust_prune_batch(vectors, touched, cand2_ids, cand2_dists,
-                             jnp.int32(n_after), degree_bound=r,
-                             alpha=params.alpha, chunk_size=params.prune_chunk)
+                             n_after.astype(jnp.int32), degree_bound=r,
+                             alpha=params.alpha, chunk_size=params.prune_chunk,
+                             live=live)
     adj = adj.at[jnp.where(touched >= 0, touched, adj.shape[0])].set(
         rev.selected_ids, mode="drop")
 
-    return VamanaGraph(adjacency=adj, n_valid=jnp.int32(n_after),
+    return VamanaGraph(adjacency=adj, n_valid=n_after.astype(jnp.int32),
                        medoid=graph.medoid)
 
 

@@ -1,8 +1,21 @@
 """JasperIndex — the public facade tying graph, vectors, and quantization.
 
 Mirrors the paper's system surface: bulk build, streaming batch insertion
-(the "built for change" half), exact and RaBitQ-quantized search (the
-"quantized for speed" half), plus save/load for fault tolerance.
+AND batched deletion (the "built for change" half), exact and RaBitQ-
+quantized search (the "quantized for speed" half), plus save/load for fault
+tolerance.
+
+The full mutation lifecycle (core.mutations):
+
+    build/insert -> LIVE -> delete (tombstone) -> consolidate (graph repair,
+    slot freed) -> insert reuses the slot; capacity grows by buffer doubling
+    when the tail runs out (copy-extension only — packed codes, vec_sqnorm,
+    and adjacency never re-encode).
+
+Searches never return tombstoned ids: every search path filters its final
+frontier through the packed tombstone bitmap, and `traverse_deleted=False`
+additionally masks deleted rows inside the scoring epilogues (the cheap
+mode once `consolidate` has repaired the graph around them).
 
 The class is a thin host-side shell: every hot path is a jit'd pure
 function over capacity-allocated device arrays, so streaming inserts never
@@ -14,7 +27,8 @@ from __future__ import annotations
 
 import json
 import os
-from dataclasses import asdict
+import warnings
+from dataclasses import asdict, replace
 from functools import partial
 
 import jax
@@ -26,12 +40,27 @@ from repro.core.beam_search import (
     beam_search_quantized,
     make_exact_scorer,
 )
-from repro.core.construction import ConstructionParams, batch_insert, build_graph
+from repro.core.construction import (
+    ConstructionParams,
+    batch_insert_at,
+    build_graph,
+)
 from repro.core.distances import (
     mips_augment_data,
     mips_augment_query,
     pairwise_l2_squared,
 )
+from repro.core.mutations import (
+    MutationState,
+    consolidate as consolidate_graph,
+    delete_rows,
+    grow_rows,
+    grow_state,
+    init_mutation_state,
+    take_free_slots,
+    unpack_bitmap,
+)
+from repro.core.pq import make_pq_scorer, pq_encode, pq_train
 from repro.core.rabitq import (
     RaBitQCodes,
     RaBitQParams,
@@ -46,30 +75,38 @@ from repro.core.vamana import VamanaGraph, init_graph
 
 Array = jax.Array
 
+_INF = float("inf")
+
 
 @partial(jax.jit, static_argnames=("k", "beam_width", "max_iters",
-                                   "expand", "use_kernels", "merge"))
-def _search_exact(vectors, vec_sqnorm, graph, queries, *, k, beam_width,
-                  max_iters, expand=1, use_kernels=False, merge="topk"):
+                                   "expand", "use_kernels", "merge",
+                                   "traverse_deleted"))
+def _search_exact(vectors, vec_sqnorm, graph, tomb_bits, queries, *, k,
+                  beam_width, max_iters, expand=1, use_kernels=False,
+                  merge="topk", traverse_deleted=True):
     if use_kernels:
         # Pallas gather-distance kernel path (chunked-load strategy);
         # interpret mode on CPU, Mosaic on TPU
         from repro.kernels.distance.ops import make_kernel_scorer
-        score = make_kernel_scorer(vectors, queries, graph.n_valid,
-                                   vec_sqnorm)
+        score = make_kernel_scorer(
+            vectors, queries, graph.n_valid, vec_sqnorm,
+            tombstone_bits=(None if traverse_deleted else tomb_bits))
     else:
         score = make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
     res = beam_search(graph, score, queries.shape[0],
                       beam_width=beam_width, max_iters=max_iters,
-                      expand_per_iter=expand, merge_strategy=merge)
+                      expand_per_iter=expand, merge_strategy=merge,
+                      tombstone_bits=tomb_bits,
+                      traverse_deleted=traverse_deleted)
     return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
 
 
 @partial(jax.jit, static_argnames=("k", "beam_width", "max_iters", "rerank",
-                                   "expand", "use_kernels", "merge"))
-def _search_rabitq(vectors, vec_sqnorm, graph, codes, rparams, queries, *,
-                   k, beam_width, max_iters, rerank, expand=1,
-                   use_kernels=False, merge="topk"):
+                                   "expand", "use_kernels", "merge",
+                                   "traverse_deleted"))
+def _search_rabitq(vectors, vec_sqnorm, graph, codes, rparams, tomb_bits,
+                   queries, *, k, beam_width, max_iters, rerank, expand=1,
+                   use_kernels=False, merge="topk", traverse_deleted=True):
     q = rabitq_preprocess_query(rparams, queries)
     rerank_fn = (make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
                  if rerank else None)
@@ -77,14 +114,38 @@ def _search_rabitq(vectors, vec_sqnorm, graph, codes, rparams, queries, *,
                                 max_iters=max_iters, rerank_score_fn=rerank_fn,
                                 expand_per_iter=expand,
                                 use_kernels=use_kernels,
-                                merge_strategy=merge)
+                                merge_strategy=merge,
+                                tombstone_bits=tomb_bits,
+                                traverse_deleted=traverse_deleted)
     return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
 
 
+@partial(jax.jit, static_argnames=("k", "beam_width", "max_iters", "rerank",
+                                   "expand", "merge", "traverse_deleted"))
+def _search_pq(vectors, vec_sqnorm, graph, pparams, pcodes, tomb_bits,
+               queries, *, k, beam_width, max_iters, rerank, expand=1,
+               merge="topk", traverse_deleted=True):
+    score = make_pq_scorer(pparams, pcodes, queries)
+    res = beam_search(graph, score, queries.shape[0],
+                      beam_width=beam_width, max_iters=max_iters,
+                      expand_per_iter=expand, merge_strategy=merge,
+                      tombstone_bits=tomb_bits,
+                      traverse_deleted=traverse_deleted)
+    f_ids, f_dists = res.frontier_ids, res.frontier_dists
+    if rerank:
+        exact = make_exact_scorer(vectors, queries, graph.n_valid,
+                                  vec_sqnorm)(f_ids)
+        exact = jnp.where(f_ids >= 0, exact, _INF)
+        f_dists, f_ids = jax.lax.sort((exact, f_ids), dimension=1,
+                                      is_stable=True, num_keys=1)
+    return f_ids[:, :k], f_dists[:, :k], res.n_hops
+
+
 @partial(jax.jit, static_argnames=("k",))
-def _brute_force(vectors, vec_sqnorm, n_valid, queries, *, k):
+def _brute_force(vectors, vec_sqnorm, n_valid, tomb_bits, queries, *, k):
     d = pairwise_l2_squared(queries, vectors, vec_sqnorm)
-    mask = jnp.arange(vectors.shape[0]) < n_valid
+    cap = vectors.shape[0]
+    mask = (jnp.arange(cap) < n_valid) & ~unpack_bitmap(tomb_bits, cap)
     d = jnp.where(mask[None, :], d, jnp.inf)
     neg, ids = jax.lax.top_k(-d, k)
     return ids.astype(jnp.int32), -neg
@@ -99,8 +160,17 @@ class JasperIndex:
                  seed: int = 0):
         if metric not in ("l2", "mips"):
             raise ValueError(f"metric must be l2|mips, got {metric!r}")
-        if quantization not in (None, "rabitq"):
-            raise ValueError("quantization must be None or 'rabitq'")
+        if quantization not in (None, "rabitq", "pq"):
+            raise ValueError(
+                "quantization must be None, 'rabitq', or 'pq' "
+                "(explicit opt-in; PQ is deprecated)")
+        if quantization == "pq":
+            warnings.warn(
+                "quantization='pq' is the paper's NEGATIVE result: the "
+                "unpacked LUT-based PQ path scatters over memory and has no "
+                "kernel backing. It is kept only as a comparison baseline — "
+                "use quantization='rabitq' for the kernel-backed quantized "
+                "search path.", DeprecationWarning, stacklevel=2)
         self.dims = dims
         self.metric = metric
         # MIPS reduces to L2 with one augmented dimension (paper §6.3)
@@ -114,26 +184,105 @@ class JasperIndex:
         self.vectors = jnp.zeros((capacity, self.store_dims), dtype=jnp.float32)
         self.vec_sqnorm = jnp.zeros((capacity,), dtype=jnp.float32)
         self.graph: VamanaGraph = init_graph(capacity, self.params.degree_bound)
+        self.mut: MutationState = init_mutation_state(capacity)
         self.rabitq_params: RaBitQParams | None = None
         self.rabitq_codes: RaBitQCodes | None = None
+        self.pq_params = None
+        self.pq_codes: Array | None = None
         self._mips_max_sqnorm: float | None = None
 
     # ------------------------------------------------------------------ util
     @property
     def size(self) -> int:
-        return int(self.graph.n_valid)
+        """Number of LIVE rows (high-water mark minus tombstoned/freed)."""
+        return (int(self.graph.n_valid) - int(self.mut.n_deleted)
+                - int(self.mut.n_free))
+
+    @property
+    def generation(self) -> int:
+        """Monotonic mutation counter (bumped by insert/delete/consolidate/
+        grow) — serving layers stamp search results with it."""
+        return int(self.mut.generation)
+
+    @property
+    def n_deleted(self) -> int:
+        """Tombstoned-but-not-yet-consolidated rows."""
+        return int(self.mut.n_deleted)
+
+    @property
+    def deleted_fraction(self) -> float:
+        """Tombstone load factor — serving layers consolidate past a bound."""
+        n = int(self.graph.n_valid) - int(self.mut.n_free)
+        return int(self.mut.n_deleted) / n if n else 0.0
+
+    def live_mask(self) -> np.ndarray:
+        """bool[capacity] of currently live rows (host copy)."""
+        dense = np.asarray(unpack_bitmap(self.mut.tombstone_bits,
+                                         self.capacity))
+        return (np.arange(self.capacity) < int(self.graph.n_valid)) & ~dense
+
+    @property
+    def _active_tomb_bits(self) -> Array | None:
+        """Bitmap for the search paths — None while no bit can be set
+        (no tombstoned and no freed slots), so the delete-free workload
+        keeps the filter-free executables."""
+        if int(self.mut.n_deleted) == 0 and int(self.mut.n_free) == 0:
+            return None
+        return self.mut.tombstone_bits
 
     def _prep_data(self, x: np.ndarray | Array) -> Array:
         x = jnp.asarray(x, dtype=jnp.float32)
         if self.metric == "mips":
-            # Use a fixed global max-norm so streaming inserts stay consistent
+            # Use a fixed global max-norm so streaming inserts stay consistent;
+            # when a later batch RAISES the max, previously written rows are
+            # re-augmented in place (see _reaugment_mips) — otherwise their
+            # stale augmented coordinate silently corrupts the reduction.
             sq = jnp.sum(x * x, axis=-1)
             m2 = float(jnp.max(sq))
-            if self._mips_max_sqnorm is None or m2 > self._mips_max_sqnorm:
+            if self._mips_max_sqnorm is None:
                 self._mips_max_sqnorm = m2
+            elif m2 > self._mips_max_sqnorm:
+                old = self._mips_max_sqnorm
+                self._mips_max_sqnorm = m2
+                self._reaugment_mips(old, m2)
             extra = jnp.sqrt(jnp.maximum(self._mips_max_sqnorm - sq, 0.0))
             x = jnp.concatenate([x, extra[:, None]], axis=-1)
         return x
+
+    def _reaugment_mips(self, old_m2: float, new_m2: float) -> None:
+        """Re-augment all written rows after the global max-norm rose.
+
+        Every written row was augmented under old_m2 (this method maintains
+        that invariant inductively), so the update is closed-form on the
+        augmented coordinate: e' = sqrt(e^2 + delta), |row'|^2 = |row|^2 +
+        delta. Quantized codes re-encode from the updated vectors — the
+        rotation/centroid are dimension-state, not norm-state, so the
+        quantizer itself is untouched.
+        """
+        n = int(self.graph.n_valid)
+        if n == 0:
+            return
+        delta = new_m2 - old_m2
+        row = jnp.arange(self.capacity) < n
+        last = self.vectors[:, -1]
+        new_last = jnp.sqrt(last * last + delta)
+        self.vectors = self.vectors.at[:, -1].set(
+            jnp.where(row, new_last, last))
+        self.vec_sqnorm = jnp.where(row, self.vec_sqnorm + delta,
+                                    self.vec_sqnorm)
+        if self.rabitq_codes is not None:
+            # re-encode only the written prefix (n is a host int, so this
+            # is a static slice — the zero tail never hits the rotation)
+            enc = rabitq_encode(self.rabitq_params, self.vectors[:n])
+            c = self.rabitq_codes
+            self.rabitq_codes = RaBitQCodes(
+                packed=c.packed.at[:n].set(enc.packed),
+                data_add=c.data_add.at[:n].set(enc.data_add),
+                data_rescale=c.data_rescale.at[:n].set(enc.data_rescale),
+                bits=self.bits, dims=self.store_dims)
+        if self.pq_codes is not None:
+            enc = pq_encode(self.pq_params, self.vectors[:n])
+            self.pq_codes = self.pq_codes.at[:n].set(enc)
 
     def _prep_query(self, q: np.ndarray | Array) -> Array:
         q = jnp.asarray(q, dtype=jnp.float32)
@@ -141,8 +290,8 @@ class JasperIndex:
             q = mips_augment_query(q)
         return q
 
-    def _write_rows(self, start: int, rows: Array) -> None:
-        ids = start + jnp.arange(rows.shape[0], dtype=jnp.int32)
+    def _write_rows(self, ids: Array, rows: Array) -> None:
+        ids = jnp.asarray(ids, jnp.int32)
         self.vectors = self.vectors.at[ids].set(rows)
         self.vec_sqnorm = self.vec_sqnorm.at[ids].set(jnp.sum(rows * rows, axis=-1))
         if self.quantization == "rabitq":
@@ -167,64 +316,199 @@ class JasperIndex:
                 data_rescale=self.rabitq_codes.data_rescale.at[ids].set(
                     enc.data_rescale),
                 bits=self.bits, dims=self.store_dims)
+        elif self.quantization == "pq":
+            if self.pq_params is None:
+                for nsub in (16, 8, 4, 2, 1):
+                    if self.store_dims % nsub == 0:
+                        break
+                self.pq_params = pq_train(jax.random.PRNGKey(self.seed), rows,
+                                          n_subspaces=nsub)
+                self.pq_codes = jnp.zeros(
+                    (self.capacity, self.pq_params.n_subspaces), jnp.uint8)
+            self.pq_codes = self.pq_codes.at[ids].set(
+                pq_encode(self.pq_params, rows))
 
     # ------------------------------------------------------------- build/insert
     def build(self, data: np.ndarray | Array, *, refine: bool = False,
               progress_fn=None) -> "JasperIndex":
-        """Bulk construction over `data` (rows 0..N). Resets the graph."""
+        """Bulk construction over `data` (rows 0..N). Resets the graph and
+        all mutation state (the generation counter keeps advancing)."""
         x = self._prep_data(data)
         n = x.shape[0]
         if n > self.capacity:
             raise ValueError(f"data size {n} exceeds capacity {self.capacity}")
-        self._write_rows(0, x)
+        self.mut = replace(init_mutation_state(self.capacity),
+                           generation=self.mut.generation + 1)
+        self._write_rows(jnp.arange(n, dtype=jnp.int32), x)
         self.graph = build_graph(self.vectors, n, params=self.params,
                                  refine=refine, progress_fn=progress_fn)
         jax.block_until_ready(self.graph.adjacency)   # storage semantics
         return self
 
-    def insert(self, data: np.ndarray | Array) -> "JasperIndex":
-        """Streaming batch insertion ("built for change")."""
+    def _grow_to_fit(self, n_rows: int) -> None:
+        """Double capacity until n_rows fit (no-op when they already do)."""
+        if n_rows <= self.capacity:
+            return
+        new_cap = self.capacity
+        while n_rows > new_cap:
+            new_cap *= 2
+        self.grow(new_cap)
+
+    def _allocate_slots(self, b: int) -> np.ndarray:
+        """Claim b slot ids: freed slots first (ascending), then fresh tail
+        ids past the high-water mark; the capacity auto-doubles when the
+        tail runs out. Popped slots' tombstone bits are cleared."""
+        self.mut, reused = take_free_slots(self.mut, b)
+        fresh_needed = b - reused.size
+        hw = int(self.graph.n_valid)
+        self._grow_to_fit(hw + fresh_needed)
+        fresh = np.arange(hw, hw + fresh_needed, dtype=np.int32)
+        return np.concatenate([reused, fresh])
+
+    def insert(self, data: np.ndarray | Array) -> np.ndarray:
+        """Streaming batch insertion ("built for change").
+
+        Freed slots are reused before the tail advances; the index grows by
+        buffer doubling if the batch would overflow capacity. Returns the
+        assigned row ids, int32[B] (the ids searches will report).
+        """
+        if np.shape(data)[0] == 0:       # empty tick from a stream: no-op
+            return np.empty((0,), np.int32)
         x = self._prep_data(data)
         b = x.shape[0]
-        n = self.size
-        if n + b > self.capacity:
-            raise ValueError("capacity exceeded; allocate a larger index")
-        self._write_rows(n, x)
-        if n == 0:
+        if self.size == 0:
+            # empty index (fresh, or everything was deleted): a clean build
+            # over this batch beats stitching onto a dead graph
+            self._grow_to_fit(b)
+            self.mut = replace(init_mutation_state(self.capacity),
+                               generation=self.mut.generation + 1)
+            ids = np.arange(b, dtype=np.int32)
+            self._write_rows(jnp.asarray(ids), x)
             self.graph = build_graph(self.vectors, b, params=self.params)
-            return self
-        self.graph = batch_insert(self.vectors, self.graph, jnp.int32(n),
-                                  batch_size=b, params=self.params,
-                                  vec_sqnorm=self.vec_sqnorm)
+            jax.block_until_ready(self.graph.adjacency)
+            return ids
+        ids = self._allocate_slots(b)
+        ids_dev = jnp.asarray(ids, jnp.int32)
+        self._write_rows(ids_dev, x)
+        self.graph = batch_insert_at(self.vectors, self.graph, ids_dev,
+                                     params=self.params,
+                                     vec_sqnorm=self.vec_sqnorm,
+                                     tombstone_bits=self.mut.tombstone_bits)
+        self.mut = replace(self.mut, generation=self.mut.generation + 1)
         jax.block_until_ready(self.graph.adjacency)   # storage semantics
+        return ids
+
+    # ------------------------------------------------------------- delete/repair
+    def delete(self, ids) -> int:
+        """Batched tombstone delete. Returns the number of rows deleted.
+
+        O(1) graph work: rows are tombstoned in the packed bitmap, stay
+        traversable (their edges keep the graph connected) but are never
+        returned by any search. `consolidate()` later repairs the graph and
+        recycles the slots. Raises on ids that are not currently live.
+        """
+        ids_np = np.atleast_1d(np.asarray(ids)).astype(np.int64).ravel()
+        if ids_np.size == 0:
+            return 0
+        hw = int(self.graph.n_valid)
+        bad = ids_np[(ids_np < 0) | (ids_np >= hw)]
+        if bad.size:
+            raise ValueError(f"ids out of range [0, {hw}): {bad[:8].tolist()}")
+        # validate against the PACKED bytes (cap/8 host copy + per-id bit
+        # test) — never unpack the dense bitmap on the delete path
+        bits = np.asarray(self.mut.tombstone_bits)
+        dead = ids_np[((bits[ids_np >> 3] >> (ids_np & 7)) & 1) == 1]
+        if dead.size:
+            raise ValueError(
+                f"ids already deleted or freed: {dead[:8].tolist()}")
+        # pad to a power-of-two rung (-1 = ignored) so varying delete batch
+        # sizes reuse one executable per rung
+        rung = 1 << max(0, int(ids_np.size - 1).bit_length())
+        padded = np.full((rung,), -1, np.int32)
+        padded[:ids_np.size] = ids_np
+        self.mut, n = delete_rows(self.mut, jnp.asarray(padded),
+                                  self.graph.n_valid)
+        return int(n)
+
+    def consolidate(self, *, refine: bool = True) -> dict:
+        """Batched graph repair over neighborhoods touched by deleted rows.
+
+        Every live vertex with an edge into a tombstoned vertex gets its
+        edge list rebuilt through alpha-RobustPrune — refine=True (default)
+        re-links it by snapshot beam search against the tombstoned graph
+        (recall back at fresh-build level), refine=False does the cheaper
+        one-hop local repair (candidates: its live neighbors ∪ the deleted
+        neighbors' live neighbors). Deleted rows then lose their adjacency,
+        their slots join the free pool, and the medoid refreshes over live
+        rows. Returns {"n_freed", "n_repaired"}.
+        """
+        self.graph, self.mut, stats = consolidate_graph(
+            self.vectors, self.graph, self.mut, params=self.params,
+            refine=refine, vec_sqnorm=self.vec_sqnorm)
+        return stats
+
+    def grow(self, new_capacity: int | None = None) -> "JasperIndex":
+        """Grow capacity by pure copy-extension (default: doubling).
+
+        Nothing re-encodes: packed RaBitQ codes, vec_sqnorm, adjacency, the
+        tombstone bitmap, and the free pool are all capacity-major, so the
+        resident prefix of every buffer is byte-identical after the grow.
+        """
+        new_cap = new_capacity or 2 * self.capacity
+        if new_cap < self.capacity:
+            raise ValueError(f"cannot shrink {self.capacity} -> {new_cap}")
+        if new_cap == self.capacity:
+            return self
+        self.vectors = grow_rows(self.vectors, new_cap, 0.0)
+        self.vec_sqnorm = grow_rows(self.vec_sqnorm, new_cap, 0.0)
+        self.graph = VamanaGraph(
+            adjacency=grow_rows(self.graph.adjacency, new_cap, -1),
+            n_valid=self.graph.n_valid, medoid=self.graph.medoid)
+        if self.rabitq_codes is not None:
+            c = self.rabitq_codes
+            self.rabitq_codes = RaBitQCodes(
+                packed=grow_rows(c.packed, new_cap, 0),
+                data_add=grow_rows(c.data_add, new_cap, 0.0),
+                data_rescale=grow_rows(c.data_rescale, new_cap, 0.0),
+                bits=c.bits, dims=c.dims)
+        if self.pq_codes is not None:
+            self.pq_codes = grow_rows(self.pq_codes, new_cap, 0)
+        self.mut = grow_state(self.mut, new_cap)
+        self.capacity = new_cap
         return self
 
     # ------------------------------------------------------------------ search
     def search(self, queries: np.ndarray | Array, k: int = 10, *,
                beam_width: int | None = None, max_iters: int | None = None,
                expand: int = 1, use_kernels: bool = False,
-               merge: str = "topk") -> tuple[Array, Array]:
+               merge: str = "topk",
+               traverse_deleted: bool = True) -> tuple[Array, Array]:
         """Exact-distance beam search. Returns (ids (Q,k), dists (Q,k)).
 
         expand > 1: multi-expansion (CAGRA-style) — E frontier nodes per
         iteration, ~E x fewer sequential steps (§Perf #C1).
         use_kernels: score with the Pallas gather-distance kernel.
         merge: frontier merge strategy ("topk" | "sort" | "kernel").
+        traverse_deleted: walk through tombstoned rows (connectivity-
+        preserving default); either way they are never returned.
         """
         q = self._prep_query(queries)
         bw = beam_width or max(k, 32)
         mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
         ids, dists, _ = _search_exact(self.vectors, self.vec_sqnorm, self.graph,
-                                      q, k=k, beam_width=bw, max_iters=mi,
+                                      self._active_tomb_bits, q,
+                                      k=k, beam_width=bw, max_iters=mi,
                                       expand=expand, use_kernels=use_kernels,
-                                      merge=merge)
+                                      merge=merge,
+                                      traverse_deleted=traverse_deleted)
         return ids, dists
 
     def search_rabitq(self, queries: np.ndarray | Array, k: int = 10, *,
                       beam_width: int | None = None,
                       max_iters: int | None = None, rerank: bool = True,
                       expand: int = 1, use_kernels: bool = False,
-                      merge: str = "topk") -> tuple[Array, Array]:
+                      merge: str = "topk",
+                      traverse_deleted: bool = True) -> tuple[Array, Array]:
         """RaBitQ estimated-distance beam search (Jasper RaBitQ).
 
         use_kernels: score with the fused Pallas estimator kernel (in-VMEM
@@ -234,6 +518,8 @@ class JasperIndex:
         expand > 1: multi-expansion, as in exact search (§Perf #C1).
         merge: frontier merge strategy ("topk" partial merge by default,
         "sort" reference, "kernel" Pallas min-extraction).
+        traverse_deleted: False folds the tombstone bitmap into the kernel
+        epilogue mask (one byte per candidate rides with the packed gather).
         """
         if self.rabitq_codes is None:
             raise RuntimeError("index was not built with quantization='rabitq'")
@@ -241,18 +527,44 @@ class JasperIndex:
         bw = beam_width or max(k, 32)
         mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
         ids, dists, _ = _search_rabitq(self.vectors, self.vec_sqnorm, self.graph,
-                                       self.rabitq_codes, self.rabitq_params, q,
+                                       self.rabitq_codes, self.rabitq_params,
+                                       self._active_tomb_bits, q,
                                        k=k, beam_width=bw, max_iters=mi,
                                        rerank=rerank, expand=expand,
-                                       use_kernels=use_kernels, merge=merge)
+                                       use_kernels=use_kernels, merge=merge,
+                                       traverse_deleted=traverse_deleted)
+        return ids, dists
+
+    def search_pq(self, queries: np.ndarray | Array, k: int = 10, *,
+                  beam_width: int | None = None,
+                  max_iters: int | None = None, rerank: bool = True,
+                  expand: int = 1, merge: str = "topk",
+                  traverse_deleted: bool = True) -> tuple[Array, Array]:
+        """PQ LUT-based beam search — DEPRECATED comparison baseline.
+
+        The paper's negative result (§5, Fig 12): scattered 256-entry table
+        lookups, no kernel backing, kept only so benchmarks can reproduce
+        the comparison. Requires the explicit quantization='pq' opt-in.
+        """
+        if self.pq_codes is None:
+            raise RuntimeError("index was not built with quantization='pq'")
+        q = self._prep_query(queries)
+        bw = beam_width or max(k, 32)
+        mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
+        ids, dists, _ = _search_pq(self.vectors, self.vec_sqnorm, self.graph,
+                                   self.pq_params, self.pq_codes,
+                                   self._active_tomb_bits, q,
+                                   k=k, beam_width=bw, max_iters=mi,
+                                   rerank=rerank, expand=expand, merge=merge,
+                                   traverse_deleted=traverse_deleted)
         return ids, dists
 
     def brute_force(self, queries: np.ndarray | Array, k: int = 10
                     ) -> tuple[Array, Array]:
-        """Exact top-k by full scan (ground truth for recall)."""
+        """Exact top-k by full scan over LIVE rows (ground truth for recall)."""
         q = self._prep_query(queries)
         return _brute_force(self.vectors, self.vec_sqnorm, self.graph.n_valid,
-                            q, k=k)
+                            self.mut.tombstone_bits, q, k=k)
 
     def recall(self, queries, k: int = 10, *, beam_width: int | None = None,
                quantized: bool = False) -> float:
@@ -271,6 +583,9 @@ class JasperIndex:
         stats = {
             "vector_bytes_per_row": float(full),
             "graph_bytes_per_row": float(self.params.degree_bound * 4),
+            # mutation metadata: 1 bit/row tombstones + 4 B/row free pool
+            "tombstone_bitmap_bytes": float(self.mut.tombstone_bits.size),
+            "free_pool_bytes": float(self.mut.free_ids.size * 4),
         }
         if self.quantization == "rabitq":
             stats["rabitq_bytes_per_row"] = float(
@@ -291,7 +606,8 @@ class JasperIndex:
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> None:
-        """Atomic checkpoint (tmp + rename): graph, vectors, quantizer.
+        """Atomic checkpoint (tmp + rename): graph, vectors, quantizer,
+        mutation state (tombstones + free pool round-trip exactly).
 
         The tmp name always carries the ".npz" suffix np.savez would
         otherwise append implicitly, so the final os.replace is
@@ -304,6 +620,11 @@ class JasperIndex:
             "adjacency": np.asarray(self.graph.adjacency),
             "n_valid": np.asarray(self.graph.n_valid),
             "medoid": np.asarray(self.graph.medoid),
+            "tombstone_bits": np.asarray(self.mut.tombstone_bits),
+            "free_ids": np.asarray(self.mut.free_ids),
+            "n_free": np.asarray(self.mut.n_free),
+            "n_deleted": np.asarray(self.mut.n_deleted),
+            "generation": np.asarray(self.mut.generation),
         }
         if self.rabitq_codes is not None:
             arrays |= {
@@ -312,6 +633,11 @@ class JasperIndex:
                 "rq_rescale": np.asarray(self.rabitq_codes.data_rescale),
                 "rq_rotation": np.asarray(self.rabitq_params.rotation),
                 "rq_centroid": np.asarray(self.rabitq_params.centroid),
+            }
+        if self.pq_codes is not None:
+            arrays |= {
+                "pq_codes": np.asarray(self.pq_codes),
+                "pq_codebooks": np.asarray(self.pq_params.codebooks),
             }
         meta = {
             "dims": self.dims, "metric": self.metric, "capacity": self.capacity,
@@ -329,10 +655,13 @@ class JasperIndex:
         with open(path + ".meta.json") as f:
             meta = json.load(f)
         data = np.load(path)
-        idx = cls(meta["dims"], meta["capacity"], metric=meta["metric"],
-                  quantization=meta["quantization"], bits=meta["bits"],
-                  construction=ConstructionParams(**meta["construction"]),
-                  seed=meta["seed"])
+        with warnings.catch_warnings():
+            # loading a PQ checkpoint should not re-fire the opt-in warning
+            warnings.simplefilter("ignore", DeprecationWarning)
+            idx = cls(meta["dims"], meta["capacity"], metric=meta["metric"],
+                      quantization=meta["quantization"], bits=meta["bits"],
+                      construction=ConstructionParams(**meta["construction"]),
+                      seed=meta["seed"])
         idx._mips_max_sqnorm = meta["mips_max_sqnorm"]
         idx.vectors = jnp.asarray(data["vectors"])
         idx.vec_sqnorm = jnp.sum(idx.vectors * idx.vectors, axis=-1)
@@ -340,6 +669,13 @@ class JasperIndex:
             adjacency=jnp.asarray(data["adjacency"]),
             n_valid=jnp.asarray(data["n_valid"]),
             medoid=jnp.asarray(data["medoid"]))
+        if "tombstone_bits" in data:
+            idx.mut = MutationState(
+                tombstone_bits=jnp.asarray(data["tombstone_bits"]),
+                free_ids=jnp.asarray(data["free_ids"]),
+                n_free=jnp.asarray(data["n_free"]),
+                n_deleted=jnp.asarray(data["n_deleted"]),
+                generation=jnp.asarray(data["generation"]))
         has_codes = "rq_packed" in data or "rq_codes" in data
         if meta["quantization"] == "rabitq" and has_codes:
             idx.rabitq_params = RaBitQParams(
@@ -357,4 +693,9 @@ class JasperIndex:
                 data_add=jnp.asarray(data["rq_add"]),
                 data_rescale=jnp.asarray(data["rq_rescale"]),
                 bits=meta["bits"], dims=idx.store_dims)
+        if meta["quantization"] == "pq" and "pq_codes" in data:
+            from repro.core.pq import PQParams
+            idx.pq_params = PQParams(
+                codebooks=jnp.asarray(data["pq_codebooks"]))
+            idx.pq_codes = jnp.asarray(data["pq_codes"])
         return idx

@@ -1,4 +1,4 @@
-"""Product Quantization baseline (paper §5, Jégou et al. 2011).
+"""Product Quantization baseline (paper §5, Jégou et al. 2011). DEPRECATED.
 
 The paper implements PQ in Jasper and finds it *strictly worse* than exact
 search on GPU: the per-subspace codebook lookups scatter over memory (8x
@@ -7,6 +7,12 @@ memory. The TPU failure mode is analogous — `take_along_axis` gathers
 serialize through the scalar core / generate gather HLOs with no MXU work.
 We keep the implementation as the comparison baseline for
 benchmarks/quantization.py (paper Fig 12).
+
+Deprecation note: this path is unpacked and LUT-based by design (it exists
+to reproduce the negative result) and will never grow a kernel backing —
+RaBitQ (`core/rabitq.py` + `kernels/rabitq_dot`) is the only kernel-backed
+quantized search path. Index-level use requires the explicit
+``JasperIndex(quantization="pq")`` opt-in, which emits a DeprecationWarning.
 
 Layout: D dims split into K contiguous subspaces of D/K dims, each quantized
 to one of 256 centroids learned with a few k-means iterations (seeded,
@@ -109,6 +115,15 @@ def pq_lookup_table(params: PQParams, queries: Array) -> Array:
     return jnp.sum(diff * diff, axis=-1)
 
 
+def _adc_lookup(lut: Array, c: Array) -> Array:
+    """Per-candidate ADC gather-and-sum: lut (Q, K, 256) x codes (Q, C, K)
+    int32 -> (Q, C). Deliberately the paper's "scattered lookup" pattern."""
+    g = jnp.take_along_axis(
+        lut[:, None, :, :].repeat(c.shape[1], axis=1), c[..., None], axis=3
+    )[..., 0]
+    return jnp.sum(g, axis=-1)
+
+
 def pq_distance(params: PQParams, codes: Array, queries: Array,
                 candidate_ids: Array | None = None) -> Array:
     """Asymmetric distance computation via LUT gathers.
@@ -118,17 +133,23 @@ def pq_distance(params: PQParams, codes: Array, queries: Array,
     """
     lut = pq_lookup_table(params, queries)  # (Q, K, 256)
     if candidate_ids is None:
-        c = codes.astype(jnp.int32)  # (N, K)
-        # (Q, N, K) gather then reduce
-        g = jnp.take_along_axis(
-            lut[:, None, :, :].repeat(c.shape[0], axis=1),
-            c[None, :, :, None].astype(jnp.int32),
-            axis=3,
-        )[..., 0]
-        return jnp.sum(g, axis=-1)
+        return _adc_lookup(lut, codes[None].astype(jnp.int32)
+                           .repeat(lut.shape[0], axis=0))
     safe = jnp.maximum(candidate_ids, 0)
-    c = codes[safe].astype(jnp.int32)  # (Q, C, K)
-    g = jnp.take_along_axis(
-        lut[:, None, :, :].repeat(c.shape[1], axis=1), c[..., None], axis=3
-    )[..., 0]
-    return jnp.sum(g, axis=-1)
+    return _adc_lookup(lut, codes[safe].astype(jnp.int32))
+
+
+def make_pq_scorer(params: PQParams, codes: Array, queries: Array):
+    """Beam-search ScoreFn over PQ codes (deprecated baseline path).
+
+    The ADC tables are computed once per query batch; each score call is
+    then the scattered per-candidate LUT gather the paper measures. Invalid
+    ids are handled by beam_search's own masking pass (not self-masking).
+    """
+    lut = pq_lookup_table(params, queries)  # (Q, K, 256)
+
+    def score(candidate_ids: Array) -> Array:
+        safe = jnp.maximum(candidate_ids, 0)
+        return _adc_lookup(lut, codes[safe].astype(jnp.int32))
+
+    return score

@@ -32,13 +32,18 @@ class PruneResult(NamedTuple):
 
 
 def dedup_sort_candidates(cand_ids: Array, cand_dists: Array, pivot_ids: Array,
-                          n_valid: Array) -> tuple[Array, Array]:
+                          n_valid: Array, live: Array | None = None
+                          ) -> tuple[Array, Array]:
     """Mask invalid/self/duplicate candidates and sort by distance.
 
     cand_ids/cand_dists: (V, C); pivot_ids: (V,). Returns sorted
     (ids, dists) with dead entries pushed to the end as (-1, +inf).
+    live: optional bool[N_cap] row-liveness mask — tombstoned rows are
+    dropped from the candidate pool so pruned edges never target them.
     """
     valid = (cand_ids >= 0) & (cand_ids < n_valid) & (cand_ids != pivot_ids[:, None])
+    if live is not None:
+        valid &= live[jnp.maximum(cand_ids, 0)]
     ids_for_dup = jnp.where(valid, cand_ids, _BIG_ID)
     # sort by id to make duplicates adjacent; keep dists aligned
     s_ids, s_dists = jax.lax.sort((ids_for_dup, cand_dists), dimension=1,
@@ -103,7 +108,8 @@ def _robust_prune_sorted(cand_ids: Array, cand_dists: Array, cand_vecs: Array,
 def robust_prune_batch(vectors: Array, pivot_ids: Array, cand_ids: Array,
                        cand_dists: Array, n_valid: Array, *,
                        degree_bound: int, alpha: float = 1.2,
-                       chunk_size: int = 1024) -> PruneResult:
+                       chunk_size: int = 1024,
+                       live: Array | None = None) -> PruneResult:
     """alpha-RobustPrune for a batch of vertices.
 
     vectors:    (N_cap, D) full vector table (rows gathered per chunk)
@@ -112,6 +118,8 @@ def robust_prune_batch(vectors: Array, pivot_ids: Array, cand_ids: Array,
     cand_dists: (V, C) d2(pivot, cand)
     chunk_size: vertices per chunk — bounds the (chunk, C, D) gather, which
                 is the construction-memory knob the paper sizes in Table 1.
+    live:       optional bool[N_cap] — rows whose bit is False (tombstoned/
+                freed) are excluded from every selection.
     """
     v_total = pivot_ids.shape[0]
     pad = (-v_total) % chunk_size
@@ -123,15 +131,16 @@ def robust_prune_batch(vectors: Array, pivot_ids: Array, cand_ids: Array,
 
     def do_chunk(args):
         p_ids, c_ids, c_dists = args
-        c_ids, c_dists = dedup_sort_candidates(c_ids, c_dists, p_ids, n_valid)
+        c_ids, c_dists = dedup_sort_candidates(c_ids, c_dists, p_ids, n_valid,
+                                               live)
         cv = vectors[jnp.maximum(c_ids, 0)]
         res = _robust_prune_sorted(c_ids, c_dists, cv, degree_bound, alpha)
         # padded pivots produce empty rows
-        live = (p_ids >= 0)[:, None]
+        real = (p_ids >= 0)[:, None]
         return PruneResult(
-            selected_ids=jnp.where(live, res.selected_ids, -1),
-            selected_dists=jnp.where(live, res.selected_dists, _INF),
-            n_selected=jnp.where(live[:, 0], res.n_selected, 0),
+            selected_ids=jnp.where(real, res.selected_ids, -1),
+            selected_dists=jnp.where(real, res.selected_dists, _INF),
+            n_selected=jnp.where(real[:, 0], res.n_selected, 0),
         )
 
     n_chunks = pivot_ids.shape[0] // chunk_size

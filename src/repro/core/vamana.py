@@ -66,12 +66,18 @@ def graph_degree_stats(graph: VamanaGraph) -> dict[str, Array]:
     }
 
 
-def validate_graph(graph: VamanaGraph) -> dict[str, Array]:
+def validate_graph(graph: VamanaGraph,
+                   live_mask: Array | None = None) -> dict[str, Array]:
     """Structural invariants, checked by property tests:
        - every edge target is a live vertex (or -1 padding)
        - no self loops
        - padding is suffix-contiguous per row (sorted-by-distance invariant
          implies valid entries precede -1s).
+
+    live_mask: optional bool[N_cap] of live rows. With tombstones, n_valid
+    is a high-water mark, not a liveness predicate; a post-consolidation
+    graph must additionally satisfy `edges_to_live` — no live row keeps an
+    edge into a deleted/freed row.
     """
     n = graph.n_valid
     adj = graph.adjacency
@@ -83,8 +89,14 @@ def validate_graph(graph: VamanaGraph) -> dict[str, Array]:
     # suffix-contiguity: once a pad appears, everything after is pad
     pad_prefix = jnp.cumsum(is_pad.astype(jnp.int32), axis=1)
     contiguous = jnp.all(jnp.where(is_pad, True, pad_prefix == 0) | ~live_row)
-    return {
+    checks = {
         "edges_in_range": jnp.all(in_range | ~live_row),
         "no_self_loops": jnp.all(no_self | ~live_row),
         "padding_contiguous": contiguous,
     }
+    if live_mask is not None:
+        live_row = live_row & live_mask[:, None]
+        tgt_live = jnp.where(is_pad, True,
+                             live_mask[jnp.maximum(adj, 0)])
+        checks["edges_to_live"] = jnp.all(tgt_live | ~live_row)
+    return checks

@@ -97,11 +97,15 @@ def gather_l2_chunked(q: Array, db: Array, db_sq: Array, ids: Array, *,
 def make_kernel_scorer(vectors: Array, queries: Array, n_valid: Array,
                        vec_sqnorm: Array | None = None, *,
                        strategy: str = "chunked",
+                       tombstone_bits: Array | None = None,
                        interpret: bool | None = None):
     """Beam-search ScoreFn backed by the Pallas gather kernels.
 
     Drop-in replacement for core.beam_search.make_exact_scorer — this is how
     the fused search kernel plugs into the shared search loop.
+
+    tombstone_bits: optional packed row bitmap (core.mutations) for
+    exclude-mode searches — tombstoned candidates score +inf.
     """
     v = vectors
     if vec_sqnorm is None:
@@ -110,6 +114,9 @@ def make_kernel_scorer(vectors: Array, queries: Array, n_valid: Array,
 
     def score(ids: Array) -> Array:
         in_range = (ids >= 0) & (ids < n_valid)
+        if tombstone_bits is not None:
+            from repro.core.mutations import bitmap_gather
+            in_range &= ~bitmap_gather(tombstone_bits, ids)
         masked = jnp.where(in_range, ids, -1)
         return fn(queries, v, vec_sqnorm, masked, interpret=interpret)
 

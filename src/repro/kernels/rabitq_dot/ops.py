@@ -94,13 +94,19 @@ def rabitq_search_step(cand_packed: Array, cand_add: Array,
                        cand_rescale: Array, ids: Array, n_valid: Array,
                        q_rot: Array, query_add: Array, query_sumq: Array, *,
                        bits: int, block_q: int = 8,
+                       live: Array | None = None,
                        interpret: bool | None = None) -> Array:
     """Fused search-step: (Q, K, P) gathered codes + raw beam ids -> (Q, K)
-    estimates with invalid-id masking fused into the kernel epilogue."""
+    estimates with invalid-id masking fused into the kernel epilogue.
+
+    live: optional (Q, K) per-candidate tombstone flags (1 = live, 0 = dead
+    -> +inf); omitted means every in-range id is live."""
     if interpret is None:
         interpret = _auto_interpret()
     qn, k, p = cand_packed.shape
     cpb = 8 // bits
+    if live is None:
+        live = jnp.ones_like(ids, dtype=jnp.int32)
     p_pad = _pad_to(cand_packed, 128, 2)
     d_need = p_pad.shape[2] * cpb
     q_pad = q_rot.astype(jnp.float32)
@@ -111,6 +117,7 @@ def rabitq_search_step(cand_packed: Array, cand_add: Array,
         _pad_to(cand_add, block_q, 0),
         _pad_to(cand_rescale, block_q, 0),
         _pad_to(ids.astype(jnp.int32), block_q, 0, value=-1),
+        _pad_to(live.astype(jnp.int32), block_q, 0),
         jnp.asarray(n_valid, jnp.int32).reshape(1, 1),
         _pad_to(q_pad, block_q, 0),
         _pad_to(query_add, block_q, 0),
@@ -121,6 +128,7 @@ def rabitq_search_step(cand_packed: Array, cand_add: Array,
 
 def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
                               n_valid: Array,
+                              tombstone_bits: Array | None = None,
                               interpret: bool | None = None):
     """Beam-search ScoreFn over the canonical PACKED codes.
 
@@ -128,6 +136,10 @@ def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
     ceil(D*bits/8) + 8 bytes per candidate instead of 4*D), then runs one
     fused unpack + estimator + masking-epilogue kernel per query tile. No
     re-packing ever happens — codes.packed is the HBM-resident array.
+
+    tombstone_bits: optional packed row bitmap (core.mutations) for
+    exclude-mode searches — each candidate's bit is gathered alongside its
+    code row (1 extra byte per candidate) and masked in the epilogue.
     """
     packed = codes.packed                            # (N, P) — canonical
 
@@ -136,10 +148,14 @@ def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
         cand = packed[safe]                          # (Q, K, P) bulk gather
         dadd = codes.data_add[safe]
         drs = codes.data_rescale[safe]
+        live = None
+        if tombstone_bits is not None:
+            from repro.core.mutations import bitmap_gather
+            live = (~bitmap_gather(tombstone_bits, safe)).astype(jnp.int32)
         return rabitq_search_step(cand, dadd, drs, ids, n_valid,
                                   query.q_rot, query.query_add,
                                   query.query_sumq, bits=codes.bits,
-                                  interpret=interpret)
+                                  live=live, interpret=interpret)
 
     # masking happens in the kernel epilogue; beam_search skips its own pass
     score.self_masking = True

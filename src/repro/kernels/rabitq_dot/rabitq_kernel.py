@@ -69,14 +69,17 @@ def _rabitq_gather_kernel(q_ref, qadd_ref, qsum_ref, codes_ref, dadd_ref,
 
 
 def _rabitq_search_step_kernel(nvalid_ref, q_ref, qadd_ref, qsum_ref,
-                               ids_ref, codes_ref, dadd_ref, drs_ref,
-                               o_ref, *, bits: int):
+                               ids_ref, live_ref, codes_ref, dadd_ref,
+                               drs_ref, o_ref, *, bits: int):
     """Fused search step: unpack + estimator + epilogue masking.
 
     Same math as _rabitq_gather_kernel, plus the beam-search validity mask
-    (ids >= 0 and ids < n_valid -> else +inf) fused into the epilogue so no
-    separate jnp masking pass runs over the (Q, K) output. n_valid arrives
-    as a scalar in SMEM.
+    fused into the epilogue so no separate jnp masking pass runs over the
+    (Q, K) output: ids must be in [0, n_valid) AND their per-row tombstone
+    flag must be live. n_valid arrives as a scalar in SMEM; the tombstone
+    bitmap arrives pre-gathered per candidate (live_ref, 1 = live) — the
+    byte gather rides along with the packed-code gather outside the kernel,
+    the mask itself is fused here.
     """
     tq, k, p = codes_ref.shape
     codes = _unpack_tile(codes_ref[...].reshape(tq * k, p), bits)
@@ -86,7 +89,7 @@ def _rabitq_search_step_kernel(nvalid_ref, q_ref, qadd_ref, qsum_ref,
         preferred_element_type=jnp.float32)          # (TQ, K)
     est = dadd_ref[...] + qadd_ref[...] + drs_ref[...] * (dot - qsum_ref[...])
     ids = ids_ref[...]
-    valid = (ids >= 0) & (ids < nvalid_ref[0])
+    valid = (ids >= 0) & (ids < nvalid_ref[0]) & (live_ref[...] != 0)
     o_ref[...] = jnp.where(valid, jnp.maximum(est, 0.0),
                            jnp.float32(jnp.inf))
 
@@ -126,7 +129,7 @@ def rabitq_gather_distance_pallas(cand_packed: Array, cand_add: Array,
 
 
 def rabitq_search_step_pallas(cand_packed: Array, cand_add: Array,
-                              cand_rescale: Array, ids: Array,
+                              cand_rescale: Array, ids: Array, live: Array,
                               n_valid: Array, q_rot: Array,
                               query_add: Array, query_sumq: Array, *,
                               bits: int, block_q: int = 8,
@@ -134,7 +137,8 @@ def rabitq_search_step_pallas(cand_packed: Array, cand_add: Array,
     """Fused search-step form: gather tiles + raw beam ids + n_valid.
 
     cand_packed: (Q, K, P) uint8; ids: (Q, K) int32 (may contain -1 /
-    out-of-range); n_valid: (1, 1) int32 -> (Q, K) estimates with invalid
+    out-of-range); live: (Q, K) int32 per-candidate tombstone flags
+    (1 = live); n_valid: (1, 1) int32 -> (Q, K) estimates with invalid
     candidates already masked to +inf in the kernel epilogue.
     """
     qn, k, p = cand_packed.shape
@@ -150,6 +154,7 @@ def rabitq_search_step_pallas(cand_packed: Array, cand_add: Array,
             pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
             pl.BlockSpec((block_q, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, k), lambda i: (i, 0)),
             pl.BlockSpec((block_q, k, p), lambda i: (i, 0, 0)),
             pl.BlockSpec((block_q, k), lambda i: (i, 0)),
             pl.BlockSpec((block_q, k), lambda i: (i, 0)),
@@ -160,7 +165,8 @@ def rabitq_search_step_pallas(cand_packed: Array, cand_add: Array,
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(n_valid.reshape(-1), q_rot, query_add.reshape(-1, 1),
-      query_sumq.reshape(-1, 1), ids, cand_packed, cand_add, cand_rescale)
+      query_sumq.reshape(-1, 1), ids, live, cand_packed, cand_add,
+      cand_rescale)
 
 
 def rabitq_distance_pallas(packed: Array, data_add: Array, data_rescale: Array,

@@ -28,15 +28,18 @@ def rabitq_search_step_ref(cand_packed: Array, cand_add: Array,
                            cand_rescale: Array, ids: Array, n_valid,
                            q_rot: Array, query_add: Array,
                            query_sumq: Array, *, bits: int,
-                           dims: int) -> Array:
+                           dims: int, live: Array | None = None) -> Array:
     """Oracle for the fused search-step kernel (estimator + masking).
 
     cand_packed: (Q, K, P) uint8 gathered codes; ids: (Q, K) int32 raw beam
-    ids -> (Q, K) estimates, +inf where ids are invalid (< 0 or >= n_valid).
+    ids -> (Q, K) estimates, +inf where ids are invalid (< 0 or >= n_valid,
+    or tombstoned per the optional (Q, K) `live` flags).
     """
     codes = unpack_codes(cand_packed, bits, dims).astype(jnp.float32)
     dot = jnp.einsum("qkd,qd->qk", codes, q_rot.astype(jnp.float32))
     est = (cand_add + query_add[:, None]
            + cand_rescale * (dot - query_sumq[:, None]))
     valid = (ids >= 0) & (ids < n_valid)
+    if live is not None:
+        valid &= live != 0
     return jnp.where(valid, jnp.maximum(est, 0.0), jnp.inf)

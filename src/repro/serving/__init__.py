@@ -1,6 +1,15 @@
-"""Serving: batched KV-cache decode + retrieval-augmented serving (RAG)."""
+"""Serving: batched KV-cache decode, retrieval-augmented serving (RAG),
+and the online ANNS update/serve loop (insert/delete/search over one
+JasperIndex with generation-stamped results)."""
 
 from repro.serving.serve_loop import generate, make_serve_step
 from repro.serving.rag import RagPipeline
+from repro.serving.anns_service import (
+    AnnsService,
+    SearchTicket,
+    ServiceStats,
+    StepResult,
+)
 
-__all__ = ["generate", "make_serve_step", "RagPipeline"]
+__all__ = ["generate", "make_serve_step", "RagPipeline",
+           "AnnsService", "SearchTicket", "ServiceStats", "StepResult"]

@@ -1,0 +1,207 @@
+"""Online ANNS update/serve loop over one JasperIndex.
+
+The paper's deployment story ("built for change") plus the delete half from
+the online-ANNS literature (cf. the real-time adaptive multi-stream GPU
+system, arXiv:2408.02937): one index serves interleaved insert / delete /
+search batches with no rebuilds and no downtime. The TPU-host shape of
+that design:
+
+  * mutations and searches are BATCHED — the host loop is the stream
+    scheduler, the device only ever sees fixed-shape jit'd work;
+  * every mutation bumps the index's generation counter; every search
+    result is stamped with the generation it was served at, so a client
+    (or a replica fan-out) can order results against mutations without a
+    lock — JAX purity makes each search a consistent snapshot read;
+  * searches NEVER return tombstoned ids. The index guarantees it (the
+    final frontier filters through the packed bitmap); the service can
+    additionally verify per-tick (`verify=True`, on by default in tests /
+    examples, cheap O(Q*k) host check) — the generation stamp plus this
+    invariant is the service's serving contract;
+  * deletes are tombstone-cheap, so the service absorbs them at stream
+    rate and amortizes graph repair: `consolidate` triggers automatically
+    once the tombstone load factor passes `consolidate_threshold`.
+
+`step()` is one scheduler tick (deletes -> maybe-consolidate -> inserts ->
+searches); `run()` drives a whole op stream. Both are synchronous host
+drivers, mirroring build/insert in core.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterable, NamedTuple
+
+import numpy as np
+
+from repro.core.index import JasperIndex
+
+__all__ = ["AnnsService", "SearchTicket", "StepResult", "ServiceStats"]
+
+
+class SearchTicket(NamedTuple):
+    """One served search batch, stamped with its snapshot generation."""
+
+    ids: np.ndarray     # (Q, k) int32, -1 padded, never tombstoned
+    dists: np.ndarray   # (Q, k) f32
+    generation: int     # index generation this batch was served at
+
+
+class StepResult(NamedTuple):
+    """Outcome of one scheduler tick."""
+
+    inserted_ids: np.ndarray | None
+    n_deleted: int
+    consolidated: dict | None
+    search: SearchTicket | None
+
+
+@dataclass
+class ServiceStats:
+    """Monotonic service counters (host-side, cheap)."""
+
+    n_inserts: int = 0
+    n_insert_rows: int = 0
+    n_deletes: int = 0
+    n_delete_rows: int = 0
+    n_searches: int = 0
+    n_search_queries: int = 0
+    n_consolidations: int = 0
+    n_grows: int = 0
+    last_generation: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+class AnnsService:
+    """Interleaved insert/delete/search serving over one JasperIndex."""
+
+    def __init__(self, index: JasperIndex, *, k: int = 10,
+                 beam_width: int | None = None, use_kernels: bool = False,
+                 quantized: bool | None = None,
+                 consolidate_threshold: float = 0.25,
+                 verify: bool = True):
+        """
+        quantized: serve via search_rabitq (defaults to True iff the index
+        was built with quantization='rabitq').
+        consolidate_threshold: tombstone load factor that triggers automatic
+        graph repair at the next tick (<= 0 disables auto-consolidation).
+        verify: re-check the no-tombstoned-ids contract on every served
+        batch (host-side O(Q*k); raise on violation).
+        """
+        self.index = index
+        self.k = k
+        self.beam_width = beam_width
+        self.use_kernels = use_kernels
+        self.quantized = (index.quantization == "rabitq"
+                          if quantized is None else quantized)
+        self.consolidate_threshold = consolidate_threshold
+        self.verify = verify
+        self.stats = ServiceStats()
+
+    # ------------------------------------------------------------------ ops
+    @property
+    def generation(self) -> int:
+        return self.index.generation
+
+    def insert(self, vectors) -> np.ndarray:
+        """Batch insert; returns assigned row ids (freed slots reused)."""
+        cap_before = self.index.capacity
+        ids = self.index.insert(vectors)
+        self.stats.n_inserts += 1
+        self.stats.n_insert_rows += int(ids.size)
+        self.stats.n_grows += int(self.index.capacity != cap_before)
+        self._stamp()
+        return ids
+
+    def delete(self, ids) -> int:
+        """Batch tombstone delete; graph repair is deferred/amortized."""
+        n = self.index.delete(ids)
+        self.stats.n_deletes += 1
+        self.stats.n_delete_rows += n
+        self._stamp()
+        return n
+
+    def search(self, queries, k: int | None = None, **kw) -> SearchTicket:
+        """Serve one search batch at the current snapshot generation."""
+        k = k or self.k
+        kw.setdefault("beam_width", self.beam_width)
+        kw.setdefault("use_kernels", self.use_kernels)
+        gen = self.index.generation
+        if self.quantized:
+            ids, dists = self.index.search_rabitq(queries, k, **kw)
+        else:
+            ids, dists = self.index.search(queries, k, **kw)
+        ids = np.asarray(ids)
+        if self.verify:
+            # O(Q*k): gather only the returned ids' tombstone bits — the
+            # full bitmap never unpacks on the serving path
+            returned = ids[ids >= 0]
+            bits = np.asarray(self.index.mut.tombstone_bits)
+            tombstoned = (bits[returned >> 3] >> (returned & 7)) & 1
+            dead = returned[(tombstoned == 1)
+                            | (returned >= int(self.index.graph.n_valid))]
+            if dead.size:
+                raise AssertionError(
+                    f"serving contract violated: tombstoned ids returned "
+                    f"at generation {gen}: {dead[:8].tolist()}")
+        self.stats.n_searches += 1
+        self.stats.n_search_queries += int(ids.shape[0])
+        self._stamp()
+        return SearchTicket(ids=ids, dists=np.asarray(dists), generation=gen)
+
+    def maybe_consolidate(self, force: bool = False) -> dict | None:
+        """Repair the graph if the tombstone load factor warrants it."""
+        thresh = self.consolidate_threshold
+        trigger = force or (thresh > 0
+                            and self.index.deleted_fraction >= thresh
+                            and self.index.n_deleted > 0)
+        if not trigger:
+            return None
+        stats = self.index.consolidate()
+        self.stats.n_consolidations += 1
+        self._stamp()
+        return stats
+
+    # ----------------------------------------------------------------- loop
+    def step(self, *, inserts=None, deletes=None, queries=None,
+             k: int | None = None) -> StepResult:
+        """One scheduler tick: deletes -> auto-consolidate -> inserts ->
+        searches.
+
+        Deletes run first and consolidation (when the load factor triggers
+        it) immediately after, so the insert half of the same tick can
+        reuse the slots they free; searches run last and observe every
+        mutation of the tick, stamped with the post-mutation generation.
+        """
+        n_del = self.delete(deletes) if deletes is not None else 0
+        cons = self.maybe_consolidate()
+        ins = self.insert(inserts) if inserts is not None else None
+        ticket = self.search(queries, k) if queries is not None else None
+        return StepResult(inserted_ids=ins, n_deleted=n_del,
+                          consolidated=cons, search=ticket)
+
+    def run(self, ops: Iterable[tuple[str, Any]]) -> list:
+        """Drive an op stream: ("insert", vecs) | ("delete", ids) |
+        ("search", queries) | ("consolidate", None). Returns per-op results
+        in order."""
+        out: list = []
+        for kind, payload in ops:
+            if kind == "insert":
+                out.append(self.insert(payload))
+            elif kind == "delete":
+                out.append(self.delete(payload))
+                # deletes drive the load factor — check right away so an
+                # insert/delete-only stream still consolidates (and the
+                # freed slots recycle), matching step()'s ordering
+                self.maybe_consolidate()
+            elif kind == "search":
+                out.append(self.search(payload))
+            elif kind == "consolidate":
+                out.append(self.maybe_consolidate(force=True))
+            else:
+                raise ValueError(f"unknown op {kind!r}")
+        return out
+
+    def _stamp(self) -> None:
+        self.stats.last_generation = self.index.generation

@@ -13,6 +13,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.construction import ConstructionParams
@@ -49,16 +50,28 @@ class RagPipeline:
             construction=construction or ConstructionParams(
                 degree_bound=32, beam_width=32, max_iters=48, rev_cap=32,
                 prune_chunk=512))
-        self._docs: list[Any] = []
+        self._docs: dict[int, Any] = {}
 
     def ingest(self, token_batches: Array, payloads: list[Any]) -> None:
-        """Embed + batch-insert new documents (no index rebuild)."""
+        """Embed + batch-insert new documents (no index rebuild).
+
+        Payloads are keyed by assigned row id, so slots freed by `evict`
+        can be transparently reused for new documents."""
         embs = embed_texts(self.params, self.cfg, token_batches)
-        if self.index.size == 0:
-            self.index.build(embs)
-        else:
-            self.index.insert(embs)
-        self._docs.extend(payloads)
+        # insert handles the empty-index case with a fresh build and
+        # auto-grows past capacity — no special-casing here
+        ids = self.index.insert(embs)
+        for i, payload in zip(ids, payloads):
+            self._docs[int(i)] = payload
+
+    def evict(self, doc_ids) -> int:
+        """Tombstone-delete documents; their slots recycle on next ingest
+        (the index auto-consolidates nothing here — call
+        index.consolidate() on your maintenance cadence)."""
+        n = self.index.delete(doc_ids)
+        for i in np.atleast_1d(np.asarray(doc_ids)).ravel():
+            self._docs.pop(int(i), None)
+        return n
 
     def retrieve(self, query_tokens: Array, k: int = 4,
                  beam_width: int = 32) -> list[list[Any]]:
@@ -66,5 +79,5 @@ class RagPipeline:
         q = embed_texts(self.params, self.cfg, query_tokens)
         ids, _ = self.index.search(q, k=k, beam_width=beam_width)
         ids = jax.device_get(ids)
-        return [[self._docs[i] for i in row if 0 <= i < len(self._docs)]
+        return [[self._docs[int(i)] for i in row if int(i) in self._docs]
                 for row in ids]

@@ -354,3 +354,216 @@ def test_multi_expand_search_api(built_index):
         ids, g = np.asarray(ids), np.asarray(gt)
         return np.mean([len(set(ids[i]) & set(g[i])) / 10 for i in range(40)])
     assert rec(i4) > rec(i1) - 0.05, (rec(i1), rec(i4))
+
+
+# ------------------------------------------------------- mutation lifecycle
+@pytest.fixture()
+def churn_index():
+    """Small quantized index + its data (function-scoped: tests mutate it)."""
+    rng = np.random.default_rng(4242)
+    data = rng.normal(size=(700, 32)).astype(np.float32)
+    idx = JasperIndex(32, capacity=900, construction=SMALL,
+                      quantization="rabitq", bits=4)
+    idx.build(data)
+    queries = rng.normal(size=(60, 32)).astype(np.float32)
+    return idx, data, queries, rng
+
+
+def test_delete_excludes_ids_all_paths(churn_index):
+    """Tombstoned ids never surface — exact/kernel/rabitq/brute, both
+    traversal modes (the PR's returnability contract)."""
+    idx, _, queries, rng = churn_index
+    dead = rng.choice(700, 140, replace=False)
+    assert idx.delete(dead) == 140
+    assert idx.size == 700 - 140
+    assert idx.n_deleted == 140
+    searches = [
+        lambda: idx.search(queries, 10, beam_width=48),
+        lambda: idx.search(queries, 10, beam_width=48, use_kernels=True),
+        lambda: idx.search(queries, 10, beam_width=48,
+                           traverse_deleted=False),
+        lambda: idx.search_rabitq(queries, 10, beam_width=48),
+        lambda: idx.search_rabitq(queries, 10, beam_width=48,
+                                  use_kernels=True),
+        lambda: idx.search_rabitq(queries, 10, beam_width=48,
+                                  use_kernels=True, traverse_deleted=False),
+        lambda: idx.brute_force(queries, 10),
+    ]
+    for fn in searches:
+        ids, _ = fn()
+        assert not np.isin(np.asarray(ids), dead).any()
+    # tombstoned search still finds the survivors well
+    assert idx.recall(queries, k=10, beam_width=48) > 0.75
+
+
+def test_delete_validates_ids(churn_index):
+    idx, _, _, _ = churn_index
+    with pytest.raises(ValueError, match="out of range"):
+        idx.delete([700])
+    with pytest.raises(ValueError, match="out of range"):
+        idx.delete([-1])
+    idx.delete([3, 5])
+    with pytest.raises(ValueError, match="already deleted"):
+        idx.delete([5])
+    assert idx.delete(np.empty((0,), np.int64)) == 0
+
+
+def test_consolidate_restores_recall(churn_index):
+    """Acceptance: post-consolidate recall within 1pt of a fresh build of
+    the surviving rows; repaired graph has no edges into deleted rows."""
+    from repro.core.vamana import validate_graph
+
+    idx, data, queries, rng = churn_index
+    dead = rng.choice(700, 140, replace=False)       # 20% churn
+    idx.delete(dead)
+    stats = idx.consolidate()
+    assert stats["n_freed"] == 140 and stats["n_repaired"] > 0
+    assert idx.n_deleted == 0 and int(idx.mut.n_free) == 140
+    live = jnp.asarray(idx.live_mask())
+    checks = validate_graph(idx.graph, live)
+    assert all(bool(v) for v in checks.values()), checks
+
+    r_cons = idx.recall(queries, k=10, beam_width=48)
+    fresh = JasperIndex(32, capacity=900, construction=SMALL)
+    fresh.build(data[np.setdiff1d(np.arange(700), dead)])
+    r_fresh = fresh.recall(queries, k=10, beam_width=48)
+    assert r_cons >= r_fresh - 0.01, (r_cons, r_fresh)
+    # quantized path holds too
+    assert idx.recall(queries, k=10, beam_width=48, quantized=True) > 0.75
+
+
+def test_insert_after_delete_reuses_slots(churn_index):
+    idx, _, _, rng = churn_index
+    dead = np.sort(rng.choice(700, 60, replace=False))
+    idx.delete(dead)
+    idx.consolidate()
+    new = rng.normal(size=(60, 32)).astype(np.float32)
+    got = idx.insert(new)
+    # freed slots reused ascending; the high-water mark did not move
+    assert (got == dead).all()
+    assert int(idx.graph.n_valid) == 700 and idx.size == 700
+    # reused rows are live again and findable under their new vectors
+    ids, dists = idx.search(new[:20], 1, beam_width=48)
+    hit = np.asarray(ids)[:, 0] == got[:20]
+    assert hit.mean() > 0.8, hit.mean()
+
+
+def test_grow_preserves_packed_codes(churn_index):
+    idx, _, queries, _ = churn_index
+    packed = np.asarray(idx.rabitq_codes.packed)
+    adj = np.asarray(idx.graph.adjacency)
+    i1, d1 = idx.search_rabitq(queries, 10, beam_width=32)
+    idx.grow()
+    assert idx.capacity == 1800
+    assert (np.asarray(idx.rabitq_codes.packed)[:900] == packed).all()
+    assert (np.asarray(idx.graph.adjacency)[:900] == adj).all()
+    assert (np.asarray(idx.graph.adjacency)[900:] == -1).all()
+    i2, d2 = idx.search_rabitq(queries, 10, beam_width=32)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+def test_insert_auto_grows(churn_index):
+    idx, _, _, rng = churn_index
+    extra = rng.normal(size=(400, 32)).astype(np.float32)  # 700+400 > 900
+    ids = idx.insert(extra)
+    assert idx.capacity == 1800 and idx.size == 1100
+    assert (ids == np.arange(700, 1100)).all()
+
+
+def test_save_load_roundtrips_tombstones(tmp_path, churn_index):
+    idx, _, queries, rng = churn_index
+    dead = np.sort(rng.choice(700, 50, replace=False))
+    idx.delete(dead)
+    p = str(tmp_path / "m.npz")
+    idx.save(p)
+    idx2 = JasperIndex.load(p)
+    assert (np.asarray(idx2.mut.tombstone_bits)
+            == np.asarray(idx.mut.tombstone_bits)).all()
+    assert idx2.size == idx.size and idx2.generation == idx.generation
+    ids, _ = idx2.search(queries, 10, beam_width=48)
+    assert not np.isin(np.asarray(ids), dead).any()
+    # free pool survives the roundtrip: post-consolidate insert reuses slots
+    idx.consolidate()
+    idx.save(p)
+    idx3 = JasperIndex.load(p)
+    assert int(idx3.mut.n_free) == 50
+    got = idx3.insert(rng.normal(size=(50, 32)).astype(np.float32))
+    assert (got == dead).all()
+
+
+def test_delete_all_then_insert_rebuilds(churn_index):
+    idx, _, _, rng = churn_index
+    idx.delete(np.arange(700))
+    assert idx.size == 0
+    ids = idx.insert(rng.normal(size=(64, 32)).astype(np.float32))
+    assert idx.size == 64 and (ids == np.arange(64)).all()
+    q = rng.normal(size=(10, 32)).astype(np.float32)
+    assert idx.recall(q, k=5, beam_width=32) > 0.9
+
+
+def test_mips_streaming_reaugment():
+    """Satellite fix: a later batch raising the global max-norm re-augments
+    earlier rows, so the MIPS->L2 reduction stays exact under streaming."""
+    rng = np.random.default_rng(11)
+    d1 = rng.normal(size=(300, 24)).astype(np.float32)
+    d2 = (10.0 * rng.normal(size=(150, 24))).astype(np.float32)  # norm jump
+    idx = JasperIndex(24, capacity=500, metric="mips", construction=SMALL)
+    idx.build(d1)
+    idx.insert(d2)
+    q = rng.normal(size=(40, 24)).astype(np.float32)
+    ip = q @ np.concatenate([d1, d2]).T
+    got, _ = idx.brute_force(q, 1)
+    # brute force over consistently augmented rows == exact MIPS argmax
+    assert (np.asarray(got)[:, 0] == ip.argmax(1)).all()
+
+
+def test_pq_requires_explicit_opt_in():
+    """Satellite: the LUT-based PQ path is gated + deprecated (the paper's
+    negative result); RaBitQ is the only kernel-backed quantized path."""
+    rng = np.random.default_rng(12)
+    data = rng.normal(size=(400, 32)).astype(np.float32)
+    with pytest.warns(DeprecationWarning, match="NEGATIVE result"):
+        idx = JasperIndex(32, capacity=500, quantization="pq",
+                          construction=SMALL)
+    idx.build(data)
+    q = rng.normal(size=(20, 32)).astype(np.float32)
+    ids, _ = idx.search_pq(q, 10, beam_width=48)
+    gt, _ = idx.brute_force(q, 10)
+    rec = np.mean([len(set(np.asarray(ids)[i]) & set(np.asarray(gt)[i])) / 10
+                   for i in range(20)])
+    assert rec > 0.7, rec
+    # non-opted-in indexes expose no PQ path
+    plain = JasperIndex(32, capacity=100, construction=SMALL)
+    with pytest.raises(RuntimeError, match="quantization='pq'"):
+        plain.search_pq(q, 5)
+    with pytest.raises(ValueError, match="quantization"):
+        JasperIndex(32, capacity=100, quantization="opq")
+
+
+def test_anns_service_churn_loop():
+    """Online update/serve loop: interleaved insert/delete/search with
+    generation-stamped results and the no-tombstoned-ids contract."""
+    from repro.serving.anns_service import AnnsService
+
+    rng = np.random.default_rng(13)
+    idx = JasperIndex(32, capacity=1200, construction=SMALL,
+                      quantization="rabitq")
+    idx.build(rng.normal(size=(600, 32)).astype(np.float32))
+    svc = AnnsService(idx, k=10, beam_width=32, consolidate_threshold=0.2,
+                      verify=True)
+    live = list(range(600))
+    gens = []
+    for _ in range(4):
+        dead = rng.choice(live, 60, replace=False)
+        live = sorted(set(live) - set(dead.tolist()))
+        res = svc.step(deletes=dead,
+                       inserts=rng.normal(size=(40, 32)).astype(np.float32),
+                       queries=rng.normal(size=(20, 32)).astype(np.float32))
+        live += res.inserted_ids.tolist()
+        # verify=True already asserts no tombstoned ids; check the stamp
+        gens.append(res.search.generation)
+        returned = res.search.ids[res.search.ids >= 0]
+        assert np.isin(returned, live).all()
+    assert gens == sorted(gens) and len(set(gens)) == len(gens)
+    assert svc.stats.n_consolidations >= 1        # threshold crossed
+    assert svc.stats.as_dict()["n_delete_rows"] == 240

@@ -190,6 +190,39 @@ def test_rabitq_search_step_kernel_masks_invalid(bits):
                                rtol=1e-3, atol=1e-2)
 
 
+@pytest.mark.parametrize("bits", [1, 4])
+def test_rabitq_search_step_kernel_tombstone_mask(bits):
+    """The per-row tombstone bitmap extends the fused epilogue mask: dead
+    candidates come back +inf, live ones match the no-tombstone run."""
+    from repro.core.mutations import bitmap_gather, pack_bitmap
+    from repro.kernels.rabitq_dot.ref import rabitq_search_step_ref
+
+    n, d, q, k = 80, 96, 11, 13
+    n_valid = 70
+    db, qv = randn(n, d), randn(q, d)
+    params = rabitq_train(jax.random.PRNGKey(3), db, bits=bits)
+    codes = rabitq_encode(params, db)
+    qq = rabitq_preprocess_query(params, qv)
+    ids = jnp.asarray(RNG.integers(-1, n, (q, k)), jnp.int32)
+    safe = jnp.maximum(ids, 0)
+    cand = codes.packed[safe]
+    dense = jnp.asarray(RNG.integers(0, 2, n).astype(bool))
+    bits_map = pack_bitmap(dense)
+    live = (~bitmap_gather(bits_map, safe)).astype(jnp.int32)
+    out = rops.rabitq_search_step(
+        cand, codes.data_add[safe], codes.data_rescale[safe], ids,
+        jnp.int32(n_valid), qq.q_rot, qq.query_add, qq.query_sumq,
+        bits=bits, live=live)
+    ref = rabitq_search_step_ref(
+        cand, codes.data_add[safe], codes.data_rescale[safe], ids,
+        n_valid, qq.q_rot, qq.query_add, qq.query_sumq, bits=bits, dims=d,
+        live=live)
+    mask = np.asarray((ids >= 0) & (ids < n_valid) & (live != 0))
+    assert (np.isinf(np.asarray(out)) == ~mask).all()
+    np.testing.assert_allclose(np.asarray(out)[mask], np.asarray(ref)[mask],
+                               rtol=1e-3, atol=1e-2)
+
+
 # -------------------------------------------------------------------- topk
 @pytest.mark.parametrize("q,c,k", [(8, 128, 10), (5, 300, 32), (64, 64, 64)])
 def test_topk_kernel(q, c, k):

@@ -175,6 +175,80 @@ def test_topk_matches_ref(seed, q, c):
     assert (np.asarray(oi) == np.asarray(ri)).all()
 
 
+# -------------------------------------------------------------- tombstones
+@settings(**SETTINGS)
+@given(n=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_bitmap_roundtrip_and_gather(n, seed):
+    """pack/unpack is exact and bitmap_gather agrees bit-for-bit (negative
+    ids always read as not-set)."""
+    from repro.core.mutations import bitmap_gather, pack_bitmap, unpack_bitmap
+
+    rng = np.random.default_rng(seed)
+    dense = jnp.asarray(rng.integers(0, 2, n), jnp.bool_)
+    bits = pack_bitmap(dense)
+    assert bits.shape == ((n + 7) // 8,) and bits.dtype == jnp.uint8
+    assert (np.asarray(unpack_bitmap(bits, n)) == np.asarray(dense)).all()
+    ids = jnp.asarray(rng.integers(-2, n, 64), jnp.int32)
+    got = np.asarray(bitmap_gather(bits, ids))
+    want = np.where(np.asarray(ids) >= 0,
+                    np.asarray(dense)[np.maximum(np.asarray(ids), 0)], False)
+    assert (got == want).all()
+
+
+@settings(**SETTINGS)
+@given(
+    cap=st.integers(8, 200),
+    n_valid=st.integers(0, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_delete_rows_counts_and_idempotence(cap, n_valid, seed):
+    """delete_rows ignores duplicates/out-of-range/already-dead entries,
+    counts exactly the newly deleted rows, and bumps the generation."""
+    from repro.core.mutations import (
+        delete_rows, init_mutation_state, unpack_bitmap)
+
+    n_valid = min(n_valid, cap)
+    rng = np.random.default_rng(seed)
+    state = init_mutation_state(cap)
+    ids = jnp.asarray(rng.integers(-3, cap + 3, 40), jnp.int32)
+    state2, n_new = delete_rows(state, ids, jnp.int32(n_valid))
+    want = np.unique(np.asarray(ids))
+    want = want[(want >= 0) & (want < n_valid)]
+    assert int(n_new) == want.size
+    dense = np.asarray(unpack_bitmap(state2.tombstone_bits, cap))
+    assert set(np.where(dense)[0]) == set(want.tolist())
+    assert int(state2.generation) == int(state.generation) + 1
+    # idempotence: deleting the same ids again is a no-op on the bitmap
+    state3, n_again = delete_rows(state2, ids, jnp.int32(n_valid))
+    assert int(n_again) == 0
+    assert (np.asarray(state3.tombstone_bits)
+            == np.asarray(state2.tombstone_bits)).all()
+
+
+@settings(**SETTINGS)
+@given(cap=st.integers(4, 100), extra=st.integers(0, 100),
+       seed=st.integers(0, 2**31 - 1))
+def test_grow_state_preserves_prefix(cap, extra, seed):
+    """Capacity growth copy-extends: bitmap + free pool prefixes are
+    byte-identical, new tail rows are not-deleted / not-free."""
+    from repro.core.mutations import (
+        delete_rows, grow_state, init_mutation_state, unpack_bitmap)
+
+    rng = np.random.default_rng(seed)
+    state = init_mutation_state(cap)
+    ids = jnp.asarray(rng.integers(0, cap, 10), jnp.int32)
+    state, _ = delete_rows(state, ids, jnp.int32(cap))
+    new_cap = cap + extra
+    grown = grow_state(state, new_cap)
+    old = np.asarray(unpack_bitmap(state.tombstone_bits, cap))
+    new = np.asarray(unpack_bitmap(grown.tombstone_bits, new_cap))
+    assert (new[:cap] == old).all() and not new[cap:].any()
+    assert (np.asarray(grown.free_ids)[:cap]
+            == np.asarray(state.free_ids)).all()
+    assert (np.asarray(grown.free_ids)[cap:] == -1).all()
+    assert int(grown.n_free) == int(state.n_free)
+
+
 # --------------------------------------------------------------------- mips
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 64))
