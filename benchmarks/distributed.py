@@ -1,0 +1,137 @@
+"""Sharded search benchmark: QPS vs shard count + merge-collective bytes.
+
+Runs the SAME IndexCore search (`core_search` under shard_map) over 1, 2,
+4, and 8 row shards of fake host devices and measures
+
+  * end-to-end search wall time / QPS per shard count (quantized
+    packed-code path, exact rerank on-shard),
+  * recall@10 vs global brute force (shard-and-merge must not cost
+    recall),
+  * the merge collective's footprint from the compiled HLO (all_gather
+    bytes per device) — the paper's argument that shard-and-merge moves
+    only Q*k*8 bytes per hop,
+  * a fused-Pallas-kernel-path cell at the max shard count (parity +
+    no-tombstone-leak check after a delete wave).
+
+Standalone (the device-count flag must precede jax init):
+
+    PYTHONPATH=src python -m benchmarks.distributed [--fast]
+
+`benchmarks/run.py --only distributed` spawns it as a subprocess for the
+same reason. Emits BENCH_distributed.json.
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+DIMS = 64
+K = 10
+BEAM = 32
+N_QUERIES = 256
+SHARD_COUNTS = (1, 2, 4, 8)
+
+
+def _make_mesh(n_shards: int):
+    from repro.launch.mesh import make_mesh
+    return make_mesh((n_shards,), ("data",))
+
+
+def run(csv, n: int | None = None,
+        out_json: str | None = "BENCH_distributed.json") -> list[dict]:
+    import jax
+    from benchmarks.common import BENCH_PARAMS, time_call
+    from repro.core.distributed import ShardedJasperIndex, sharded_search_fn
+    from repro.roofline.hlo_analyzer import analyze_hlo
+
+    n = n or 8192
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(n, DIMS)).astype(np.float32)
+    queries = rng.normal(size=(N_QUERIES, DIMS)).astype(np.float32)
+
+    records: list[dict] = []
+    idx = None
+    for s in SHARD_COUNTS:
+        mesh = _make_mesh(s)
+        cap = -(-int(n * 1.25) // s)
+        cap += (-cap) % 8
+        idx = ShardedJasperIndex(mesh, DIMS, capacity_per_shard=cap,
+                                 construction=BENCH_PARAMS,
+                                 quantization="rabitq", bits=4)
+        t0 = time.perf_counter()
+        idx.build(data)
+        build_s = time.perf_counter() - t0
+
+        us = time_call(lambda: idx.search(queries, K, beam_width=BEAM,
+                                          quantized=True))
+        qps = N_QUERIES / (us * 1e-6)
+        rec_q = idx.recall(queries, K, beam_width=BEAM, quantized=True)
+
+        # merge-collective bytes from the compiled sharded search step
+        fn = sharded_search_fn(
+            mesh, idx.spec, idx.core, id_stride=idx.id_stride, k=K,
+            beam_width=BEAM, max_iters=2 * BEAM + 12, quantized=True,
+            filter_tombstones=False)
+        q_dev = jax.numpy.asarray(queries)
+        ana = analyze_hlo(fn.lower(idx.core, q_dev).compile().as_text())
+        coll = ana["collectives"]["total"]
+        csv.add(f"distributed/search_s{s}", us,
+                f"qps={qps:.0f} recall={rec_q:.3f} "
+                f"coll_bytes={coll['bytes']:.0f}")
+        records.append({
+            "n_shards": s, "rows": n, "dims": DIMS,
+            "capacity_per_shard": idx.cap,
+            "build_s": round(build_s, 2),
+            "search_us": round(us, 1), "qps": round(qps, 1),
+            "recall_at_10": round(rec_q, 4),
+            "merge_collective_bytes_per_device": coll["bytes"],
+            "merge_collective_count": coll["count"],
+        })
+
+    # kernel path at max shard count: parity + tombstone-leak check under
+    # a delete wave (the fused epilogue must mask per-shard tombstones)
+    dead = rng.choice(n // 2, 200, replace=False)
+    gids = (dead // (n // idx.n_shards)) * idx.id_stride \
+        + (dead % (n // idx.n_shards))
+    idx.delete(gids)
+    ids_k, _ = idx.search_rabitq(queries, K, beam_width=BEAM,
+                                 use_kernels=True)
+    leaked = int(np.isin(np.asarray(ids_k), gids).sum())
+    rec_k = idx.recall(queries, K, beam_width=BEAM, quantized=True)
+    csv.add(f"distributed/kernel_s{idx.n_shards}", 0.0,
+            f"recall={rec_k:.3f} tombstone_leaks={leaked}")
+    records.append({"n_shards": idx.n_shards, "path": "rabitq_kernel",
+                    "recall_at_10_after_deletes": round(rec_k, 4),
+                    "tombstone_leaks": leaked})
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"shard_sweep": records,
+                       "n_queries": N_QUERIES, "k": K, "beam": BEAM}, f,
+                      indent=2)
+        print(f"# wrote {out_json}", flush=True)
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out-json", default="BENCH_distributed.json")
+    args = ap.parse_args()
+    from benchmarks.common import Csv
+    csv = Csv()
+    csv.header()
+    run(csv, n=2048 if args.fast else None, out_json=args.out_json)
+
+
+if __name__ == "__main__":
+    main()

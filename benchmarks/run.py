@@ -50,7 +50,21 @@ SECTIONS = {
     # paper Fig 9 / §6.5
     "roofline_anns": lambda csv, fast: roofline_anns.run(
         csv, n=3000 if fast else None),
+    # sharded search: QPS vs shard count + merge-collective bytes.
+    # Subprocess: the multi-device XLA flag must precede jax init, and by
+    # the time run.py gets here jax is already initialized single-device.
+    "distributed": lambda csv, fast: _run_distributed_subprocess(fast),
 }
+
+
+def _run_distributed_subprocess(fast: bool) -> None:
+    import subprocess
+    cmd = [sys.executable, "-m", "benchmarks.distributed"]
+    if fast:
+        cmd.append("--fast")
+    res = subprocess.run(cmd)
+    if res.returncode:
+        raise RuntimeError(f"benchmarks.distributed exited {res.returncode}")
 
 
 def main() -> None:

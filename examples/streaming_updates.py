@@ -8,6 +8,14 @@ tick.
     PYTHONPATH=src python examples/streaming_updates.py            # grow-only
     PYTHONPATH=src python examples/streaming_updates.py --churn    # full loop
     PYTHONPATH=src python examples/streaming_updates.py --churn --quick
+
+With --sharded the SAME churn loop runs over a ShardedJasperIndex on a
+multi-device mesh (run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+for the CI smoke lane) — the AnnsService is backend-agnostic since the
+IndexCore unification, so the serve loop is unchanged:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/streaming_updates.py --churn --quick --sharded
 """
 
 import argparse
@@ -46,28 +54,67 @@ def run_streaming(total: int, batch: int, dims: int = 64) -> None:
           "and recall holds steady — no rebuilds happened.")
 
 
+def _make_sharded_index(dims: int, capacity: int, params) -> object:
+    """ShardedJasperIndex over every available device (row shards x a
+    2-way query axis when the device count allows it)."""
+    import jax
+    from repro.core.distributed import ShardedJasperIndex
+    from repro.launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    model = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
+    shape = (n_dev // model, model)
+    mesh = make_mesh(shape, ("data", "model"))
+    n_shards = shape[0]
+    cap = -(-capacity // n_shards)
+    cap += (-cap) % 8
+    print(f"sharded: {n_shards} row shards x {model}-way query axis, "
+          f"capacity {cap}/shard")
+    return ShardedJasperIndex(mesh, dims, capacity_per_shard=cap,
+                              construction=params, quantization="rabitq",
+                              bits=4)
+
+
 def run_churn(n0: int, rounds: int, batch: int, dims: int,
-              quick: bool) -> None:
+              quick: bool, sharded: bool = False) -> None:
     """Interleaved insert/delete/consolidate with live recall: the online
-    update/serve loop over one index, no rebuilds, no downtime."""
+    update/serve loop over one index driver — single-device or sharded,
+    the service code path is identical."""
     from repro.serving.anns_service import AnnsService
 
     rng = np.random.default_rng(2)
-    idx = JasperIndex(dims, capacity=int(n0 * 1.5),
-                      construction=QUICK_PARAMS if quick else PARAMS,
-                      quantization="rabitq", bits=4)
-    idx.build(rng.normal(size=(n0, dims)).astype(np.float32))
+    params = QUICK_PARAMS if quick else PARAMS
+    if sharded:
+        idx = _make_sharded_index(dims, int(n0 * 1.5), params)
+        # build and per-tick inserts deal rows evenly to shards — round
+        # both down to shard multiples so any device count works
+        n0 -= n0 % idx.n_shards
+        batch = max(idx.n_shards, batch - batch % idx.n_shards)
+    else:
+        idx = JasperIndex(dims, capacity=int(n0 * 1.5),
+                          construction=params, quantization="rabitq", bits=4)
+    data0 = rng.normal(size=(n0, dims)).astype(np.float32)
+    idx.build(data0)
     queries = rng.normal(size=(100, dims)).astype(np.float32)
     svc = AnnsService(idx, k=10, beam_width=48,
                       consolidate_threshold=0.15, verify=True)
 
-    live = list(range(n0))
+    if sharded:
+        per = n0 // idx.n_shards
+        live = [idx.global_row(s, i) for s in range(idx.n_shards)
+                for i in range(per)]
+    else:
+        live = list(range(n0))
     print(f"{'tick':>4s} {'size':>6s} {'del':>5s} {'ins':>5s} {'reused':>6s} "
           f"{'cons':>12s} {'gen':>4s} {'recall@10':>9s}")
     for t in range(rounds):
         dead = rng.choice(live, batch, replace=False)
         live = sorted(set(live) - set(dead.tolist()))
-        hw_before = int(idx.graph.n_valid)   # fresh ids start here
+        # fresh (non-reused) ids start at each shard's high-water mark
+        if sharded:
+            hw_before = np.asarray(idx.core.n_valid).copy()
+        else:
+            hw_before = int(idx.graph.n_valid)
         res = svc.step(deletes=dead,
                        inserts=rng.normal(size=(batch, dims))
                        .astype(np.float32),
@@ -77,7 +124,12 @@ def run_churn(n0: int, rounds: int, batch: int, dims: int,
         # already asserts it; double-check against our own book-keeping)
         returned = res.search.ids[res.search.ids >= 0]
         assert np.isin(returned, live).all(), "tombstoned id returned!"
-        reused = int((res.inserted_ids < hw_before).sum())
+        if sharded:
+            ins = res.inserted_ids
+            reused = int(np.sum((ins % idx.id_stride)
+                                < hw_before[ins // idx.id_stride]))
+        else:
+            reused = int((res.inserted_ids < hw_before).sum())
         r = idx.recall(queries, k=10, beam_width=48)
         cons = (f"freed={res.consolidated['n_freed']}"
                 if res.consolidated else "-")
@@ -99,13 +151,17 @@ def main() -> None:
                     help="interleaved insert/delete/consolidate scenario")
     ap.add_argument("--quick", action="store_true",
                     help="small sizes (CI smoke scale)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="churn over ShardedJasperIndex on all devices")
     args = ap.parse_args()
 
     if args.churn:
         if args.quick:
-            run_churn(n0=600, rounds=3, batch=60, dims=64, quick=True)
+            run_churn(n0=600, rounds=3, batch=60, dims=64, quick=True,
+                      sharded=args.sharded)
         else:
-            run_churn(n0=6000, rounds=6, batch=500, dims=64, quick=False)
+            run_churn(n0=6000, rounds=6, batch=500, dims=64, quick=False,
+                      sharded=args.sharded)
     elif args.quick:
         run_streaming(total=3000, batch=750)
     else:

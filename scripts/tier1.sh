@@ -24,6 +24,10 @@ case "$mode" in
     # mutation-engine churn scenario end-to-end on synthetic data
     # (insert/delete/consolidate interleaved through the serving loop)
     python examples/streaming_updates.py --churn --quick
+    # multi-device lane: the SAME churn loop over ShardedJasperIndex
+    # (8 fake host devices; IndexCore shard_map-wrapped per row shard)
+    XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
+      python examples/streaming_updates.py --churn --quick --sharded
     ;;
   *)
     echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2

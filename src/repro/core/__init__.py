@@ -46,6 +46,18 @@ from repro.core.beam_search import (
 )
 from repro.core.robust_prune import robust_prune_batch
 from repro.core.construction import batch_insert, batch_insert_at, build_graph
+from repro.core.index_core import (
+    IndexCore,
+    attach_quantizer,
+    core_brute_force,
+    core_build,
+    core_consolidate,
+    core_delete,
+    core_grow,
+    core_insert_at,
+    core_search,
+    init_core,
+)
 from repro.core.index import JasperIndex
 
 __all__ = [
@@ -67,5 +79,8 @@ __all__ = [
     "merge_frontier_sort", "merge_frontier_topk", "merge_frontier_kernel",
     "robust_prune_batch",
     "batch_insert", "batch_insert_at", "build_graph",
+    "IndexCore", "init_core", "attach_quantizer",
+    "core_search", "core_insert_at", "core_delete",
+    "core_consolidate", "core_grow", "core_build", "core_brute_force",
     "JasperIndex",
 ]

@@ -297,6 +297,49 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                             visited_ids=vlog, visited_dists=vdlog, n_hops=hops)
 
 
+def rerank_frontier(vectors: Array, vec_sqnorm: Array, queries: Array,
+                    ids: Array, *, tile_q: int = 512,
+                    use_kernels: bool = False,
+                    interpret: bool | None = None) -> Array:
+    """Exact distances for a (Q, L) frontier, tiled over the query axis.
+
+    The rerank stage's working set is the gathered (Q, L, D) f32 candidate
+    buffer — at serving batch sizes that alone can blow past VMEM-friendly
+    footprints and pins the stage to the bandwidth roof. Tiling processes
+    `tile_q` queries at a time under `lax.map`, bounding the live gather
+    buffer at (tile_q, L, D) regardless of Q; with use_kernels the per-tile
+    score runs through the Pallas gather-distance kernel (fused HBM->VMEM
+    tile loads), otherwise the jnp gather+einsum reference.
+
+    Invalid ids (< 0) come back +inf. Both drivers' quantized rerank and
+    the sharded path's shard-local final rerank go through here.
+    """
+    q_n, l = ids.shape
+    tile_q = max(1, min(tile_q, q_n))
+    pad = (-q_n) % tile_q
+    q_pad = jnp.pad(queries.astype(jnp.float32), ((0, pad), (0, 0)))
+    ids_pad = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+    n_tiles = (q_n + pad) // tile_q
+    q_tiles = q_pad.reshape(n_tiles, tile_q, -1)
+    id_tiles = ids_pad.reshape(n_tiles, tile_q, l)
+
+    if use_kernels:
+        from repro.kernels.distance.ops import gather_l2_chunked
+
+        def do_tile(args):
+            qt, it = args
+            return gather_l2_chunked(qt, vectors, vec_sqnorm, it,
+                                     interpret=interpret)
+    else:
+        def do_tile(args):
+            qt, it = args
+            score = make_exact_scorer(vectors, qt, None, vec_sqnorm)
+            return jnp.where(it >= 0, score(it), _INF)
+
+    d = jax.lax.map(do_tile, (q_tiles, id_tiles))
+    return d.reshape(-1, l)[:q_n]
+
+
 def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                           query: RaBitQQuery, *, beam_width: int,
                           max_iters: int,

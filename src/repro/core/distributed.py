@@ -1,48 +1,70 @@
-"""Sharded Jasper index — scale-out to pods (DESIGN.md §4).
+"""ShardedJasperIndex — the IndexCore driver, shard_map-wrapped per row-shard.
 
-The single-device paper leaves multi-GPU on the table; production vector
-search at 100M–100B rows is shard-and-merge (FAISS/ScaNN style):
+Since the IndexCore unification there is exactly ONE index implementation:
+the pure core ops in `core.index_core`. This module runs them under
+`shard_map` over the mesh's row axes, so an S-shard index is S independent
+cores plus a k-way merge — and the single-device `JasperIndex` is literally
+the 1-shard case (both drivers call the same `core_search`,
+`core_insert_at`, `core_delete`, `core_consolidate`, `core_grow`; no
+search or insert logic lives here).
 
-  * database rows sharded over the (pod, data) mesh axes — each device owns
-    an INDEPENDENT Vamana sub-index over its rows (graph edges never cross
-    shards, so construction has zero cross-device traffic);
-  * queries sharded over the `model` axis — query parallelism;
-  * search: shard-local beam search -> local top-k -> all_gather over the
-    row-sharding axes -> merge-sort. The collective moves only Q*k*(8 B),
-    which is why the roofline stays compute/memory-local (§Roofline).
+Layout (FAISS/ScaNN-style shard-and-merge, scaled for 100M–100B rows):
 
-Adjacency entries are SHARD-LOCAL ids; global ids are reconstructed as
-shard_row0 + local_id at merge time, keeping all graph arithmetic int32
+  * database rows are dealt over the row axes — each device owns an
+    INDEPENDENT core (graph edges never cross shards, so construction and
+    consolidation have zero cross-device traffic). Every capacity-major
+    array stacks to the sharded global form: vectors (S*cap, D), packed
+    RaBitQ codes (S*cap, P), tombstone bitmaps (S*cap/8,) — per-shard
+    liveness is a bitmap slice, so shard-local deletes need NO
+    coordination and ride into the fused kernel epilogue per shard;
+  * `rq_params` (rotation/centroid) is dataset-level state, replicated;
+  * queries shard over the `model` axis (query parallelism);
+  * search: shard-local `core_search` (packed codes through the fused
+    Pallas `rabitq_search_step` scorer, per-shard tombstone masking,
+    shard-local exact rerank) -> local top-k -> all_gather over each row
+    axis in turn -> partial top-k merge. The collective moves only
+    Q*k*8 bytes per hop, which is why the roofline stays memory-local.
+
+Adjacency entries and free pools hold SHARD-LOCAL ids; global ids are
+`shard * id_stride + local`, reconstructed at merge time. `id_stride` is
+FIXED at construction (default 4x the initial per-shard capacity), so the
+ids handed to clients are layout-independent: capacity can grow (per-shard
+copy-extension, packed codes bit-identical) without invalidating a single
+outstanding id. Growing past the stride raises — choose a larger
+`id_stride` up front for more headroom. All graph arithmetic stays int32
 even at 100B rows per pod (the GANNS int32-overflow failure the paper
 reports cannot happen here).
-
-All functions are pure and `shard_map`-wrapped; the host-side
-`ShardedJasperIndex` drives the same prefix-doubling schedule as the local
-index, but every rung inserts into EVERY shard at once.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
+import json
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.beam_search import beam_search, make_exact_scorer
-from repro.core.construction import (
-    ConstructionParams,
-    batch_insert,
-    bootstrap_graph,
+from repro.core.construction import ConstructionParams
+from repro.core.index_core import (
+    IndexCore,
+    attach_quantizer,
+    bitmap_test_np,
+    core_bootstrap,
+    core_consolidate,
+    core_delete,
+    core_from_arrays,
+    core_insert_at,
+    core_search,
+    core_to_arrays,
+    init_core,
 )
-from repro.core.medoid import compute_medoid
-from repro.core.vamana import VamanaGraph, init_graph
+from repro.core.mutations import MutationState
+from repro.core.rabitq import RaBitQCodes, RaBitQParams, rabitq_train
 
 Array = jax.Array
-
-_INF = float("inf")
 
 
 @dataclass(frozen=True)
@@ -54,122 +76,211 @@ class ShardSpec:
     """
 
     row_axes: tuple[str, ...] = ("data",)
-    query_axis: str = "model"
+    query_axis: str | None = "model"
 
 
-def _local_graph(adjacency: Array, n_valid: Array, medoid: Array) -> VamanaGraph:
-    return VamanaGraph(adjacency=adjacency, n_valid=n_valid[0], medoid=medoid[0])
+# ---------------------------------------------------------------------------
+# Core layout: PartitionSpec / NamedSharding pytrees mirroring IndexCore
+# ---------------------------------------------------------------------------
+
+def _core_layout(template: IndexCore, row_axes, wrap):
+    """IndexCore-shaped pytree of `wrap(spec)` — row-major arrays shard
+    over the row axes, per-shard scalars are (S,) vectors on the same axes,
+    and dataset-level quantizer state is replicated."""
+    row2 = wrap(P(row_axes, None))
+    row1 = wrap(P(row_axes))
+    repl = wrap(P())
+    mut = MutationState(tombstone_bits=row1, free_ids=row1, n_free=row1,
+                        n_deleted=row1, generation=row1)
+    codes = None
+    if template.codes is not None:
+        codes = RaBitQCodes(packed=row2, data_add=row1, data_rescale=row1,
+                            bits=template.codes.bits,
+                            dims=template.codes.dims)
+    rq = None
+    if template.rq_params is not None:
+        rq = RaBitQParams(rotation=repl, centroid=repl,
+                          bits=template.rq_params.bits)
+    return IndexCore(vectors=row2, vec_sqnorm=row1, adjacency=row2,
+                     n_valid=row1, medoid=row1, mut=mut, codes=codes,
+                     rq_params=rq)
 
 
-def sharded_search_fn(mesh: Mesh, spec: ShardSpec, *, capacity_per_shard: int,
-                      k: int, beam_width: int, max_iters: int):
-    """Build the jit-able sharded search step.
+def core_partition_specs(template: IndexCore, spec: ShardSpec) -> IndexCore:
+    return _core_layout(template, spec.row_axes, lambda p: p)
 
-    Returns fn(vectors, vec_sqnorm, adjacency, n_valid, medoid, queries)
-      vectors:   (S*cap, D)  rows sharded over spec.row_axes
-      adjacency: (S*cap, R)  local ids, sharded like vectors
-      n_valid:   (S,) per-shard live counts; medoid: (S,) local medoid ids
-      queries:   (Q, D)      sharded over spec.query_axis
-    -> (ids (Q, k) GLOBAL row ids, dists (Q, k)), sharded over query_axis.
-    """
+
+def core_shardings(mesh: Mesh, template: IndexCore,
+                   spec: ShardSpec) -> IndexCore:
+    return _core_layout(template, spec.row_axes,
+                        lambda p: NamedSharding(mesh, p))
+
+
+def _local_core(stacked: IndexCore) -> IndexCore:
+    """Inside shard_map: turn the local block (scalars arrive as (1,)
+    vectors) into a proper per-shard IndexCore."""
+    return replace(
+        stacked, n_valid=stacked.n_valid[0], medoid=stacked.medoid[0],
+        mut=replace(stacked.mut, n_free=stacked.mut.n_free[0],
+                    n_deleted=stacked.mut.n_deleted[0],
+                    generation=stacked.mut.generation[0]))
+
+
+def _restack(core: IndexCore) -> IndexCore:
+    """Inverse of `_local_core` for shard_map outputs."""
+    return replace(
+        core, n_valid=core.n_valid[None], medoid=core.medoid[None],
+        mut=replace(core.mut, n_free=core.mut.n_free[None],
+                    n_deleted=core.mut.n_deleted[None],
+                    generation=core.mut.generation[None]))
+
+
+def _shard_index(row_axes, axis_sizes) -> Array:
+    """Linear shard index of this device along the row axes.
+
+    axis_sizes: static {axis: size} (mesh.shape) — axis extents are mesh
+    constants, so no in-graph axis_size query (0.4.x compat) is needed."""
+    idx = jnp.int32(0)
+    mult = 1
+    for ax in reversed(row_axes):
+        idx = idx + jax.lax.axis_index(ax) * mult
+        mult *= axis_sizes[ax]
+    return idx
+
+
+def merge_topk(gids: Array, dists: Array, row_axes, k: int
+               ) -> tuple[Array, Array]:
+    """Hierarchical shard merge: all_gather along each row axis in turn
+    keeps per-hop payload at S_axis*Q_loc*k instead of S_total*Q_loc*k."""
+    n_q = gids.shape[0]
+    for ax in row_axes:
+        gd = jax.lax.all_gather(dists, ax, axis=0)       # (s, Q, k)
+        gi = jax.lax.all_gather(gids, ax, axis=0)
+        gd = jnp.moveaxis(gd, 0, 1).reshape(n_q, -1)
+        gi = jnp.moveaxis(gi, 0, 1).reshape(n_q, -1)
+        neg, pos = jax.lax.top_k(-gd, k)
+        dists = -neg
+        gids = jnp.take_along_axis(gi, pos, axis=1)
+    return gids, dists
+
+
+# ---------------------------------------------------------------------------
+# shard_map-wrapped core ops
+# ---------------------------------------------------------------------------
+
+def sharded_search_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore, *,
+                      id_stride: int, k: int, beam_width: int,
+                      max_iters: int, expand: int = 1,
+                      quantized: bool = False, rerank: bool = True,
+                      use_kernels: bool = False, merge: str = "topk",
+                      traverse_deleted: bool = True,
+                      filter_tombstones: bool = True):
+    """Build the jit'd sharded search step: shard-local `core_search`
+    (IDENTICAL to the single-device hot path — fused Pallas scorer over
+    packed codes, per-shard tombstone bitmap, shard-local exact rerank)
+    followed by the all_gather merge. fn(core_stacked, queries) ->
+    (GLOBAL ids (Q, k), dists (Q, k)), sharded over the query axis."""
     row_axes = spec.row_axes
 
-    def local_search(vectors, vec_sqnorm, adjacency, n_valid, medoid, queries):
-        # shard-local beam search
-        graph = _local_graph(adjacency, n_valid, medoid)
-        score = make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
-        res = beam_search(graph, score, queries.shape[0],
-                          beam_width=beam_width, max_iters=max_iters)
-        ids = res.frontier_ids[:, :k]
-        dists = res.frontier_dists[:, :k]
-
-        # local -> global ids
-        shard_idx = jnp.int32(0)
-        mult = 1
-        for ax in reversed(row_axes):
-            shard_idx = shard_idx + jax.lax.axis_index(ax) * mult
-            mult *= mesh.shape[ax]
-        row0 = shard_idx * capacity_per_shard
+    def local_search(core_stacked, queries):
+        core = _local_core(core_stacked)
+        ids, dists, _ = core_search(
+            core, queries, k=k, beam_width=beam_width, max_iters=max_iters,
+            expand=expand, quantized=quantized, rerank=rerank,
+            use_kernels=use_kernels, merge=merge,
+            traverse_deleted=traverse_deleted,
+            filter_tombstones=filter_tombstones)
+        row0 = _shard_index(row_axes, dict(mesh.shape)) * id_stride
         gids = jnp.where(ids >= 0, ids + row0, -1)
+        return merge_topk(gids, dists, row_axes, k)
 
-        # hierarchical merge: all_gather along each row axis in turn keeps
-        # per-hop payload at S_axis*Q_loc*k instead of S_total*Q_loc*k
-        for ax in row_axes:
-            gd = jax.lax.all_gather(dists, ax, axis=0)       # (s, Q, k)
-            gi = jax.lax.all_gather(gids, ax, axis=0)
-            gd = jnp.moveaxis(gd, 0, 1).reshape(queries.shape[0], -1)
-            gi = jnp.moveaxis(gi, 0, 1).reshape(queries.shape[0], -1)
-            neg, pos = jax.lax.top_k(-gd, k)
-            dists = -neg
-            gids = jnp.take_along_axis(gi, pos, axis=1)
-        return gids, dists
-
-    vec_spec = P(row_axes, None)
-    scal_spec = P(row_axes)
     q_spec = P(spec.query_axis, None)
-    out_spec = P(spec.query_axis, None)
     fn = shard_map(
         local_search, mesh=mesh,
-        in_specs=(vec_spec, scal_spec, vec_spec, scal_spec, scal_spec, q_spec),
-        out_specs=(out_spec, out_spec),
-        check_vma=False,
-    )
-    return jax.jit(fn)
+        in_specs=(core_partition_specs(template, spec), q_spec),
+        out_specs=(q_spec, q_spec), check_vma=False)
+    return jax.jit(fn, in_shardings=(core_shardings(mesh, template, spec),
+                                     NamedSharding(mesh, q_spec)))
 
 
-def sharded_insert_fn(mesh: Mesh, spec: ShardSpec, *, batch_size_per_shard: int,
+def sharded_insert_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore, *,
                       params: ConstructionParams):
-    """Build the jit-able sharded batch-insert step.
+    """Build the jit'd sharded insert step: every shard links its own batch
+    via `core_insert_at` (rows + LOCAL slot ids already dealt by the host)
+    — pure data parallelism, zero collectives."""
 
-    Every shard inserts its own `batch_size_per_shard` rows (already written
-    into its region of the vectors array) — pure data parallelism, zero
-    collectives: the paper's lock-free batch phases become embarrassingly
-    parallel across shards.
-    """
+    def local_insert(core_stacked, ids, rows):
+        core = core_insert_at(_local_core(core_stacked), ids[0], rows[0],
+                              params=params)
+        return _restack(core)
 
-    def local_insert(vectors, vec_sqnorm, adjacency, n_valid, medoid, start):
-        graph = _local_graph(adjacency, n_valid, medoid)
-        graph = batch_insert(vectors, graph, start[0],
-                             batch_size=batch_size_per_shard, params=params,
-                             vec_sqnorm=vec_sqnorm)
-        return graph.adjacency, graph.n_valid[None], graph.medoid[None]
-
-    vec_spec = P(spec.row_axes, None)
-    scal_spec = P(spec.row_axes)
+    specs = core_partition_specs(template, spec)
     fn = shard_map(
         local_insert, mesh=mesh,
-        in_specs=(vec_spec, scal_spec, vec_spec, scal_spec, scal_spec,
-                  scal_spec),
-        out_specs=(vec_spec, scal_spec, scal_spec),
-        check_vma=False,
-    )
+        in_specs=(specs, P(spec.row_axes, None), P(spec.row_axes, None, None)),
+        out_specs=specs, check_vma=False)
     return jax.jit(fn)
 
 
-def sharded_bootstrap_fn(mesh: Mesh, spec: ShardSpec, *, n0: int,
-                         params: ConstructionParams):
-    def local_boot(vectors, adjacency, n_valid, medoid):
-        graph = _local_graph(adjacency, n_valid, medoid)
-        graph = bootstrap_graph(vectors, graph, n0=n0, params=params)
-        return graph.adjacency, graph.n_valid[None], graph.medoid[None]
+def sharded_bootstrap_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore, *,
+                         n0: int, params: ConstructionParams):
+    def local_boot(core_stacked, rows):
+        core = core_bootstrap(_local_core(core_stacked), rows[0],
+                              n0=n0, params=params)
+        return _restack(core)
 
-    vec_spec = P(spec.row_axes, None)
-    scal_spec = P(spec.row_axes)
+    specs = core_partition_specs(template, spec)
     fn = shard_map(
         local_boot, mesh=mesh,
-        in_specs=(vec_spec, vec_spec, scal_spec, scal_spec),
-        out_specs=(vec_spec, scal_spec, scal_spec),
-        check_vma=False,
-    )
+        in_specs=(specs, P(spec.row_axes, None, None)),
+        out_specs=specs, check_vma=False)
     return jax.jit(fn)
 
 
+def sharded_delete_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore):
+    """Build the jit'd sharded delete: each shard tombstones its own batch
+    of LOCAL ids (-1 padded) in its own bitmap — no coordination."""
+
+    def local_delete(core_stacked, ids):
+        core, n_new = core_delete(_local_core(core_stacked), ids[0])
+        return _restack(core), n_new[None]
+
+    specs = core_partition_specs(template, spec)
+    fn = shard_map(
+        local_delete, mesh=mesh,
+        in_specs=(specs, P(spec.row_axes, None)),
+        out_specs=(specs, P(spec.row_axes)), check_vma=False)
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Host driver — same role as JasperIndex, one core per shard
+# ---------------------------------------------------------------------------
+
 class ShardedJasperIndex:
-    """Host-side driver for a row-sharded Jasper index on a device mesh."""
+    """Row-sharded Jasper index: the IndexCore driver on a device mesh."""
 
     def __init__(self, mesh: Mesh, dims: int, capacity_per_shard: int, *,
                  spec: ShardSpec | None = None,
-                 construction: ConstructionParams | None = None):
+                 construction: ConstructionParams | None = None,
+                 quantization: str | None = None, bits: int = 4,
+                 seed: int = 0, id_stride: int | None = None):
+        """id_stride: global ids are shard*id_stride + local, fixed for the
+        index lifetime (default 4x capacity_per_shard) — capacity can grow
+        up to the stride without invalidating outstanding ids."""
+        if quantization not in (None, "rabitq"):
+            raise ValueError(
+                "sharded quantization must be None or 'rabitq' "
+                "(PQ is a deprecated single-device comparison baseline)")
+        if capacity_per_shard % 8:
+            raise ValueError(
+                "capacity_per_shard must be a multiple of 8 so per-shard "
+                f"tombstone bitmaps stack cleanly, got {capacity_per_shard}")
+        self.id_stride = id_stride or 4 * capacity_per_shard
+        if self.id_stride < capacity_per_shard:
+            raise ValueError(
+                f"id_stride {self.id_stride} < capacity_per_shard "
+                f"{capacity_per_shard}")
         self.mesh = mesh
         self.spec = spec or ShardSpec(
             row_axes=tuple(a for a in mesh.axis_names if a != "model")
@@ -180,111 +291,509 @@ class ShardedJasperIndex:
             # fall back to replicated queries on meshes without a model axis
             self.spec = ShardSpec(self.spec.row_axes, None)
         self.dims = dims
+        self.store_dims = dims          # sharded driver is L2-only (no MIPS)
         self.cap = capacity_per_shard
         self.params = construction or ConstructionParams()
+        self.quantization = quantization
+        self.bits = bits
+        self.seed = seed
         self.n_shards = 1
         for ax in self.spec.row_axes:
             self.n_shards *= mesh.shape[ax]
 
-        rows = self.n_shards * capacity_per_shard
-        dev = NamedSharding(mesh, P(self.spec.row_axes, None))
-        dev1 = NamedSharding(mesh, P(self.spec.row_axes))
-        self.vectors = jax.device_put(
-            jnp.zeros((rows, dims), jnp.float32), dev)
-        self.vec_sqnorm = jax.device_put(jnp.zeros((rows,), jnp.float32), dev1)
-        self.adjacency = jax.device_put(
-            jnp.full((rows, self.params.degree_bound), -1, jnp.int32), dev)
-        self.n_valid = jax.device_put(
-            jnp.zeros((self.n_shards,), jnp.int32), dev1)
-        self.medoid = jax.device_put(
-            jnp.zeros((self.n_shards,), jnp.int32), dev1)
-        self._search_cache: dict = {}
-        self._insert_cache: dict = {}
+        self.core = self._device_put(self._empty_stacked_core())
+        self._fn_cache: dict = {}
 
+    # --------------------------------------------------------------- stacking
+    def _empty_stacked_core(self) -> IndexCore:
+        s, cap = self.n_shards, self.cap
+        core = init_core(s * cap, self.store_dims, self.params.degree_bound)
+        return replace(
+            core,
+            n_valid=jnp.zeros((s,), jnp.int32),
+            medoid=jnp.zeros((s,), jnp.int32),
+            mut=replace(core.mut,
+                        n_free=jnp.zeros((s,), jnp.int32),
+                        n_deleted=jnp.zeros((s,), jnp.int32),
+                        generation=jnp.zeros((s,), jnp.int32)))
+
+    def _device_put(self, core: IndexCore) -> IndexCore:
+        return jax.device_put(core,
+                              core_shardings(self.mesh, core, self.spec))
+
+    def shard_core(self, s: int) -> IndexCore:
+        """Host-side view of shard s as a plain (local-id) IndexCore —
+        the unit of consolidation and of checkpoint I/O."""
+        cap = self.cap
+        rows = slice(s * cap, (s + 1) * cap)
+        bits = slice(s * (cap // 8), (s + 1) * (cap // 8))
+        c = self.core
+        codes = None
+        if c.codes is not None:
+            codes = RaBitQCodes(packed=c.codes.packed[rows],
+                                data_add=c.codes.data_add[rows],
+                                data_rescale=c.codes.data_rescale[rows],
+                                bits=c.codes.bits, dims=c.codes.dims)
+        return IndexCore(
+            vectors=c.vectors[rows], vec_sqnorm=c.vec_sqnorm[rows],
+            adjacency=c.adjacency[rows], n_valid=c.n_valid[s],
+            medoid=c.medoid[s],
+            mut=MutationState(tombstone_bits=c.mut.tombstone_bits[bits],
+                              free_ids=c.mut.free_ids[rows],
+                              n_free=c.mut.n_free[s],
+                              n_deleted=c.mut.n_deleted[s],
+                              generation=c.mut.generation[s]),
+            codes=codes, rq_params=c.rq_params)
+
+    def _stack_cores(self, locals_: list[IndexCore]) -> IndexCore:
+        """Assemble S per-shard (local-id) cores into the stacked device
+        core — ONE concatenation + device_put per buffer, so restoring or
+        repairing all shards moves the index once, not once per shard."""
+        def cat(get):
+            return jnp.concatenate([get(c) for c in locals_], axis=0)
+
+        def vec(get):
+            return jnp.stack([jnp.asarray(get(c), jnp.int32)
+                              for c in locals_])
+
+        codes = None
+        if locals_[0].codes is not None:
+            c0 = locals_[0].codes
+            codes = RaBitQCodes(
+                packed=cat(lambda c: c.codes.packed),
+                data_add=cat(lambda c: c.codes.data_add),
+                data_rescale=cat(lambda c: c.codes.data_rescale),
+                bits=c0.bits, dims=c0.dims)
+        core = IndexCore(
+            vectors=cat(lambda c: c.vectors),
+            vec_sqnorm=cat(lambda c: c.vec_sqnorm),
+            adjacency=cat(lambda c: c.adjacency),
+            n_valid=vec(lambda c: c.n_valid),
+            medoid=vec(lambda c: c.medoid),
+            mut=MutationState(
+                tombstone_bits=cat(lambda c: c.mut.tombstone_bits),
+                free_ids=cat(lambda c: c.mut.free_ids),
+                n_free=vec(lambda c: c.mut.n_free),
+                n_deleted=vec(lambda c: c.mut.n_deleted),
+                generation=vec(lambda c: c.mut.generation)),
+            codes=codes, rq_params=locals_[0].rq_params)
+        return self._device_put(core)
+
+    # ------------------------------------------------------------------ util
     @property
     def size(self) -> int:
-        return int(jnp.sum(self.n_valid))
+        return int(np.sum(np.asarray(self.core.n_valid))
+                   - np.sum(np.asarray(self.core.mut.n_deleted))
+                   - np.sum(np.asarray(self.core.mut.n_free)))
 
-    def _write_rows(self, per_shard_start: int, data) -> None:
-        """data: (S, b, D) — shard s's rows land at s*cap + start."""
-        s, b, d = data.shape
-        ids = (jnp.arange(s)[:, None] * self.cap
-               + per_shard_start + jnp.arange(b)[None, :]).reshape(-1)
-        flat = jnp.asarray(data, jnp.float32).reshape(-1, d)
-        self.vectors = self.vectors.at[ids].set(flat)
-        self.vec_sqnorm = self.vec_sqnorm.at[ids].set(
-            jnp.sum(flat * flat, axis=-1))
+    @property
+    def capacity(self) -> int:
+        """Total row capacity across shards."""
+        return self.n_shards * self.cap
+
+    @property
+    def generation(self) -> int:
+        """Sum of per-shard generation counters (monotonic under every
+        mutation on any shard) — serving layers stamp results with it."""
+        return int(np.sum(np.asarray(self.core.mut.generation)))
+
+    @property
+    def n_deleted(self) -> int:
+        return int(np.sum(np.asarray(self.core.mut.n_deleted)))
+
+    @property
+    def deleted_fraction(self) -> float:
+        n = (int(np.sum(np.asarray(self.core.n_valid)))
+             - int(np.sum(np.asarray(self.core.mut.n_free))))
+        return self.n_deleted / n if n else 0.0
+
+    @property
+    def _filter_tombstones(self) -> bool:
+        return (self.n_deleted != 0
+                or int(np.sum(np.asarray(self.core.mut.n_free))) != 0)
+
+    def global_row(self, shard: int, local_id: int) -> int:
+        return shard * self.id_stride + local_id
+
+    def tombstoned(self, ids) -> np.ndarray:
+        """Host-side deadness test for GLOBAL ids (the serving-contract
+        check). The bit position in the stacked capacity-major bitmap is
+        shard*cap + local; the bit test itself is the shared
+        `bitmap_test_np` (one encoding, one definition). Ids whose local
+        part falls outside the per-shard capacity are dead by definition."""
+        ids = np.asarray(ids)
+        shard, local = ids // self.id_stride, ids % self.id_stride
+        in_cap = local < self.cap
+        bit_pos = shard * self.cap + np.minimum(local, self.cap - 1)
+        dead = bitmap_test_np(np.asarray(self.core.mut.tombstone_bits),
+                              bit_pos)
+        n_valid = np.asarray(self.core.n_valid)
+        return dead | ~in_cap | (local >= n_valid[shard])
+
+    def _template(self) -> IndexCore:
+        return self.core
+
+    # ------------------------------------------------------------ build/insert
+    def _ensure_quantizer(self, rows: Array) -> None:
+        if self.quantization == "rabitq" and self.core.rq_params is None:
+            params = rabitq_train(jax.random.PRNGKey(self.seed), rows,
+                                  bits=self.bits)
+            self.core = self._device_put(attach_quantizer(self.core, params))
+            self._fn_cache.clear()      # core structure changed
 
     def build(self, data) -> "ShardedJasperIndex":
         """Bulk build. data: (N, D) with N divisible by n_shards — rows are
-        dealt contiguously to shards."""
+        dealt contiguously to shards (shard s owns data[s*per:(s+1)*per])."""
         data = jnp.asarray(data, jnp.float32)
         n = data.shape[0]
         if n % self.n_shards:
             raise ValueError(f"N={n} not divisible by n_shards={self.n_shards}")
         per = n // self.n_shards
-        self._write_rows(0, data.reshape(self.n_shards, per, -1))
+        if per > self.cap:
+            raise ValueError(f"{per} rows/shard exceed capacity {self.cap}")
+        self._ensure_quantizer(data)
+        # reset graph + mutation state (generation keeps advancing), keep
+        # the trained quantizer — mirrors JasperIndex.build
+        fresh = self._empty_stacked_core()
+        self.core = self._device_put(replace(
+            self.core, adjacency=fresh.adjacency, n_valid=fresh.n_valid,
+            medoid=fresh.medoid,
+            mut=replace(fresh.mut,
+                        generation=self.core.mut.generation + 1)))
+        dealt = data.reshape(self.n_shards, per, -1)
 
         n0 = min(1024, per)
-        boot = sharded_bootstrap_fn(self.mesh, self.spec, n0=n0,
-                                    params=self.params)
-        self.adjacency, self.n_valid, self.medoid = boot(
-            self.vectors, self.adjacency, self.n_valid, self.medoid)
+        boot = self._fn("boot", n0=n0)
+        self.core = boot(self.core, dealt[:, :n0])
 
+        # prefix-doubling schedule, every rung inserted into EVERY shard
         inserted = n0
         while inserted < per:
             remaining = per - inserted
             b = min(max(256, 1 << (inserted.bit_length() - 1)), remaining)
             if b != remaining:
                 b = 1 << (b.bit_length() - 1)
-            self._insert_rung(inserted, b)
+            ids = jnp.tile(jnp.arange(inserted, inserted + b,
+                                      dtype=jnp.int32)[None], (self.n_shards, 1))
+            self.core = self._fn("insert", b=b)(
+                self.core, ids, dealt[:, inserted:inserted + b])
             inserted += b
+        jax.block_until_ready(self.core.adjacency)
         return self
 
-    def insert(self, data) -> "ShardedJasperIndex":
-        """Streaming insert of (S, b, D) — b rows per shard."""
+    def insert(self, data) -> np.ndarray:
+        """Streaming insert of (S, b, D) — b rows per shard — or (N, D)
+        with N divisible by n_shards (dealt contiguously).
+
+        Slot ids are derived PER SHARD from each shard's own free pool and
+        high-water mark, so uneven shards (after deletes on some shards
+        only) allocate correctly. Returns the GLOBAL row ids, shaped like
+        the input batch ((S, b) or (N,)).
+        """
         data = jnp.asarray(data, jnp.float32)
-        if data.ndim == 2:
+        flat_in = data.ndim == 2
+        if flat_in:
             n = data.shape[0]
             if n % self.n_shards:
-                raise ValueError("insert size must divide n_shards")
+                raise ValueError(
+                    f"insert size {n} must be divisible by n_shards "
+                    f"{self.n_shards}")
             data = data.reshape(self.n_shards, n // self.n_shards, -1)
-        start = int(self.n_valid[0])
-        self._write_rows(start, data)
-        self._insert_rung(start, data.shape[1])
+        elif data.shape[0] != self.n_shards:
+            raise ValueError(
+                f"(S, b, D) insert must have S == n_shards "
+                f"{self.n_shards}, got {data.shape[0]}")
+        if self.size == 0:
+            # empty index: a clean per-shard build beats stitching onto a
+            # dead graph (mirrors the single-device driver)
+            s, b = data.shape[0], data.shape[1]
+            self.build(data.reshape(s * b, -1))
+            ids = (np.arange(s)[:, None] * self.id_stride
+                   + np.arange(b)[None, :]).astype(np.int32)
+            return ids.reshape(-1) if flat_in else ids
+        local_ids, global_ids = self._allocate_slots_per_shard(data.shape[1])
+        self.core = self._fn("insert", b=data.shape[1])(
+            self.core, jnp.asarray(local_ids), data)
+        jax.block_until_ready(self.core.adjacency)
+        return global_ids.reshape(-1) if flat_in else global_ids
+
+    def _allocate_slots_per_shard(self, b: int
+                                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-shard slot allocation: each shard pops its OWN free pool
+        (ascending), then advances its OWN tail. Returns (local (S, b),
+        global (S, b)) id arrays. Grows every shard when any tail overflows
+        (uniform capacity keeps the stacked layout)."""
+        s, cap = self.n_shards, self.cap
+        n_free = np.asarray(self.core.mut.n_free).copy()
+        n_valid = np.asarray(self.core.n_valid)
+        take = np.minimum(b, n_free)
+        need = n_valid + (b - take)
+        if need.max() > cap:
+            new_cap = cap
+            while need.max() > new_cap:
+                new_cap *= 2
+            self.grow(new_cap)
+            cap = self.cap
+        free_ids = np.asarray(self.core.mut.free_ids).reshape(s, cap).copy()
+        bits = np.asarray(self.core.mut.tombstone_bits).copy()
+        local = np.empty((s, b), np.int32)
+        for i in range(s):
+            t = int(take[i])
+            reused = free_ids[i, :t].copy()
+            local[i, :t] = reused
+            local[i, t:] = n_valid[i] + np.arange(b - t, dtype=np.int32)
+            # pop: shift the pool, clear the popped slots' tombstone bits
+            free_ids[i] = np.concatenate(
+                [free_ids[i, t:], np.full((t,), -1, np.int32)])
+            g = reused.astype(np.int64) + i * cap
+            clear = (~(np.int64(1) << (g & 7)) & 0xFF).astype(np.uint8)
+            np.bitwise_and.at(bits, g >> 3, clear)
+        mut = replace(self.core.mut,
+                      tombstone_bits=jnp.asarray(bits),
+                      free_ids=jnp.asarray(free_ids.reshape(-1)),
+                      n_free=jnp.asarray((n_free - take).astype(np.int32)))
+        self.core = self._device_put(replace(self.core, mut=mut))
+        global_ids = local + (np.arange(s, dtype=np.int32)
+                              * self.id_stride)[:, None]
+        return local, global_ids
+
+    # ---------------------------------------------------------- delete/repair
+    def delete(self, ids) -> int:
+        """Batched tombstone delete of GLOBAL ids. Each shard tombstones
+        its own rows in its own bitmap — shard-local, no coordination.
+        Raises on ids that are not currently live. Returns rows deleted."""
+        ids_np = np.atleast_1d(np.asarray(ids)).astype(np.int64).ravel()
+        if ids_np.size == 0:
+            return 0
+        bad = ids_np[(ids_np < 0)
+                     | (ids_np >= self.n_shards * self.id_stride)]
+        if bad.size:
+            raise ValueError(f"ids out of range: {bad[:8].tolist()}")
+        dead = ids_np[self.tombstoned(ids_np)]
+        if dead.size:
+            raise ValueError(
+                f"ids already deleted, freed, or unwritten: "
+                f"{dead[:8].tolist()}")
+        shard = ids_np // self.id_stride
+        local = ids_np % self.id_stride
+        counts = np.bincount(shard, minlength=self.n_shards)
+        # pad every shard's batch to one power-of-two rung (-1 = ignored)
+        # so uneven delete batches reuse one executable per rung
+        rung = 1 << max(0, int(counts.max() - 1).bit_length())
+        padded = np.full((self.n_shards, rung), -1, np.int32)
+        for i in range(self.n_shards):
+            mine = local[shard == i]
+            padded[i, :mine.size] = mine
+        self.core, n_new = self._fn("delete", rung=rung)(
+            self.core, jnp.asarray(padded))
+        return int(np.sum(np.asarray(n_new)))
+
+    def consolidate(self, *, refine: bool = True) -> dict:
+        """Per-shard graph repair (host-driven, like build): each shard
+        with tombstones runs the SAME `core_consolidate` the single-device
+        driver uses — repair never crosses shards."""
+        n_del = np.asarray(self.core.mut.n_deleted)
+        if not n_del.any():
+            return {"n_freed": 0, "n_repaired": 0}
+        total = {"n_freed": 0, "n_repaired": 0}
+        locals_ = []
+        for s in range(self.n_shards):
+            local = self.shard_core(s)
+            if int(n_del[s]):
+                local, stats = core_consolidate(local, params=self.params,
+                                                refine=refine)
+                total["n_freed"] += stats["n_freed"]
+                total["n_repaired"] += stats["n_repaired"]
+            locals_.append(local)
+        self.core = self._stack_cores(locals_)
+        return total
+
+    def grow(self, new_capacity_per_shard: int | None = None
+             ) -> "ShardedJasperIndex":
+        """Grow every shard's capacity by copy-extension. Per-shard buffers
+        (packed codes included) are bit-identical after the grow, and
+        GLOBAL ids are untouched (the shard*id_stride + local encoding is
+        capacity-independent) — growing past the fixed id_stride raises."""
+        new_cap = new_capacity_per_shard or 2 * self.cap
+        if new_cap < self.cap:
+            raise ValueError(f"cannot shrink {self.cap} -> {new_cap}")
+        if new_cap % 8:
+            raise ValueError("capacity_per_shard must be a multiple of 8")
+        if new_cap > self.id_stride:
+            raise ValueError(
+                f"capacity_per_shard {new_cap} would exceed id_stride "
+                f"{self.id_stride}: outstanding global ids would collide "
+                "across shards. Construct the index with a larger "
+                "id_stride for more growth headroom.")
+        if new_cap == self.cap:
+            return self
+        s, cap = self.n_shards, self.cap
+
+        def per_shard_pad(arr, fill):
+            shaped = arr.reshape((s, -1) + arr.shape[1:])
+            # exact for both row arrays (cap -> new_cap) and the bitmap
+            # (cap/8 -> new_cap/8): both caps are multiples of 8
+            new_len = shaped.shape[1] * new_cap // cap
+            widths = ([(0, 0), (0, new_len - shaped.shape[1])]
+                      + [(0, 0)] * (arr.ndim - 1))
+            return jnp.pad(shaped, widths, constant_values=fill
+                           ).reshape((-1,) + arr.shape[1:])
+
+        c = self.core
+        codes = c.codes
+        if codes is not None:
+            codes = RaBitQCodes(packed=per_shard_pad(codes.packed, 0),
+                                data_add=per_shard_pad(codes.data_add, 0.0),
+                                data_rescale=per_shard_pad(
+                                    codes.data_rescale, 0.0),
+                                bits=codes.bits, dims=codes.dims)
+        self.core = self._device_put(replace(
+            c,
+            vectors=per_shard_pad(c.vectors, 0.0),
+            vec_sqnorm=per_shard_pad(c.vec_sqnorm, 0.0),
+            adjacency=per_shard_pad(c.adjacency, -1),
+            mut=replace(c.mut,
+                        tombstone_bits=per_shard_pad(c.mut.tombstone_bits, 0),
+                        free_ids=per_shard_pad(c.mut.free_ids, -1),
+                        generation=c.mut.generation + 1),
+            codes=codes))
+        self.cap = new_cap
+        self._fn_cache.clear()          # row0 offsets / shapes changed
         return self
 
-    def _insert_rung(self, start: int, b: int) -> None:
-        key = b
-        if key not in self._insert_cache:
-            self._insert_cache[key] = sharded_insert_fn(
-                self.mesh, self.spec, batch_size_per_shard=b,
-                params=self.params)
-        starts = jnp.full((self.n_shards,), start, jnp.int32)
-        starts = jax.device_put(
-            starts, NamedSharding(self.mesh, P(self.spec.row_axes)))
-        self.adjacency, self.n_valid, self.medoid = self._insert_cache[key](
-            self.vectors, self.vec_sqnorm, self.adjacency, self.n_valid,
-            self.medoid, starts)
-
+    # ------------------------------------------------------------------ search
     def search(self, queries, k: int = 10, *, beam_width: int | None = None,
-               max_iters: int | None = None):
-        """Global top-k over all shards. queries: (Q, D), Q divisible by the
-        query-axis size (or any Q if queries are replicated)."""
+               max_iters: int | None = None, expand: int = 1,
+               quantized: bool = False, rerank: bool = True,
+               use_kernels: bool = False, merge: str = "topk",
+               traverse_deleted: bool = True) -> tuple[Array, Array]:
+        """Global top-k over all shards. queries: (Q, D), Q divisible by
+        the query-axis size (or any Q when queries are replicated).
+        Returns (GLOBAL ids (Q, k), dists (Q, k)). Exact-distance by
+        default (JasperIndex.search symmetry); quantized=True or
+        `search_rabitq` routes through the packed-code estimator."""
         queries = jnp.asarray(queries, jnp.float32)
         bw = beam_width or max(k, 32)
-        mi = max_iters or (2 * bw + 8)
-        ckey = (queries.shape, k, bw, mi)
-        if ckey not in self._search_cache:
-            self._search_cache[ckey] = sharded_search_fn(
-                self.mesh, self.spec, capacity_per_shard=self.cap, k=k,
-                beam_width=bw, max_iters=mi)
-        if self.spec.query_axis is not None:
-            queries = jax.device_put(
-                queries, NamedSharding(self.mesh, P(self.spec.query_axis, None)))
-        return self._search_cache[ckey](
-            self.vectors, self.vec_sqnorm, self.adjacency, self.n_valid,
-            self.medoid, queries)
+        mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
+        fn = self._fn("search", q_shape=queries.shape, k=k, bw=bw, mi=mi,
+                      expand=expand, quantized=quantized, rerank=rerank,
+                      use_kernels=use_kernels, merge=merge,
+                      traverse=traverse_deleted,
+                      filt=self._filter_tombstones)
+        return fn(self.core, queries)
 
-    def global_row(self, shard: int, local_id: int) -> int:
-        return shard * self.cap + local_id
+    def search_rabitq(self, queries, k: int = 10, **kw) -> tuple[Array, Array]:
+        """Quantized search (serving-layer symmetry with JasperIndex)."""
+        if self.core.codes is None:
+            raise RuntimeError("index was not built with quantization='rabitq'")
+        return self.search(queries, k, quantized=True, **kw)
+
+    def brute_force(self, queries, k: int = 10) -> tuple[Array, Array]:
+        """Exact top-k over all LIVE rows of all shards (recall ground
+        truth) — host-side full scan over the stacked arrays."""
+        from repro.core.distances import pairwise_l2_squared
+        from repro.core.mutations import unpack_bitmap
+        q = jnp.asarray(queries, jnp.float32)
+        d = pairwise_l2_squared(q, self.core.vectors, self.core.vec_sqnorm)
+        rows = self.n_shards * self.cap
+        local = jnp.arange(rows) % self.cap
+        nv = jnp.repeat(self.core.n_valid, self.cap)
+        mask = ((local < nv)
+                & ~unpack_bitmap(self.core.mut.tombstone_bits, rows))
+        d = jnp.where(mask[None, :], d, jnp.inf)
+        neg, pos = jax.lax.top_k(-d, k)
+        # stacked array position -> layout-independent global id
+        gids = (pos // self.cap) * self.id_stride + pos % self.cap
+        return gids.astype(jnp.int32), -neg
+
+    def recall(self, queries, k: int = 10, *, beam_width: int | None = None,
+               quantized: bool = False) -> float:
+        """Recall@k vs brute force (paper's Recall k@k), global ids."""
+        gt, _ = self.brute_force(queries, k)
+        ids, _ = self.search(queries, k, beam_width=beam_width,
+                             quantized=quantized)
+        hits = (ids[:, :, None] == gt[:, None, :]) & (ids >= 0)[:, :, None]
+        return float(jnp.mean(jnp.sum(jnp.any(hits, axis=2), axis=1) / k))
+
+    # ----------------------------------------------------------- fn cache
+    def _fn(self, kind: str, **key):
+        ck = (kind, self.cap, tuple(sorted(key.items())))
+        if ck not in self._fn_cache:
+            t = self._template()
+            if kind == "search":
+                self._fn_cache[ck] = sharded_search_fn(
+                    self.mesh, self.spec, t, id_stride=self.id_stride,
+                    k=key["k"], beam_width=key["bw"], max_iters=key["mi"],
+                    expand=key["expand"], quantized=key["quantized"],
+                    rerank=key["rerank"], use_kernels=key["use_kernels"],
+                    merge=key["merge"], traverse_deleted=key["traverse"],
+                    filter_tombstones=key["filt"])
+            elif kind == "insert":
+                self._fn_cache[ck] = sharded_insert_fn(
+                    self.mesh, self.spec, t, params=self.params)
+            elif kind == "boot":
+                self._fn_cache[ck] = sharded_bootstrap_fn(
+                    self.mesh, self.spec, t, n0=key["n0"],
+                    params=self.params)
+            elif kind == "delete":
+                self._fn_cache[ck] = sharded_delete_fn(
+                    self.mesh, self.spec, t)
+            else:
+                raise ValueError(kind)
+        return self._fn_cache[ck]
+
+    # -------------------------------------------------------------- save/load
+    def save(self, path: str) -> None:
+        """Checkpoint: one single-device-format .npz PER SHARD
+        (`{path}.shard{K}`, each individually readable by JasperIndex.load)
+        plus a `{path}.meta.json` manifest. Tombstones + free pools
+        round-trip exactly."""
+        from dataclasses import asdict
+
+        from repro.core.index import save_npz_atomic
+        meta = {
+            "n_shards": self.n_shards, "dims": self.dims,
+            "capacity_per_shard": self.cap, "id_stride": self.id_stride,
+            "quantization": self.quantization, "bits": self.bits,
+            "seed": self.seed,
+            "construction": asdict(self.params),
+            "row_axes": list(self.spec.row_axes),
+            "query_axis": self.spec.query_axis,
+        }
+        shard_meta = {
+            "dims": self.dims, "metric": "l2", "capacity": self.cap,
+            "quantization": self.quantization, "bits": self.bits,
+            "seed": self.seed,
+            "construction": asdict(self.params),
+            "mips_max_sqnorm": None,
+        }
+        for s in range(self.n_shards):
+            save_npz_atomic(f"{path}.shard{s}",
+                            core_to_arrays(self.shard_core(s)), shard_meta)
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f)
+
+    @classmethod
+    def load(cls, mesh: Mesh, path: str, *,
+             spec: ShardSpec | None = None) -> "ShardedJasperIndex":
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        if spec is None and meta.get("row_axes"):
+            spec = ShardSpec(row_axes=tuple(meta["row_axes"]),
+                             query_axis=meta["query_axis"])
+        idx = cls(mesh, meta["dims"], meta["capacity_per_shard"], spec=spec,
+                  construction=ConstructionParams(**meta["construction"]),
+                  quantization=meta["quantization"], bits=meta["bits"],
+                  seed=meta["seed"], id_stride=meta.get("id_stride"))
+        if idx.n_shards != meta["n_shards"]:
+            raise ValueError(
+                f"mesh provides {idx.n_shards} shards, checkpoint has "
+                f"{meta['n_shards']} (elastic resharding is not supported)")
+        locals_ = [core_from_arrays(
+            np.load(f"{path}.shard{s}"), bits=meta["bits"],
+            store_dims=meta["dims"],
+            quantized=meta["quantization"] == "rabitq")
+            for s in range(meta["n_shards"])]
+        idx.core = idx._stack_cores(locals_)
+        idx._fn_cache.clear()
+        return idx

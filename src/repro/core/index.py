@@ -1,9 +1,18 @@
-"""JasperIndex — the public facade tying graph, vectors, and quantization.
+"""JasperIndex — thin host driver over one IndexCore.
 
 Mirrors the paper's system surface: bulk build, streaming batch insertion
 AND batched deletion (the "built for change" half), exact and RaBitQ-
 quantized search (the "quantized for speed" half), plus save/load for fault
 tolerance.
+
+Since the IndexCore extraction, every hot path lives in
+`core.index_core` as a pure op over the core pytree — `core_search`,
+`core_insert_at`, `core_delete`, `core_consolidate`, `core_grow` — and
+this class only supplies the HOST policy around them: slot allocation,
+capacity-doubling, lazy quantizer training, MIPS augmentation, checkpoint
+I/O. `ShardedJasperIndex` (core/distributed.py) drives the *same* ops with
+the core shard_map-wrapped per row-shard; single-device is the 1-shard
+case, not a separate implementation.
 
 The full mutation lifecycle (core.mutations):
 
@@ -16,11 +25,6 @@ Searches never return tombstoned ids: every search path filters its final
 frontier through the packed tombstone bitmap, and `traverse_deleted=False`
 additionally masks deleted rows inside the scoring epilogues (the cheap
 mode once `consolidate` has repaired the graph around them).
-
-The class is a thin host-side shell: every hot path is a jit'd pure
-function over capacity-allocated device arrays, so streaming inserts never
-reallocate (paper Table 1's memory-budget discipline) and search executables
-are cached per (Q, beam) shape.
 """
 
 from __future__ import annotations
@@ -35,89 +39,42 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.beam_search import (
-    beam_search,
-    beam_search_quantized,
-    make_exact_scorer,
+from repro.core.beam_search import beam_search, make_exact_scorer
+from repro.core.construction import ConstructionParams
+from repro.core.distances import mips_augment_query
+from repro.core.index_core import (
+    IndexCore,
+    attach_quantizer,
+    core_brute_force,
+    core_build,
+    core_consolidate,
+    core_delete,
+    core_from_arrays,
+    core_grow,
+    core_insert_at,
+    core_live_mask,
+    core_search,
+    core_size,
+    bitmap_test_np,
+    core_take_free_slots,
+    core_to_arrays,
+    init_core,
+    tombstoned_lookup,
 )
-from repro.core.construction import (
-    ConstructionParams,
-    batch_insert_at,
-    build_graph,
-)
-from repro.core.distances import (
-    mips_augment_data,
-    mips_augment_query,
-    pairwise_l2_squared,
-)
-from repro.core.mutations import (
-    MutationState,
-    consolidate as consolidate_graph,
-    delete_rows,
-    grow_rows,
-    grow_state,
-    init_mutation_state,
-    take_free_slots,
-    unpack_bitmap,
-)
+from repro.core.mutations import MutationState
 from repro.core.pq import make_pq_scorer, pq_encode, pq_train
 from repro.core.rabitq import (
     RaBitQCodes,
     RaBitQParams,
-    pack_codes,
     packed_bytes_per_vector,
-    packed_dim,
     rabitq_encode,
-    rabitq_preprocess_query,
     rabitq_train,
 )
-from repro.core.vamana import VamanaGraph, init_graph
+from repro.core.vamana import VamanaGraph
 
 Array = jax.Array
 
 _INF = float("inf")
-
-
-@partial(jax.jit, static_argnames=("k", "beam_width", "max_iters",
-                                   "expand", "use_kernels", "merge",
-                                   "traverse_deleted"))
-def _search_exact(vectors, vec_sqnorm, graph, tomb_bits, queries, *, k,
-                  beam_width, max_iters, expand=1, use_kernels=False,
-                  merge="topk", traverse_deleted=True):
-    if use_kernels:
-        # Pallas gather-distance kernel path (chunked-load strategy);
-        # interpret mode on CPU, Mosaic on TPU
-        from repro.kernels.distance.ops import make_kernel_scorer
-        score = make_kernel_scorer(
-            vectors, queries, graph.n_valid, vec_sqnorm,
-            tombstone_bits=(None if traverse_deleted else tomb_bits))
-    else:
-        score = make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
-    res = beam_search(graph, score, queries.shape[0],
-                      beam_width=beam_width, max_iters=max_iters,
-                      expand_per_iter=expand, merge_strategy=merge,
-                      tombstone_bits=tomb_bits,
-                      traverse_deleted=traverse_deleted)
-    return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
-
-
-@partial(jax.jit, static_argnames=("k", "beam_width", "max_iters", "rerank",
-                                   "expand", "use_kernels", "merge",
-                                   "traverse_deleted"))
-def _search_rabitq(vectors, vec_sqnorm, graph, codes, rparams, tomb_bits,
-                   queries, *, k, beam_width, max_iters, rerank, expand=1,
-                   use_kernels=False, merge="topk", traverse_deleted=True):
-    q = rabitq_preprocess_query(rparams, queries)
-    rerank_fn = (make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
-                 if rerank else None)
-    res = beam_search_quantized(graph, codes, q, beam_width=beam_width,
-                                max_iters=max_iters, rerank_score_fn=rerank_fn,
-                                expand_per_iter=expand,
-                                use_kernels=use_kernels,
-                                merge_strategy=merge,
-                                tombstone_bits=tomb_bits,
-                                traverse_deleted=traverse_deleted)
-    return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
 
 
 @partial(jax.jit, static_argnames=("k", "beam_width", "max_iters", "rerank",
@@ -139,16 +96,6 @@ def _search_pq(vectors, vec_sqnorm, graph, pparams, pcodes, tomb_bits,
         f_dists, f_ids = jax.lax.sort((exact, f_ids), dimension=1,
                                       is_stable=True, num_keys=1)
     return f_ids[:, :k], f_dists[:, :k], res.n_hops
-
-
-@partial(jax.jit, static_argnames=("k",))
-def _brute_force(vectors, vec_sqnorm, n_valid, tomb_bits, queries, *, k):
-    d = pairwise_l2_squared(queries, vectors, vec_sqnorm)
-    cap = vectors.shape[0]
-    mask = (jnp.arange(cap) < n_valid) & ~unpack_bitmap(tomb_bits, cap)
-    d = jnp.where(mask[None, :], d, jnp.inf)
-    neg, ids = jax.lax.top_k(-d, k)
-    return ids.astype(jnp.int32), -neg
 
 
 class JasperIndex:
@@ -175,60 +122,97 @@ class JasperIndex:
         self.metric = metric
         # MIPS reduces to L2 with one augmented dimension (paper §6.3)
         self.store_dims = dims + 1 if metric == "mips" else dims
-        self.capacity = capacity
         self.quantization = quantization
         self.bits = bits
         self.params = construction or ConstructionParams()
         self.seed = seed
 
-        self.vectors = jnp.zeros((capacity, self.store_dims), dtype=jnp.float32)
-        self.vec_sqnorm = jnp.zeros((capacity,), dtype=jnp.float32)
-        self.graph: VamanaGraph = init_graph(capacity, self.params.degree_bound)
-        self.mut: MutationState = init_mutation_state(capacity)
-        self.rabitq_params: RaBitQParams | None = None
-        self.rabitq_codes: RaBitQCodes | None = None
+        self.core: IndexCore = init_core(capacity, self.store_dims,
+                                         self.params.degree_bound)
+        # PQ is the deprecated comparison baseline — it rides as driver-side
+        # side arrays, deliberately OUTSIDE the core (the sharded backend
+        # and the kernel stack only ever see RaBitQ)
         self.pq_params = None
         self.pq_codes: Array | None = None
         self._mips_max_sqnorm: float | None = None
+
+    # -------------------------------------------------------- core delegation
+    @property
+    def capacity(self) -> int:
+        return self.core.capacity
+
+    @property
+    def vectors(self) -> Array:
+        return self.core.vectors
+
+    @property
+    def vec_sqnorm(self) -> Array:
+        return self.core.vec_sqnorm
+
+    @property
+    def graph(self) -> VamanaGraph:
+        return self.core.graph
+
+    @graph.setter
+    def graph(self, g: VamanaGraph) -> None:
+        self.core = replace(self.core, adjacency=g.adjacency,
+                            n_valid=g.n_valid, medoid=g.medoid)
+
+    @property
+    def mut(self) -> MutationState:
+        return self.core.mut
+
+    @mut.setter
+    def mut(self, m: MutationState) -> None:
+        self.core = replace(self.core, mut=m)
+
+    @property
+    def rabitq_codes(self) -> RaBitQCodes | None:
+        return self.core.codes
+
+    @property
+    def rabitq_params(self) -> RaBitQParams | None:
+        return self.core.rq_params
 
     # ------------------------------------------------------------------ util
     @property
     def size(self) -> int:
         """Number of LIVE rows (high-water mark minus tombstoned/freed)."""
-        return (int(self.graph.n_valid) - int(self.mut.n_deleted)
-                - int(self.mut.n_free))
+        return core_size(self.core)
 
     @property
     def generation(self) -> int:
         """Monotonic mutation counter (bumped by insert/delete/consolidate/
         grow) — serving layers stamp search results with it."""
-        return int(self.mut.generation)
+        return int(self.core.mut.generation)
 
     @property
     def n_deleted(self) -> int:
         """Tombstoned-but-not-yet-consolidated rows."""
-        return int(self.mut.n_deleted)
+        return int(self.core.mut.n_deleted)
 
     @property
     def deleted_fraction(self) -> float:
         """Tombstone load factor — serving layers consolidate past a bound."""
-        n = int(self.graph.n_valid) - int(self.mut.n_free)
-        return int(self.mut.n_deleted) / n if n else 0.0
+        n = int(self.core.n_valid) - int(self.core.mut.n_free)
+        return int(self.core.mut.n_deleted) / n if n else 0.0
 
     def live_mask(self) -> np.ndarray:
         """bool[capacity] of currently live rows (host copy)."""
-        dense = np.asarray(unpack_bitmap(self.mut.tombstone_bits,
-                                         self.capacity))
-        return (np.arange(self.capacity) < int(self.graph.n_valid)) & ~dense
+        return core_live_mask(self.core)
+
+    def tombstoned(self, ids) -> np.ndarray:
+        """Host-side per-id deadness test (serving-contract check): True
+        where an id is tombstoned/freed or past the high-water mark."""
+        return tombstoned_lookup(np.asarray(self.core.mut.tombstone_bits),
+                                 int(self.core.n_valid), ids)
 
     @property
-    def _active_tomb_bits(self) -> Array | None:
-        """Bitmap for the search paths — None while no bit can be set
-        (no tombstoned and no freed slots), so the delete-free workload
-        keeps the filter-free executables."""
-        if int(self.mut.n_deleted) == 0 and int(self.mut.n_free) == 0:
-            return None
-        return self.mut.tombstone_bits
+    def _filter_tombstones(self) -> bool:
+        """False while no bit can be set (nothing tombstoned, nothing
+        freed), so the delete-free workload keeps filter-free executables."""
+        return (int(self.core.mut.n_deleted) != 0
+                or int(self.core.mut.n_free) != 0)
 
     def _prep_data(self, x: np.ndarray | Array) -> Array:
         x = jnp.asarray(x, dtype=jnp.float32)
@@ -259,30 +243,31 @@ class JasperIndex:
         rotation/centroid are dimension-state, not norm-state, so the
         quantizer itself is untouched.
         """
-        n = int(self.graph.n_valid)
+        core = self.core
+        n = int(core.n_valid)
         if n == 0:
             return
         delta = new_m2 - old_m2
-        row = jnp.arange(self.capacity) < n
-        last = self.vectors[:, -1]
+        row = jnp.arange(core.capacity) < n
+        last = core.vectors[:, -1]
         new_last = jnp.sqrt(last * last + delta)
-        self.vectors = self.vectors.at[:, -1].set(
-            jnp.where(row, new_last, last))
-        self.vec_sqnorm = jnp.where(row, self.vec_sqnorm + delta,
-                                    self.vec_sqnorm)
-        if self.rabitq_codes is not None:
+        vectors = core.vectors.at[:, -1].set(jnp.where(row, new_last, last))
+        sqnorm = jnp.where(row, core.vec_sqnorm + delta, core.vec_sqnorm)
+        core = replace(core, vectors=vectors, vec_sqnorm=sqnorm)
+        if core.codes is not None:
             # re-encode only the written prefix (n is a host int, so this
             # is a static slice — the zero tail never hits the rotation)
-            enc = rabitq_encode(self.rabitq_params, self.vectors[:n])
-            c = self.rabitq_codes
-            self.rabitq_codes = RaBitQCodes(
+            enc = rabitq_encode(core.rq_params, vectors[:n])
+            c = core.codes
+            core = replace(core, codes=RaBitQCodes(
                 packed=c.packed.at[:n].set(enc.packed),
                 data_add=c.data_add.at[:n].set(enc.data_add),
                 data_rescale=c.data_rescale.at[:n].set(enc.data_rescale),
-                bits=self.bits, dims=self.store_dims)
+                bits=c.bits, dims=c.dims))
+        self.core = core
         if self.pq_codes is not None:
-            enc = pq_encode(self.pq_params, self.vectors[:n])
-            self.pq_codes = self.pq_codes.at[:n].set(enc)
+            self.pq_codes = self.pq_codes.at[:n].set(
+                pq_encode(self.pq_params, vectors[:n]))
 
     def _prep_query(self, q: np.ndarray | Array) -> Array:
         q = jnp.asarray(q, dtype=jnp.float32)
@@ -290,41 +275,23 @@ class JasperIndex:
             q = mips_augment_query(q)
         return q
 
-    def _write_rows(self, ids: Array, rows: Array) -> None:
-        ids = jnp.asarray(ids, jnp.int32)
-        self.vectors = self.vectors.at[ids].set(rows)
-        self.vec_sqnorm = self.vec_sqnorm.at[ids].set(jnp.sum(rows * rows, axis=-1))
-        if self.quantization == "rabitq":
-            if self.rabitq_params is None:
-                key = jax.random.PRNGKey(self.seed)
-                self.rabitq_params = rabitq_train(key, rows, bits=self.bits)
-                # capacity-allocated PACKED buffer: ceil(D*m/8) bytes per row
-                # is the only full-width code array ever resident in HBM
-                self.rabitq_codes = RaBitQCodes(
-                    packed=jnp.zeros(
-                        (self.capacity, packed_dim(self.store_dims, self.bits)),
-                        jnp.uint8),
-                    data_add=jnp.zeros((self.capacity,), jnp.float32),
-                    data_rescale=jnp.zeros((self.capacity,), jnp.float32),
-                    bits=self.bits, dims=self.store_dims)
-            # encode -> pack is fused inside rabitq_encode; streaming inserts
-            # stay incremental .at[ids].set row updates on the packed buffer
-            enc = rabitq_encode(self.rabitq_params, rows)
-            self.rabitq_codes = RaBitQCodes(
-                packed=self.rabitq_codes.packed.at[ids].set(enc.packed),
-                data_add=self.rabitq_codes.data_add.at[ids].set(enc.data_add),
-                data_rescale=self.rabitq_codes.data_rescale.at[ids].set(
-                    enc.data_rescale),
-                bits=self.bits, dims=self.store_dims)
-        elif self.quantization == "pq":
-            if self.pq_params is None:
-                for nsub in (16, 8, 4, 2, 1):
-                    if self.store_dims % nsub == 0:
-                        break
-                self.pq_params = pq_train(jax.random.PRNGKey(self.seed), rows,
-                                          n_subspaces=nsub)
-                self.pq_codes = jnp.zeros(
-                    (self.capacity, self.pq_params.n_subspaces), jnp.uint8)
+    def _ensure_quantizer(self, rows: Array) -> None:
+        """Lazy quantizer training on the first written batch."""
+        if self.quantization == "rabitq" and self.core.rq_params is None:
+            key = jax.random.PRNGKey(self.seed)
+            self.core = attach_quantizer(
+                self.core, rabitq_train(key, rows, bits=self.bits))
+        elif self.quantization == "pq" and self.pq_params is None:
+            for nsub in (16, 8, 4, 2, 1):
+                if self.store_dims % nsub == 0:
+                    break
+            self.pq_params = pq_train(jax.random.PRNGKey(self.seed), rows,
+                                      n_subspaces=nsub)
+            self.pq_codes = jnp.zeros(
+                (self.capacity, self.pq_params.n_subspaces), jnp.uint8)
+
+    def _pq_write(self, ids: Array, rows: Array) -> None:
+        if self.pq_codes is not None:
             self.pq_codes = self.pq_codes.at[ids].set(
                 pq_encode(self.pq_params, rows))
 
@@ -334,15 +301,10 @@ class JasperIndex:
         """Bulk construction over `data` (rows 0..N). Resets the graph and
         all mutation state (the generation counter keeps advancing)."""
         x = self._prep_data(data)
-        n = x.shape[0]
-        if n > self.capacity:
-            raise ValueError(f"data size {n} exceeds capacity {self.capacity}")
-        self.mut = replace(init_mutation_state(self.capacity),
-                           generation=self.mut.generation + 1)
-        self._write_rows(jnp.arange(n, dtype=jnp.int32), x)
-        self.graph = build_graph(self.vectors, n, params=self.params,
-                                 refine=refine, progress_fn=progress_fn)
-        jax.block_until_ready(self.graph.adjacency)   # storage semantics
+        self._ensure_quantizer(x)
+        self.core = core_build(self.core, x, params=self.params,
+                               refine=refine, progress_fn=progress_fn)
+        self._pq_write(jnp.arange(x.shape[0], dtype=jnp.int32), x)
         return self
 
     def _grow_to_fit(self, n_rows: int) -> None:
@@ -358,9 +320,9 @@ class JasperIndex:
         """Claim b slot ids: freed slots first (ascending), then fresh tail
         ids past the high-water mark; the capacity auto-doubles when the
         tail runs out. Popped slots' tombstone bits are cleared."""
-        self.mut, reused = take_free_slots(self.mut, b)
+        self.core, reused = core_take_free_slots(self.core, b)
         fresh_needed = b - reused.size
-        hw = int(self.graph.n_valid)
+        hw = int(self.core.n_valid)
         self._grow_to_fit(hw + fresh_needed)
         fresh = np.arange(hw, hw + fresh_needed, dtype=np.int32)
         return np.concatenate([reused, fresh])
@@ -380,22 +342,15 @@ class JasperIndex:
             # empty index (fresh, or everything was deleted): a clean build
             # over this batch beats stitching onto a dead graph
             self._grow_to_fit(b)
-            self.mut = replace(init_mutation_state(self.capacity),
-                               generation=self.mut.generation + 1)
-            ids = np.arange(b, dtype=np.int32)
-            self._write_rows(jnp.asarray(ids), x)
-            self.graph = build_graph(self.vectors, b, params=self.params)
-            jax.block_until_ready(self.graph.adjacency)
-            return ids
+            self._ensure_quantizer(x)
+            self.core = core_build(self.core, x, params=self.params)
+            self._pq_write(jnp.arange(b, dtype=jnp.int32), x)
+            return np.arange(b, dtype=np.int32)
         ids = self._allocate_slots(b)
         ids_dev = jnp.asarray(ids, jnp.int32)
-        self._write_rows(ids_dev, x)
-        self.graph = batch_insert_at(self.vectors, self.graph, ids_dev,
-                                     params=self.params,
-                                     vec_sqnorm=self.vec_sqnorm,
-                                     tombstone_bits=self.mut.tombstone_bits)
-        self.mut = replace(self.mut, generation=self.mut.generation + 1)
-        jax.block_until_ready(self.graph.adjacency)   # storage semantics
+        self.core = core_insert_at(self.core, ids_dev, x, params=self.params)
+        self._pq_write(ids_dev, x)
+        jax.block_until_ready(self.core.adjacency)   # storage semantics
         return ids
 
     # ------------------------------------------------------------- delete/repair
@@ -410,14 +365,14 @@ class JasperIndex:
         ids_np = np.atleast_1d(np.asarray(ids)).astype(np.int64).ravel()
         if ids_np.size == 0:
             return 0
-        hw = int(self.graph.n_valid)
+        hw = int(self.core.n_valid)
         bad = ids_np[(ids_np < 0) | (ids_np >= hw)]
         if bad.size:
             raise ValueError(f"ids out of range [0, {hw}): {bad[:8].tolist()}")
         # validate against the PACKED bytes (cap/8 host copy + per-id bit
         # test) — never unpack the dense bitmap on the delete path
-        bits = np.asarray(self.mut.tombstone_bits)
-        dead = ids_np[((bits[ids_np >> 3] >> (ids_np & 7)) & 1) == 1]
+        bits = np.asarray(self.core.mut.tombstone_bits)
+        dead = ids_np[bitmap_test_np(bits, ids_np)]
         if dead.size:
             raise ValueError(
                 f"ids already deleted or freed: {dead[:8].tolist()}")
@@ -426,8 +381,7 @@ class JasperIndex:
         rung = 1 << max(0, int(ids_np.size - 1).bit_length())
         padded = np.full((rung,), -1, np.int32)
         padded[:ids_np.size] = ids_np
-        self.mut, n = delete_rows(self.mut, jnp.asarray(padded),
-                                  self.graph.n_valid)
+        self.core, n = core_delete(self.core, jnp.asarray(padded))
         return int(n)
 
     def consolidate(self, *, refine: bool = True) -> dict:
@@ -442,9 +396,8 @@ class JasperIndex:
         their slots join the free pool, and the medoid refreshes over live
         rows. Returns {"n_freed", "n_repaired"}.
         """
-        self.graph, self.mut, stats = consolidate_graph(
-            self.vectors, self.graph, self.mut, params=self.params,
-            refine=refine, vec_sqnorm=self.vec_sqnorm)
+        self.core, stats = core_consolidate(self.core, params=self.params,
+                                            refine=refine)
         return stats
 
     def grow(self, new_capacity: int | None = None) -> "JasperIndex":
@@ -459,22 +412,10 @@ class JasperIndex:
             raise ValueError(f"cannot shrink {self.capacity} -> {new_cap}")
         if new_cap == self.capacity:
             return self
-        self.vectors = grow_rows(self.vectors, new_cap, 0.0)
-        self.vec_sqnorm = grow_rows(self.vec_sqnorm, new_cap, 0.0)
-        self.graph = VamanaGraph(
-            adjacency=grow_rows(self.graph.adjacency, new_cap, -1),
-            n_valid=self.graph.n_valid, medoid=self.graph.medoid)
-        if self.rabitq_codes is not None:
-            c = self.rabitq_codes
-            self.rabitq_codes = RaBitQCodes(
-                packed=grow_rows(c.packed, new_cap, 0),
-                data_add=grow_rows(c.data_add, new_cap, 0.0),
-                data_rescale=grow_rows(c.data_rescale, new_cap, 0.0),
-                bits=c.bits, dims=c.dims)
+        self.core = core_grow(self.core, new_cap)
         if self.pq_codes is not None:
+            from repro.core.mutations import grow_rows
             self.pq_codes = grow_rows(self.pq_codes, new_cap, 0)
-        self.mut = grow_state(self.mut, new_cap)
-        self.capacity = new_cap
         return self
 
     # ------------------------------------------------------------------ search
@@ -495,12 +436,11 @@ class JasperIndex:
         q = self._prep_query(queries)
         bw = beam_width or max(k, 32)
         mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
-        ids, dists, _ = _search_exact(self.vectors, self.vec_sqnorm, self.graph,
-                                      self._active_tomb_bits, q,
-                                      k=k, beam_width=bw, max_iters=mi,
-                                      expand=expand, use_kernels=use_kernels,
-                                      merge=merge,
-                                      traverse_deleted=traverse_deleted)
+        ids, dists, _ = core_search(
+            self.core, q, k=k, beam_width=bw, max_iters=mi, expand=expand,
+            quantized=False, use_kernels=use_kernels, merge=merge,
+            traverse_deleted=traverse_deleted,
+            filter_tombstones=self._filter_tombstones)
         return ids, dists
 
     def search_rabitq(self, queries: np.ndarray | Array, k: int = 10, *,
@@ -515,24 +455,24 @@ class JasperIndex:
         unpack + MXU dot + masking epilogue) over the canonical packed
         codes — the paper's §5.1 hot path. The jnp estimator path reads
         the same packed bytes and is the parity oracle.
+        rerank: re-score the final frontier with exact distances, tiled
+        through `rerank_frontier` so the gathered f32 buffer stays bounded.
         expand > 1: multi-expansion, as in exact search (§Perf #C1).
         merge: frontier merge strategy ("topk" partial merge by default,
         "sort" reference, "kernel" Pallas min-extraction).
         traverse_deleted: False folds the tombstone bitmap into the kernel
         epilogue mask (one byte per candidate rides with the packed gather).
         """
-        if self.rabitq_codes is None:
+        if self.core.codes is None:
             raise RuntimeError("index was not built with quantization='rabitq'")
         q = self._prep_query(queries)
         bw = beam_width or max(k, 32)
         mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
-        ids, dists, _ = _search_rabitq(self.vectors, self.vec_sqnorm, self.graph,
-                                       self.rabitq_codes, self.rabitq_params,
-                                       self._active_tomb_bits, q,
-                                       k=k, beam_width=bw, max_iters=mi,
-                                       rerank=rerank, expand=expand,
-                                       use_kernels=use_kernels, merge=merge,
-                                       traverse_deleted=traverse_deleted)
+        ids, dists, _ = core_search(
+            self.core, q, k=k, beam_width=bw, max_iters=mi, expand=expand,
+            quantized=True, rerank=rerank, use_kernels=use_kernels,
+            merge=merge, traverse_deleted=traverse_deleted,
+            filter_tombstones=self._filter_tombstones)
         return ids, dists
 
     def search_pq(self, queries: np.ndarray | Array, k: int = 10, *,
@@ -545,15 +485,18 @@ class JasperIndex:
         The paper's negative result (§5, Fig 12): scattered 256-entry table
         lookups, no kernel backing, kept only so benchmarks can reproduce
         the comparison. Requires the explicit quantization='pq' opt-in.
+        (Deliberately NOT a core op: the sharded backend never sees PQ.)
         """
         if self.pq_codes is None:
             raise RuntimeError("index was not built with quantization='pq'")
         q = self._prep_query(queries)
         bw = beam_width or max(k, 32)
         mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
-        ids, dists, _ = _search_pq(self.vectors, self.vec_sqnorm, self.graph,
-                                   self.pq_params, self.pq_codes,
-                                   self._active_tomb_bits, q,
+        tomb = (self.core.mut.tombstone_bits if self._filter_tombstones
+                else None)
+        ids, dists, _ = _search_pq(self.core.vectors, self.core.vec_sqnorm,
+                                   self.core.graph, self.pq_params,
+                                   self.pq_codes, tomb, q,
                                    k=k, beam_width=bw, max_iters=mi,
                                    rerank=rerank, expand=expand, merge=merge,
                                    traverse_deleted=traverse_deleted)
@@ -563,8 +506,7 @@ class JasperIndex:
                     ) -> tuple[Array, Array]:
         """Exact top-k by full scan over LIVE rows (ground truth for recall)."""
         q = self._prep_query(queries)
-        return _brute_force(self.vectors, self.vec_sqnorm, self.graph.n_valid,
-                            self.mut.tombstone_bits, q, k=k)
+        return core_brute_force(self.core, q, k=k)
 
     def recall(self, queries, k: int = 10, *, beam_width: int | None = None,
                quantized: bool = False) -> float:
@@ -584,17 +526,17 @@ class JasperIndex:
             "vector_bytes_per_row": float(full),
             "graph_bytes_per_row": float(self.params.degree_bound * 4),
             # mutation metadata: 1 bit/row tombstones + 4 B/row free pool
-            "tombstone_bitmap_bytes": float(self.mut.tombstone_bits.size),
-            "free_pool_bytes": float(self.mut.free_ids.size * 4),
+            "tombstone_bitmap_bytes": float(self.core.mut.tombstone_bits.size),
+            "free_pool_bytes": float(self.core.mut.free_ids.size * 4),
         }
         if self.quantization == "rabitq":
             stats["rabitq_bytes_per_row"] = float(
                 packed_bytes_per_vector(self.store_dims, self.bits))
             stats["compression_ratio"] = full / stats["rabitq_bytes_per_row"]
-            if self.rabitq_codes is not None:
+            if self.core.codes is not None:
                 # actual packed bytes resident in HBM (not the formula):
                 # packed codes + the two f32 metadata arrays, capacity rows
-                c = self.rabitq_codes
+                c = self.core.codes
                 resident = (c.packed.size * c.packed.dtype.itemsize
                             + c.data_add.size * c.data_add.dtype.itemsize
                             + c.data_rescale.size
@@ -605,50 +547,30 @@ class JasperIndex:
         return stats
 
     # -------------------------------------------------------------- save/load
+    def _meta(self) -> dict:
+        return {
+            "dims": self.dims, "metric": self.metric,
+            "capacity": self.capacity,
+            "quantization": self.quantization, "bits": self.bits,
+            "seed": self.seed, "construction": asdict(self.params),
+            "mips_max_sqnorm": self._mips_max_sqnorm,
+        }
+
     def save(self, path: str) -> None:
         """Atomic checkpoint (tmp + rename): graph, vectors, quantizer,
         mutation state (tombstones + free pool round-trip exactly).
 
-        The tmp name always carries the ".npz" suffix np.savez would
-        otherwise append implicitly, so the final os.replace is
-        deterministic (no exists() race on the suffixed name).
+        The array payload is `core_to_arrays` — the SAME format every shard
+        of a ShardedJasperIndex serializes through, so shard files and
+        single-device checkpoints are mutually readable.
         """
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        tmp = path + ".tmp.npz"
-        arrays = {
-            "vectors": np.asarray(self.vectors),
-            "adjacency": np.asarray(self.graph.adjacency),
-            "n_valid": np.asarray(self.graph.n_valid),
-            "medoid": np.asarray(self.graph.medoid),
-            "tombstone_bits": np.asarray(self.mut.tombstone_bits),
-            "free_ids": np.asarray(self.mut.free_ids),
-            "n_free": np.asarray(self.mut.n_free),
-            "n_deleted": np.asarray(self.mut.n_deleted),
-            "generation": np.asarray(self.mut.generation),
-        }
-        if self.rabitq_codes is not None:
-            arrays |= {
-                "rq_packed": np.asarray(self.rabitq_codes.packed),
-                "rq_add": np.asarray(self.rabitq_codes.data_add),
-                "rq_rescale": np.asarray(self.rabitq_codes.data_rescale),
-                "rq_rotation": np.asarray(self.rabitq_params.rotation),
-                "rq_centroid": np.asarray(self.rabitq_params.centroid),
-            }
+        arrays = core_to_arrays(self.core)
         if self.pq_codes is not None:
             arrays |= {
                 "pq_codes": np.asarray(self.pq_codes),
                 "pq_codebooks": np.asarray(self.pq_params.codebooks),
             }
-        meta = {
-            "dims": self.dims, "metric": self.metric, "capacity": self.capacity,
-            "quantization": self.quantization, "bits": self.bits,
-            "seed": self.seed, "construction": asdict(self.params),
-            "mips_max_sqnorm": self._mips_max_sqnorm,
-        }
-        np.savez(tmp, **arrays)
-        os.replace(tmp, path)
-        with open(path + ".meta.json", "w") as f:
-            json.dump(meta, f)
+        save_npz_atomic(path, arrays, self._meta())
 
     @classmethod
     def load(cls, path: str) -> "JasperIndex":
@@ -663,39 +585,27 @@ class JasperIndex:
                       construction=ConstructionParams(**meta["construction"]),
                       seed=meta["seed"])
         idx._mips_max_sqnorm = meta["mips_max_sqnorm"]
-        idx.vectors = jnp.asarray(data["vectors"])
-        idx.vec_sqnorm = jnp.sum(idx.vectors * idx.vectors, axis=-1)
-        idx.graph = VamanaGraph(
-            adjacency=jnp.asarray(data["adjacency"]),
-            n_valid=jnp.asarray(data["n_valid"]),
-            medoid=jnp.asarray(data["medoid"]))
-        if "tombstone_bits" in data:
-            idx.mut = MutationState(
-                tombstone_bits=jnp.asarray(data["tombstone_bits"]),
-                free_ids=jnp.asarray(data["free_ids"]),
-                n_free=jnp.asarray(data["n_free"]),
-                n_deleted=jnp.asarray(data["n_deleted"]),
-                generation=jnp.asarray(data["generation"]))
-        has_codes = "rq_packed" in data or "rq_codes" in data
-        if meta["quantization"] == "rabitq" and has_codes:
-            idx.rabitq_params = RaBitQParams(
-                rotation=jnp.asarray(data["rq_rotation"]),
-                centroid=jnp.asarray(data["rq_centroid"]), bits=meta["bits"])
-            if "rq_packed" in data:
-                packed = jnp.asarray(data["rq_packed"])
-            else:
-                # legacy checkpoint with unpacked uint8[N, D] codes:
-                # pack on load so the resident form is canonical
-                packed = pack_codes(jnp.asarray(data["rq_codes"]),
-                                    meta["bits"])
-            idx.rabitq_codes = RaBitQCodes(
-                packed=packed,
-                data_add=jnp.asarray(data["rq_add"]),
-                data_rescale=jnp.asarray(data["rq_rescale"]),
-                bits=meta["bits"], dims=idx.store_dims)
+        idx.core = core_from_arrays(
+            data, bits=meta["bits"], store_dims=idx.store_dims,
+            quantized=meta["quantization"] == "rabitq")
         if meta["quantization"] == "pq" and "pq_codes" in data:
             from repro.core.pq import PQParams
             idx.pq_params = PQParams(
                 codebooks=jnp.asarray(data["pq_codebooks"]))
             idx.pq_codes = jnp.asarray(data["pq_codes"])
         return idx
+
+
+def save_npz_atomic(path: str, arrays: dict, meta: dict) -> None:
+    """Atomic .npz + .meta.json checkpoint write (tmp + rename).
+
+    The tmp name always carries the ".npz" suffix np.savez would otherwise
+    append implicitly, so the final os.replace is deterministic (no
+    exists() race on the suffixed name). Shared by both index drivers.
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)

@@ -4,14 +4,26 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
 
 """ANNS-at-scale dry-run: the paper's own workload on the production mesh.
 
-Lowers + compiles the sharded Jasper search step (shard-and-merge beam
-search, DESIGN.md §4) at PAPER scale — e.g. BigANN 100M rows over the
-(pod, data) axes with queries sharded over `model` — and records the same
-roofline terms as the LM cells. Three variants per dataset:
+Lowers + compiles the sharded Jasper search step at PAPER scale — e.g.
+BigANN 100M rows over the (pod, data) axes with queries sharded over
+`model` — and records the same roofline terms as the LM cells.
 
-    exact        full-precision beam search (paper "Jasper")
-    rabitq       estimated-distance beam search (paper "Jasper RaBitQ")
-    bruteforce   one matmul tile over all rows (roofline sanity anchor)
+Since the IndexCore unification this file contains NO search logic: it
+builds an abstract stacked `IndexCore` (ShapeDtypeStructs) and lowers the
+SAME `sharded_search_fn` that `ShardedJasperIndex` serves with — the
+shard-local `core_search` + all_gather merge, tombstone bitmaps included
+(the production posture: per-shard liveness rides in every cell).
+
+Variants per dataset:
+
+    exact          full-precision beam search (paper "Jasper")
+    exact_bf16     same with bf16-resident rows
+    rabitq         estimated-distance search over PACKED codes, no rerank
+                   — f32 rows NOT resident (degenerate 1-dim vector
+                   buffer), the paper's memory-footprint story
+    rabitq_rerank  packed-code search + tiled exact rerank — f32 rows
+                   resident, the recall-recovery configuration
+    bruteforce     one matmul tile over all rows (roofline sanity anchor)
 
 Usage:
     python -m repro.launch.dryrun_anns [--dataset bigann] [--multi-pod]
@@ -28,9 +40,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ANNS_DATASETS
-from repro.core.beam_search import beam_search, make_exact_scorer
-from repro.core.rabitq import RaBitQCodes, RaBitQQuery
-from repro.core.vamana import VamanaGraph
+from repro.core.distributed import ShardSpec, merge_topk, sharded_search_fn
+from repro.core.index_core import IndexCore
+from repro.core.mutations import MutationState
+from repro.core.rabitq import RaBitQCodes, RaBitQParams
 from repro.launch.mesh import make_production_mesh
 from repro.roofline.analysis import TPU_V5E, roofline_terms
 from repro.roofline.hlo_analyzer import analyze_hlo
@@ -43,186 +56,105 @@ K = 10
 N_QUERIES = 16384    # large batch = the paper's occupancy story
 
 
-def _local_search_exact(vectors, vec_sqnorm, adjacency, n_valid, medoid,
-                        queries, *, row_axes, cap, k):
-    graph = VamanaGraph(adjacency=adjacency, n_valid=n_valid[0],
-                        medoid=medoid[0])
-    score = make_exact_scorer(vectors, queries, graph.n_valid, vec_sqnorm)
-    res = beam_search(graph, score, queries.shape[0], beam_width=BEAM,
-                      max_iters=MAX_ITERS, fixed_trip=True,
-                      expand_per_iter=EXPAND)
-    return _merge(res, row_axes, cap, k, queries.shape[0])
+def abstract_core(n_shards: int, cap: int, dims: int, *,
+                  vec_dtype=jnp.float32, vec_dims: int | None = None,
+                  quantized: bool = False, bits: int = 4) -> IndexCore:
+    """Stacked-core ShapeDtypeStructs: the dry-run's stand-in for real
+    device buffers. vec_dims=1 gives the quantized-only memory posture
+    (f32 rows not resident beyond a degenerate 4 B/row stub)."""
+    rows = n_shards * cap
+    vd = dims if vec_dims is None else vec_dims
+    f32 = jnp.float32
 
+    def st(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
 
-def _local_search_rabitq(codes, data_add, data_rescale, adjacency, n_valid,
-                         medoid, q_rot, query_add, query_sumq, *,
-                         row_axes, cap, k, bits, dims, fused=False):
-    from repro.core.beam_search import make_rabitq_scorer
-    graph = VamanaGraph(adjacency=adjacency, n_valid=n_valid[0],
-                        medoid=medoid[0])
-    rq = RaBitQQuery(q_rot=q_rot, query_add=query_add, query_sumq=query_sumq)
-    if not fused:
-        # composable jnp estimator over the canonical PACKED codes
-        score = make_rabitq_scorer(
-            RaBitQCodes(packed=codes, data_add=data_add,
-                        data_rescale=data_rescale, bits=bits, dims=dims), rq)
-    else:
-        # PACKED codes (rows, D*bits/8): HBM reads shrink by 8/bits vs the
-        # unpacked uint8 path and 4*8/bits vs f32 exact — the unpack is
-        # cheap VPU shift/mask work fused after the gather (§Perf #C2)
-        cpb = 8 // bits
-        mask = jnp.uint8(2**bits - 1)
-
-        def score(ids):
-            in_range = (ids >= 0) & (ids < graph.n_valid)
-            safe = jnp.maximum(jnp.where(in_range, ids, 0), 0)
-            pk = codes[safe]                           # (Q, K, P) uint8
-            parts = [((pk >> (bits * s)) & mask) for s in range(cpb)]
-            u = jnp.stack(parts, axis=-1).reshape(
-                pk.shape[0], pk.shape[1], -1)[..., :dims].astype(jnp.float32)
-            dot = jnp.einsum("qkd,qd->qk", u, rq.q_rot)
-            est = (data_add[safe] + rq.query_add[:, None]
-                   + data_rescale[safe] * (dot - rq.query_sumq[:, None]))
-            return jnp.where(in_range, jnp.maximum(est, 0.0), jnp.inf)
-    res = beam_search(graph, score, q_rot.shape[0], beam_width=BEAM,
-                      max_iters=MAX_ITERS, fixed_trip=True,
-                      expand_per_iter=EXPAND)
-    return _merge(res, row_axes, cap, k, q_rot.shape[0])
-
-
-def _merge(res, row_axes, cap, k, n_q):
-    ids = res.frontier_ids[:, :k]
-    dists = res.frontier_dists[:, :k]
-    shard_idx = jnp.int32(0)
-    mult = 1
-    for ax in reversed(row_axes):
-        shard_idx = shard_idx + jax.lax.axis_index(ax) * mult
-        mult *= jax.lax.axis_size(ax)
-    gids = jnp.where(ids >= 0, ids + shard_idx * cap, -1)
-    for ax in row_axes:
-        gd = jax.lax.all_gather(dists, ax, axis=0)
-        gi = jax.lax.all_gather(gids, ax, axis=0)
-        gd = jnp.moveaxis(gd, 0, 1).reshape(n_q, -1)
-        gi = jnp.moveaxis(gi, 0, 1).reshape(n_q, -1)
-        neg, pos = jax.lax.top_k(-gd, k)
-        dists = -neg
-        gids = jnp.take_along_axis(gi, pos, axis=1)
-    return gids, dists
+    codes = rq = None
+    if quantized:
+        p_dim = (dims * bits + 7) // 8
+        codes = RaBitQCodes(packed=st((rows, p_dim), jnp.uint8),
+                            data_add=st((rows,)), data_rescale=st((rows,)),
+                            bits=bits, dims=dims)
+        rq = RaBitQParams(rotation=st((dims, dims)), centroid=st((dims,)),
+                          bits=bits)
+    return IndexCore(
+        vectors=st((rows, vd), vec_dtype), vec_sqnorm=st((rows,)),
+        adjacency=st((rows, DEGREE), jnp.int32),
+        n_valid=st((n_shards,), jnp.int32),
+        medoid=st((n_shards,), jnp.int32),
+        mut=MutationState(tombstone_bits=st((rows // 8,), jnp.uint8),
+                          free_ids=st((rows,), jnp.int32),
+                          n_free=st((n_shards,), jnp.int32),
+                          n_deleted=st((n_shards,), jnp.int32),
+                          generation=st((n_shards,), jnp.int32)),
+        codes=codes, rq_params=rq)
 
 
 def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
                     n_queries: int = N_QUERIES) -> dict:
     ds = ANNS_DATASETS[ds_name]
     t0 = time.time()
-    row_axes = tuple(a for a in mesh.axis_names if a != "model")
+    spec = ShardSpec(
+        row_axes=tuple(a for a in mesh.axis_names if a != "model"),
+        query_axis="model")
     n_shards = 1
-    for ax in row_axes:
+    for ax in spec.row_axes:
         n_shards *= mesh.shape[ax]
     cap = -(-ds.full_n // n_shards)
-    rows = n_shards * cap
+    cap += (-cap) % 8                       # bitmap-aligned per-shard cap
     d = ds.dims + (1 if ds.metric == "mips" else 0)
-
     f32 = jnp.float32
-    structs = {
-        "adjacency": jax.ShapeDtypeStruct((rows, DEGREE), jnp.int32),
-        "n_valid": jax.ShapeDtypeStruct((n_shards,), jnp.int32),
-        "medoid": jax.ShapeDtypeStruct((n_shards,), jnp.int32),
-    }
-    row_spec = P(row_axes, None)
-    sc_spec = P(row_axes)
-    q_spec = P("model", None)
-    q1_spec = P("model")
 
-    if variant in ("exact", "exact_bf16"):
-        vec_dt = jnp.bfloat16 if variant == "exact_bf16" else f32
-        structs |= {
-            "vectors": jax.ShapeDtypeStruct((rows, d), vec_dt),
-            "vec_sqnorm": jax.ShapeDtypeStruct((rows,), f32),
-            "queries": jax.ShapeDtypeStruct((n_queries, d), f32),
-        }
-        fn = shard_map(
-            lambda v, sq, a, nv, m, q: _local_search_exact(
-                v, sq, a, nv, m, q, row_axes=row_axes, cap=cap, k=K),
-            mesh=mesh,
-            in_specs=(row_spec, sc_spec, row_spec, sc_spec, sc_spec, q_spec),
-            out_specs=(q_spec, q_spec), check_vma=False)
-        args = (structs["vectors"], structs["vec_sqnorm"],
-                structs["adjacency"], structs["n_valid"], structs["medoid"],
-                structs["queries"])
-        shardings = (NamedSharding(mesh, row_spec),
-                     NamedSharding(mesh, sc_spec),
-                     NamedSharding(mesh, row_spec),
-                     NamedSharding(mesh, sc_spec),
-                     NamedSharding(mesh, sc_spec),
-                     NamedSharding(mesh, q_spec))
-    elif variant in ("rabitq", "rabitq_packed"):
-        fused = variant == "rabitq_packed"
-        # packed codes are the canonical HBM form for BOTH variants; the
-        # variants differ only in scorer (composable jnp vs hand-fused)
-        p_dim = (d * bits + 7) // 8
-        structs |= {
-            "codes": jax.ShapeDtypeStruct((rows, p_dim), jnp.uint8),
-            "data_add": jax.ShapeDtypeStruct((rows,), f32),
-            "data_rescale": jax.ShapeDtypeStruct((rows,), f32),
-            "q_rot": jax.ShapeDtypeStruct((n_queries, d), f32),
-            "query_add": jax.ShapeDtypeStruct((n_queries,), f32),
-            "query_sumq": jax.ShapeDtypeStruct((n_queries,), f32),
-        }
-        fn = shard_map(
-            lambda c, da, dr, a, nv, m, qr, qa, qs: _local_search_rabitq(
-                c, da, dr, a, nv, m, qr, qa, qs,
-                row_axes=row_axes, cap=cap, k=K,
-                bits=bits, dims=d, fused=fused),
-            mesh=mesh,
-            in_specs=(row_spec, sc_spec, sc_spec, row_spec, sc_spec, sc_spec,
-                      q_spec, q1_spec, q1_spec),
-            out_specs=(q_spec, q_spec), check_vma=False)
-        args = (structs["codes"], structs["data_add"],
-                structs["data_rescale"], structs["adjacency"],
-                structs["n_valid"], structs["medoid"], structs["q_rot"],
-                structs["query_add"], structs["query_sumq"])
-        shardings = tuple(NamedSharding(mesh, s) for s in (
-            row_spec, sc_spec, sc_spec, row_spec, sc_spec, sc_spec,
-            q_spec, q1_spec, q1_spec))
+    if variant in ("exact", "exact_bf16", "rabitq", "rabitq_rerank"):
+        quantized = variant.startswith("rabitq")
+        rerank = variant == "rabitq_rerank"
+        core = abstract_core(
+            n_shards, cap, d,
+            vec_dtype=jnp.bfloat16 if variant == "exact_bf16" else f32,
+            # quantized cells without rerank keep f32 rows OFF-device
+            # (degenerate stub): the paper's memory story, measured honestly
+            vec_dims=(1 if quantized and not rerank else None),
+            quantized=quantized, bits=bits)
+        fn = sharded_search_fn(
+            mesh, spec, core, id_stride=cap, k=K, beam_width=BEAM,
+            max_iters=MAX_ITERS, expand=EXPAND, quantized=quantized,
+            rerank=rerank, use_kernels=False, filter_tombstones=True)
+        queries = jax.ShapeDtypeStruct((n_queries, d), f32)
+        lowered = fn.lower(core, queries)
     elif variant == "bruteforce":
-        structs |= {
-            "vectors": jax.ShapeDtypeStruct((rows, d), f32),
-            "vec_sqnorm": jax.ShapeDtypeStruct((rows,), f32),
-            "queries": jax.ShapeDtypeStruct((n_queries, d), f32),
-        }
+        rows = n_shards * cap
+        row_spec = P(spec.row_axes, None)
+        sc_spec = P(spec.row_axes)
+        q_spec = P("model", None)
 
         def bf(v, sq, nv, q):
             qs = jnp.sum(q * q, axis=-1)
             dist = qs[:, None] - 2.0 * (q @ v.T) + sq[None, :]
             neg, ids = jax.lax.top_k(-dist, K)
-            gids, gdists = ids.astype(jnp.int32), -neg
-            for ax in row_axes:
-                gd = jax.lax.all_gather(gdists, ax, axis=0)
-                gi = jax.lax.all_gather(gids, ax, axis=0)
-                gd = jnp.moveaxis(gd, 0, 1).reshape(q.shape[0], -1)
-                gi = jnp.moveaxis(gi, 0, 1).reshape(q.shape[0], -1)
-                neg2, pos = jax.lax.top_k(-gd, K)
-                gdists = -neg2
-                gids = jnp.take_along_axis(gi, pos, axis=1)
-            return gids, gdists
+            # same hierarchical shard merge as the real search path
+            return merge_topk(ids.astype(jnp.int32), -neg,
+                              spec.row_axes, K)
+
         fn = shard_map(
             bf, mesh=mesh,
             in_specs=(row_spec, sc_spec, sc_spec, q_spec),
             out_specs=(q_spec, q_spec), check_vma=False)
-        args = (structs["vectors"], structs["vec_sqnorm"],
-                structs["n_valid"], structs["queries"])
+        args = (jax.ShapeDtypeStruct((rows, d), f32),
+                jax.ShapeDtypeStruct((rows,), f32),
+                jax.ShapeDtypeStruct((n_shards,), jnp.int32),
+                jax.ShapeDtypeStruct((n_queries, d), f32))
         shardings = tuple(NamedSharding(mesh, s) for s in (
             row_spec, sc_spec, sc_spec, q_spec))
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
     else:
         raise ValueError(variant)
 
-    jitted = jax.jit(fn, in_shardings=shardings)
-    lowered = jitted.lower(*args)
     rec = {
         "dataset": ds_name, "variant": variant,
         "rows_total": ds.full_n, "dims": d, "n_queries": n_queries,
         "beam": BEAM, "max_iters": MAX_ITERS, "expand": EXPAND, "k": K,
         "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_shards": n_shards, "capacity_per_shard": cap,
         "lower_s": round(time.time() - t0, 2),
     }
     t1 = time.time()
@@ -270,7 +202,7 @@ def main() -> None:
     tag = ("multipod" if args.multi_pod else "singlepod") + args.tag
     datasets = args.dataset or list(ANNS_DATASETS)
     variants = args.variant or ["exact", "rabitq", "bruteforce"]
-    # extra variants: exact_bf16, rabitq_packed (--bits)
+    # extra variants: exact_bf16, rabitq_rerank
     os.makedirs(args.out, exist_ok=True)
     n_err = 0
     for ds in datasets:

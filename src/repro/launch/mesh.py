@@ -20,7 +20,10 @@ except ImportError:  # older jax: no explicit axis types; Auto is implied
     AxisType = None
 
 
-def _make_mesh(shape, axes):
+def make_mesh(shape, axes):
+    """jax.make_mesh with the AxisType compat shim (0.4.x has no
+    axis_types kwarg) — the ONE mesh constructor; benchmarks, examples,
+    and tests that build ad-hoc meshes route through here."""
     if AxisType is None:
         return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
@@ -30,9 +33,9 @@ def _make_mesh(shape, axes):
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for multi-device unit tests (8 host devices)."""
-    return _make_mesh((n_data, n_model), ("data", "model"))
+    return make_mesh((n_data, n_model), ("data", "model"))

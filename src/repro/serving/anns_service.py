@@ -1,4 +1,4 @@
-"""Online ANNS update/serve loop over one JasperIndex.
+"""Online ANNS update/serve loop over one index — single-device or sharded.
 
 The paper's deployment story ("built for change") plus the delete half from
 the online-ANNS literature (cf. the real-time adaptive multi-stream GPU
@@ -24,6 +24,12 @@ that design:
 `step()` is one scheduler tick (deletes -> maybe-consolidate -> inserts ->
 searches); `run()` drives a whole op stream. Both are synchronous host
 drivers, mirroring build/insert in core.
+
+Since the IndexCore unification, the service is BACKEND-AGNOSTIC: it
+drives the shared driver surface (insert -> assigned ids, delete,
+search/search_rabitq, consolidate, generation, deleted_fraction,
+tombstoned) that `JasperIndex` and `ShardedJasperIndex` both expose —
+the same serve loop runs one device or a whole mesh unchanged.
 """
 
 from __future__ import annotations
@@ -32,8 +38,6 @@ from dataclasses import dataclass
 from typing import Any, Iterable, NamedTuple
 
 import numpy as np
-
-from repro.core.index import JasperIndex
 
 __all__ = ["AnnsService", "SearchTicket", "StepResult", "ServiceStats"]
 
@@ -74,9 +78,10 @@ class ServiceStats:
 
 
 class AnnsService:
-    """Interleaved insert/delete/search serving over one JasperIndex."""
+    """Interleaved insert/delete/search serving over one index driver
+    (JasperIndex or ShardedJasperIndex — both expose the core surface)."""
 
-    def __init__(self, index: JasperIndex, *, k: int = 10,
+    def __init__(self, index, *, k: int = 10,
                  beam_width: int | None = None, use_kernels: bool = False,
                  quantized: bool | None = None,
                  consolidate_threshold: float = 0.25,
@@ -135,12 +140,11 @@ class AnnsService:
         ids = np.asarray(ids)
         if self.verify:
             # O(Q*k): gather only the returned ids' tombstone bits — the
-            # full bitmap never unpacks on the serving path
+            # full bitmap never unpacks on the serving path (the drivers'
+            # shared `tombstoned` hook also folds the high-water check;
+            # for the sharded backend it is per shard)
             returned = ids[ids >= 0]
-            bits = np.asarray(self.index.mut.tombstone_bits)
-            tombstoned = (bits[returned >> 3] >> (returned & 7)) & 1
-            dead = returned[(tombstoned == 1)
-                            | (returned >= int(self.index.graph.n_valid))]
+            dead = returned[self.index.tombstoned(returned)]
             if dead.size:
                 raise AssertionError(
                     f"serving contract violated: tombstoned ids returned "

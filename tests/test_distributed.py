@@ -10,16 +10,11 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-# prepended to every subprocess script: mesh construction compatible with
-# both current jax (explicit AxisType) and 0.4.x (no axis_types kwarg)
+# prepended to every subprocess script: the shared AxisType-compat mesh
+# constructor (import-safe before device init)
 PREAMBLE = """
 import jax
-def make_mesh(shape, axes):
-    try:
-        ats = (jax.sharding.AxisType.Auto,) * len(axes)
-        return jax.make_mesh(shape, axes, axis_types=ats)
-    except AttributeError:
-        return jax.make_mesh(shape, axes)
+from repro.launch.mesh import make_mesh
 """
 
 
@@ -53,7 +48,7 @@ def test_sharded_index_build_search_insert():
         idx.build(data)
         assert idx.size == N
         ids, dists = idx.search(queries, k=10, beam_width=32)
-        # ground truth on the dealt layout
+        # ground truth on the dealt layout (global id = shard*stride+local)
         per = N // 4
         full = np.zeros((4 * 2048, D), np.float32)
         valid = np.zeros((4 * 2048,), bool)
@@ -62,7 +57,8 @@ def test_sharded_index_build_search_insert():
             valid[s * 2048:s * 2048 + per] = True
         d = ((queries[:, None] - full[None]) ** 2).sum(-1)
         d[:, ~valid] = np.inf
-        gt = np.argsort(d, axis=1)[:, :10]
+        pos = np.argsort(d, axis=1)[:, :10]
+        gt = (pos // 2048) * idx.id_stride + pos % 2048
         ids = np.asarray(ids)
         rec = np.mean([len(set(ids[i]) & set(gt[i])) / 10 for i in range(Q)])
         assert rec > 0.85, rec
@@ -74,6 +70,163 @@ def test_sharded_index_build_search_insert():
         print("RECALL", rec)
     """)
     assert "RECALL" in out
+
+
+def test_sharded_lifecycle_unified_core():
+    """Full mutation lifecycle on the shard_map-wrapped IndexCore: deletes
+    on one shard are never returned from any shard's merge (all search
+    paths incl. the fused kernel scorer), consolidation frees slots,
+    insert derives PER-SHARD offsets (uneven shards reuse their own freed
+    slots while others advance their own tails), and save/load round-trips
+    tombstones + free pools through the single-device .npz format."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed import ShardedJasperIndex
+        from repro.core.index import JasperIndex
+        from repro.core.construction import ConstructionParams
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        N, D, Q, CAP = 2048, 32, 64, 1024
+        data = rng.normal(size=(N, D)).astype(np.float32)
+        queries = rng.normal(size=(Q, D)).astype(np.float32)
+        params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                                    max_iters=24, rev_cap=16, prune_chunk=256)
+        idx = ShardedJasperIndex(mesh, D, capacity_per_shard=CAP,
+                                 construction=params,
+                                 quantization="rabitq", bits=4)
+        STRIDE = idx.id_stride          # global id = shard*STRIDE + local
+        idx.build(data)
+        assert idx.size == N
+
+        # delete on shard 0 ONLY -> no search path may return those ids
+        dead = np.arange(100, 140)          # shard-0 locals == global ids
+        assert idx.delete(dead) == 40
+        for label, fn in [
+            ("exact", lambda: idx.search(queries, 10, beam_width=32)),
+            ("exact_kernel", lambda: idx.search(
+                queries, 10, beam_width=32, use_kernels=True)),
+            ("rabitq", lambda: idx.search_rabitq(queries, 10, beam_width=32)),
+            ("rabitq_kernel", lambda: idx.search_rabitq(
+                queries, 10, beam_width=32, use_kernels=True)),
+            ("rabitq_exclude", lambda: idx.search_rabitq(
+                queries, 10, beam_width=32, use_kernels=True,
+                traverse_deleted=False)),
+        ]:
+            ids, _ = fn()
+            leaked = np.intersect1d(np.asarray(ids), dead)
+            assert leaked.size == 0, (label, leaked)
+
+        # consolidate frees the slots (shard-local repair, no coordination)
+        stats = idx.consolidate()
+        assert stats["n_freed"] == 40
+        assert idx.size == N - 40
+
+        # uneven insert: shard 0 must reuse ITS freed slots, shards 1-3
+        # must advance THEIR own tails (the uniform-start bug would write
+        # shard 1-3 rows over unwritten offsets derived from shard 0)
+        gids = idx.insert(rng.normal(size=(4, 8, D)).astype(np.float32))
+        assert np.unique(gids).size == gids.size
+        per = N // 4
+        s0_local = np.sort(gids[gids // STRIDE == 0] % STRIDE)
+        assert (np.isin(s0_local, dead)).all(), s0_local   # reused slots
+        for s in (1, 2, 3):
+            loc = np.sort(gids[gids // STRIDE == s] % STRIDE)
+            assert (loc == per + np.arange(8)).all(), (s, loc)
+        assert idx.size == N - 40 + 32
+        # every search path still clean: reused slots are live again,
+        # remaining tombstones (none) can't leak
+        ids2, _ = idx.search_rabitq(queries, 10, beam_width=32,
+                                    use_kernels=True)
+        still_dead = np.setdiff1d(dead, gids[gids // STRIDE == 0] % STRIDE)
+        assert np.intersect1d(np.asarray(ids2), still_dead).size == 0
+
+        # save/load round-trip (tombstones + free pools included)
+        import tempfile, os
+        d = tempfile.mkdtemp()
+        path = os.path.join(d, "ck")
+        idx.save(path)
+        idx2 = ShardedJasperIndex.load(mesh, path)
+        assert idx2.size == idx.size
+        a, da = idx.search(queries, 10, beam_width=32)
+        b, db = idx2.search(queries, 10, beam_width=32)
+        assert (np.asarray(a) == np.asarray(b)).all()
+        assert np.allclose(np.asarray(da), np.asarray(db))
+        # every shard file is a valid single-device checkpoint
+        solo = JasperIndex.load(path + ".shard0")
+        assert solo.capacity == CAP
+        from repro.core.index_core import core_size
+        assert solo.size == core_size(idx2.shard_core(0))
+        # free pools round-tripped: next insert reuses identically
+        g1 = idx.insert(rng.normal(size=(4, 4, D)).astype(np.float32))
+        g2 = idx2.insert(rng.normal(size=(4, 4, D)).astype(np.float32))
+        assert (g1 == g2).all()
+        print("LIFECYCLE_OK")
+    """)
+    assert "LIFECYCLE_OK" in out
+
+
+def test_sharded_grow_and_single_device_parity():
+    """Per-shard grow is bit-identical on packed codes, and sharded search
+    matches single-device JasperIndex recall within noise on the same
+    data (both run the same core_search; only the merge differs)."""
+    out = run_with_devices("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.distributed import ShardedJasperIndex
+        from repro.core.index import JasperIndex
+        from repro.core.construction import ConstructionParams
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(1)
+        N, D, Q, CAP = 2048, 32, 128, 1024
+        data = rng.normal(size=(N, D)).astype(np.float32)
+        queries = rng.normal(size=(Q, D)).astype(np.float32)
+        params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                                    max_iters=24, rev_cap=16, prune_chunk=256)
+
+        sh = ShardedJasperIndex(mesh, D, capacity_per_shard=CAP,
+                                construction=params,
+                                quantization="rabitq", bits=4)
+        sh.build(data)
+        solo = JasperIndex(D, capacity=N, construction=params,
+                           quantization="rabitq", bits=4)
+        solo.build(data)
+
+        # parity: at the same per-search beam, shard-and-merge must never
+        # LOSE recall vs one device (4 independent beams over quarters
+        # cover at least as much as one beam over the whole set) ...
+        r_sh = sh.recall(queries, k=10, beam_width=48, quantized=True)
+        r_solo = solo.recall(queries, k=10, beam_width=48, quantized=True)
+        assert r_sh > 0.93, r_sh
+        assert r_sh >= r_solo - 0.02, (r_sh, r_solo)
+        # ... and at a MATCHED total candidate budget (4 shards x 48 vs
+        # one beam of 192) the two backends agree within noise
+        r_solo_eq = solo.recall(queries, k=10, beam_width=192,
+                                quantized=True)
+        assert abs(r_sh - r_solo_eq) < 0.05, (r_sh, r_solo_eq)
+
+        # grow: copy-extension only — packed codes per shard bit-identical
+        # and GLOBAL ids stable (id encoding is stride-, not cap-, based)
+        ids_pre, _ = sh.search(queries[:16], k=10, beam_width=32,
+                               quantized=True)
+        packed0 = np.asarray(sh.core.codes.packed).reshape(4, CAP, -1)
+        adj0 = np.asarray(sh.core.adjacency).reshape(4, CAP, -1)
+        sh.grow(2 * CAP)
+        packed1 = np.asarray(sh.core.codes.packed).reshape(4, 2 * CAP, -1)
+        adj1 = np.asarray(sh.core.adjacency).reshape(4, 2 * CAP, -1)
+        assert (packed1[:, :CAP] == packed0).all()
+        assert (packed1[:, CAP:] == 0).all()
+        assert (adj1[:, :CAP] == adj0).all()
+        assert (adj1[:, CAP:] == -1).all()
+        ids_post, _ = sh.search(queries[:16], k=10, beam_width=32,
+                                quantized=True)
+        assert (np.asarray(ids_pre) == np.asarray(ids_post)).all(), \
+            "global ids changed across grow"
+        r_grown = sh.recall(queries, k=10, beam_width=48, quantized=True)
+        assert abs(r_grown - r_sh) < 1e-6, (r_grown, r_sh)
+        print("GROW_PARITY_OK", r_sh, r_solo)
+    """)
+    assert "GROW_PARITY_OK" in out
 
 
 def test_sharded_train_step_runs_and_matches_single_device():
