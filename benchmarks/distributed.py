@@ -113,13 +113,71 @@ def run(csv, n: int | None = None,
                     "recall_at_10_after_deletes": round(rec_k, 4),
                     "tombstone_leaks": leaked})
 
+    # elastic reshard: a checkpoint saved at 4 shards (tombstones and all)
+    # restores at 1, 2, and 8 — recall at EQUAL TOTAL SEARCH BUDGET
+    # (S' shards x TOTAL_BEAM/S' beam each) must hold, and the fused
+    # kernel path must leak zero tombstones after the move
+    reshard = _run_reshard(csv, data, queries, rng, n)
+
     if out_json:
         with open(out_json, "w") as f:
-            json.dump({"shard_sweep": records,
+            json.dump({"shard_sweep": records, "reshard": reshard,
                        "n_queries": N_QUERIES, "k": K, "beam": BEAM}, f,
                       indent=2)
         print(f"# wrote {out_json}", flush=True)
     return records
+
+
+def _run_reshard(csv, data, queries, rng, n: int) -> dict:
+    import tempfile
+    import time as _time
+
+    from repro.core.distributed import ShardedJasperIndex
+    from benchmarks.common import BENCH_PARAMS
+
+    mesh4 = _make_mesh(4)
+    cap = -(-int(n * 1.25) // 4)
+    cap += (-cap) % 8
+    idx4 = ShardedJasperIndex(mesh4, DIMS, capacity_per_shard=cap,
+                              construction=BENCH_PARAMS,
+                              quantization="rabitq", bits=4)
+    idx4.build(data)
+    per = n // 4
+    dead = rng.choice(n, max(64, n // 16), replace=False)
+    gids = (dead // per) * idx4.id_stride + dead % per
+    idx4.delete(gids)
+    path = f"{tempfile.mkdtemp()}/ck"
+    idx4.save(path)
+    total_beam = 4 * BEAM
+    base = idx4.recall(queries, K, beam_width=total_beam // 4,
+                       quantized=True)
+    restores = []
+    for s in (1, 2, 8):
+        t0 = _time.perf_counter()
+        idx_r = ShardedJasperIndex.load(_make_mesh(s), path, n_shards=s)
+        load_s = _time.perf_counter() - t0
+        bw = max(K, total_beam // s)
+        rec = idx_r.recall(queries, K, beam_width=bw, quantized=True)
+        ids_k, _ = idx_r.search_rabitq(queries, K, beam_width=bw,
+                                       use_kernels=True)
+        ids_np = np.asarray(ids_k)
+        ret = ids_np[ids_np >= 0]
+        leaks = int(idx_r.tombstoned(ret).sum())
+        tr = idx_r.reshard_translation
+        csv.add(f"distributed/reshard_4to{s}", load_s * 1e6,
+                f"recall={rec:.3f} d={rec - base:+.3f} leaks={leaks}")
+        restores.append({
+            "restore_shards": s, "restore_s": round(load_s, 2),
+            "beam_width_per_shard": bw,
+            "recall_at_10": round(rec, 4),
+            "recall_delta_vs_4shard": round(rec - base, 4),
+            "kernel_tombstone_leaks": leaks,
+            "ids_translated": len(tr),
+        })
+    return {"from_shards": 4, "n_deleted": int(dead.size),
+            "total_beam": total_beam,
+            "baseline_recall_at_10": round(base, 4),
+            "restores": restores}
 
 
 def main() -> None:

@@ -18,9 +18,13 @@ case "$mode" in
     python -m pytest -x -q "$@"
     ;;
   smoke)
-    # fast subset: the search/quantization hot path + kernel oracles
-    python -m pytest -q -k "not slow" \
-      tests/test_core_anns.py tests/test_kernels.py "$@"
+    # fast subset: the search/quantization hot path, kernel oracles, the
+    # single-shard half of the conformance matrix, and the serving
+    # failure paths — `slow` / `multidevice` markers keep subprocess
+    # fan-outs out of this lane (they run in full tier-1)
+    python -m pytest -q -m "not slow and not multidevice" \
+      tests/test_core_anns.py tests/test_kernels.py \
+      tests/test_conformance.py tests/test_service.py "$@"
     # mutation-engine churn scenario end-to-end on synthetic data
     # (insert/delete/consolidate interleaved through the serving loop)
     python examples/streaming_updates.py --churn --quick
@@ -28,6 +32,10 @@ case "$mode" in
     # (8 fake host devices; IndexCore shard_map-wrapped per row shard)
     XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
       python examples/streaming_updates.py --churn --quick --sharded
+    # reshard lane: checkpoint at 4 shards -> restore at 2 -> churn ->
+    # verify the id-translation + zero-tombstoned-ids contracts
+    XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
+      python examples/streaming_updates.py --reshard --quick
     ;;
   *)
     echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2

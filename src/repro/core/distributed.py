@@ -63,8 +63,19 @@ from repro.core.index_core import (
 )
 from repro.core.mutations import MutationState
 from repro.core.rabitq import RaBitQCodes, RaBitQParams, rabitq_train
+from repro.core.resharding import pow2_rung
 
 Array = jax.Array
+
+
+def _pow2_pad_pairs(ids: np.ndarray, rows: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Pad an (ids, rows) insert batch to a power-of-two rung by repeating
+    the first pair — a duplicate insert_at is an idempotent re-link, so
+    uneven rebalance batches reuse one executable per rung."""
+    extra = pow2_rung(ids.size) - ids.size
+    return (np.concatenate([ids, np.repeat(ids[:1], extra)]),
+            np.concatenate([rows, np.repeat(rows[:1], extra, axis=0)]))
 
 
 @dataclass(frozen=True)
@@ -261,13 +272,15 @@ class ShardedJasperIndex:
     """Row-sharded Jasper index: the IndexCore driver on a device mesh."""
 
     def __init__(self, mesh: Mesh, dims: int, capacity_per_shard: int, *,
-                 spec: ShardSpec | None = None,
+                 spec: ShardSpec | None = None, metric: str = "l2",
                  construction: ConstructionParams | None = None,
                  quantization: str | None = None, bits: int = 4,
                  seed: int = 0, id_stride: int | None = None):
         """id_stride: global ids are shard*id_stride + local, fixed for the
         index lifetime (default 4x capacity_per_shard) — capacity can grow
         up to the stride without invalidating outstanding ids."""
+        if metric not in ("l2", "mips"):
+            raise ValueError(f"metric must be l2|mips, got {metric!r}")
         if quantization not in (None, "rabitq"):
             raise ValueError(
                 "sharded quantization must be None or 'rabitq' "
@@ -291,7 +304,13 @@ class ShardedJasperIndex:
             # fall back to replicated queries on meshes without a model axis
             self.spec = ShardSpec(self.spec.row_axes, None)
         self.dims = dims
-        self.store_dims = dims          # sharded driver is L2-only (no MIPS)
+        self.metric = metric
+        # MIPS reduces to L2 with one augmented dimension (paper §6.3);
+        # the augmentation max-norm is GLOBAL (one host fold over each
+        # batch before rows deal to shards), so every shard augments
+        # against the same bound and the reduction stays exact
+        self.store_dims = dims + 1 if metric == "mips" else dims
+        self._mips_max_sqnorm: float | None = None
         self.cap = capacity_per_shard
         self.params = construction or ConstructionParams()
         self.quantization = quantization
@@ -303,6 +322,9 @@ class ShardedJasperIndex:
 
         self.core = self._device_put(self._empty_stacked_core())
         self._fn_cache: dict = {}
+        # old->new IdTranslation of the last shard-count-changing load
+        # (None after a same-count restore or a fresh construction)
+        self.reshard_translation = None
 
     # --------------------------------------------------------------- stacking
     def _empty_stacked_core(self) -> IndexCore:
@@ -412,6 +434,21 @@ class ShardedJasperIndex:
         return (self.n_deleted != 0
                 or int(np.sum(np.asarray(self.core.mut.n_free))) != 0)
 
+    def shard_live_counts(self) -> np.ndarray:
+        """int64[S] live rows per shard (skewed deletes drift these apart;
+        `rebalance` levels them)."""
+        return (np.asarray(self.core.n_valid, np.int64)
+                - np.asarray(self.core.mut.n_deleted, np.int64)
+                - np.asarray(self.core.mut.n_free, np.int64))
+
+    @property
+    def shard_imbalance(self) -> float:
+        """(max - min) / mean of per-shard live counts — the load-skew
+        metric serving layers trigger `rebalance` on (0.0 = level)."""
+        c = self.shard_live_counts()
+        m = float(c.mean())
+        return float(c.max() - c.min()) / m if m > 0 else 0.0
+
     def global_row(self, shard: int, local_id: int) -> int:
         return shard * self.id_stride + local_id
 
@@ -433,6 +470,62 @@ class ShardedJasperIndex:
     def _template(self) -> IndexCore:
         return self.core
 
+    # ----------------------------------------------------------------- mips
+    def _prep_data(self, x) -> Array:
+        """Metric prep BEFORE rows deal to shards: for MIPS, augment with
+        the GLOBAL max-norm (host fold — the 'one all-reduce' of the
+        roadmap item, folded on the host where batches already live). A
+        later batch that raises the max re-augments every written row on
+        every shard, so the MIPS->L2 reduction stays exact under
+        streaming."""
+        x = jnp.asarray(x, jnp.float32)
+        if self.metric != "mips":
+            return x
+        sq = jnp.sum(x * x, axis=-1)
+        m2 = float(jnp.max(sq))                 # global: whole host batch
+        if self._mips_max_sqnorm is None:
+            self._mips_max_sqnorm = m2
+        elif m2 > self._mips_max_sqnorm:
+            old = self._mips_max_sqnorm
+            self._mips_max_sqnorm = m2
+            self._reaugment_mips(old, m2)
+        extra = jnp.sqrt(jnp.maximum(self._mips_max_sqnorm - sq, 0.0))
+        return jnp.concatenate([x, extra[..., None]], axis=-1)
+
+    def _reaugment_mips(self, old_m2: float, new_m2: float) -> None:
+        """Closed-form re-augmentation of every written row on every shard
+        (same identity as the single-device driver: e' = sqrt(e^2 + delta))
+        + re-encode of the packed codes — the quantizer rotation/centroid
+        is dataset-level and untouched, so codes re-derive in place."""
+        from repro.core.rabitq import rabitq_encode
+        c = self.core
+        delta = new_m2 - old_m2
+        rows = self.n_shards * self.cap
+        written = (jnp.arange(rows) % self.cap
+                   < jnp.repeat(c.n_valid, self.cap))
+        last = c.vectors[:, -1]
+        vectors = c.vectors.at[:, -1].set(
+            jnp.where(written, jnp.sqrt(last * last + delta), last))
+        sqnorm = jnp.where(written, c.vec_sqnorm + delta, c.vec_sqnorm)
+        codes = c.codes
+        if codes is not None:
+            enc = rabitq_encode(c.rq_params, vectors)
+            codes = RaBitQCodes(
+                packed=jnp.where(written[:, None], enc.packed, codes.packed),
+                data_add=jnp.where(written, enc.data_add, codes.data_add),
+                data_rescale=jnp.where(written, enc.data_rescale,
+                                       codes.data_rescale),
+                bits=codes.bits, dims=codes.dims)
+        self.core = self._device_put(replace(
+            c, vectors=vectors, vec_sqnorm=sqnorm, codes=codes))
+
+    def _prep_query(self, q) -> Array:
+        q = jnp.asarray(q, jnp.float32)
+        if self.metric == "mips":
+            from repro.core.distances import mips_augment_query
+            q = mips_augment_query(q)
+        return q
+
     # ------------------------------------------------------------ build/insert
     def _ensure_quantizer(self, rows: Array) -> None:
         if self.quantization == "rabitq" and self.core.rq_params is None:
@@ -444,7 +537,7 @@ class ShardedJasperIndex:
     def build(self, data) -> "ShardedJasperIndex":
         """Bulk build. data: (N, D) with N divisible by n_shards — rows are
         dealt contiguously to shards (shard s owns data[s*per:(s+1)*per])."""
-        data = jnp.asarray(data, jnp.float32)
+        data = self._prep_data(data)
         n = data.shape[0]
         if n % self.n_shards:
             raise ValueError(f"N={n} not divisible by n_shards={self.n_shards}")
@@ -511,6 +604,7 @@ class ShardedJasperIndex:
             ids = (np.arange(s)[:, None] * self.id_stride
                    + np.arange(b)[None, :]).astype(np.int32)
             return ids.reshape(-1) if flat_in else ids
+        data = self._prep_data(data)    # (S, b, D[+1]): global-max augment
         local_ids, global_ids = self._allocate_slots_per_shard(data.shape[1])
         self.core = self._fn("insert", b=data.shape[1])(
             self.core, jnp.asarray(local_ids), data)
@@ -579,7 +673,7 @@ class ShardedJasperIndex:
         counts = np.bincount(shard, minlength=self.n_shards)
         # pad every shard's batch to one power-of-two rung (-1 = ignored)
         # so uneven delete batches reuse one executable per rung
-        rung = 1 << max(0, int(counts.max() - 1).bit_length())
+        rung = pow2_rung(int(counts.max()))
         padded = np.full((self.n_shards, rung), -1, np.int32)
         for i in range(self.n_shards):
             mine = local[shard == i]
@@ -661,6 +755,77 @@ class ShardedJasperIndex:
         self._fn_cache.clear()          # row0 offsets / shapes changed
         return self
 
+    def rebalance(self, *, tolerance: float = 0.05) -> dict:
+        """Level per-shard live counts: round-robin live rows off overfull
+        shards onto underfull ones (skewed deletes drift shards uneven;
+        this is the online remedy — `consolidate` repairs graphs in
+        place, `rebalance` moves load).
+
+        Host-driven like consolidate: rows move via the SAME core ops the
+        drivers already use — `core_insert_at` on the receiver (whose
+        fused encode re-derives the packed code bit-identically, because
+        the quantizer rotation/centroid is replicated dataset-level
+        state) and `core_delete` + per-shard `core_consolidate` on the
+        donor. Moved rows get new global ids; the returned
+        ``translation`` (IdTranslation, identity off-table) remaps
+        outstanding tickets. No-op inside `tolerance` imbalance.
+        """
+        from repro.core.index_core import (core_live_locals,
+                                           core_take_free_slots)
+        from repro.core.resharding import IdTranslation, rebalance_plan
+
+        # liveness is consolidate-invariant, so the plan (and the no-op
+        # early return: nothing mutated, nothing stamped) comes first
+        live = [core_live_locals(self.shard_core(s))
+                for s in range(self.n_shards)]
+        plan = rebalance_plan(live, tolerance=tolerance)
+        base = {"counts_before": plan.counts_before.tolist(),
+                "counts_after": plan.counts_after.tolist(),
+                "imbalance": self.shard_imbalance}
+        if plan.n_moved == 0:
+            return base | {"n_moved": 0, "translation": None}
+        if self.n_deleted:
+            # tombstoned slots cannot receive rows — free them first (a
+            # rebalance implies consolidation, never the other way round)
+            self.consolidate()
+
+        vecs = np.asarray(self.core.vectors).reshape(
+            self.n_shards, self.cap, -1)
+        locals_ = [self.shard_core(s) for s in range(self.n_shards)]
+        old_gids, new_gids = [], []
+        # 1. receivers first (rows must exist somewhere at every point)
+        for dst, pairs in plan.moves.items():
+            rows = np.stack([vecs[s, l] for s, l in pairs])
+            core = locals_[dst]
+            core, reused = core_take_free_slots(core, len(pairs))
+            hw = int(core.n_valid)
+            fresh = np.arange(hw, hw + len(pairs) - reused.size,
+                              dtype=np.int32)
+            ids = np.concatenate([reused, fresh]).astype(np.int32)
+            pad = _pow2_pad_pairs(ids, rows)
+            locals_[dst] = core_insert_at(
+                core, jnp.asarray(pad[0]), jnp.asarray(pad[1]),
+                params=self.params)
+            old_gids += [s * self.id_stride + l for s, l in pairs]
+            new_gids += (dst * self.id_stride + ids.astype(np.int64)).tolist()
+        # 2. tombstone the moved-out rows on their donors, then repair
+        by_src: dict[int, list[int]] = {}
+        for pairs in plan.moves.values():
+            for s, l in pairs:
+                by_src.setdefault(s, []).append(l)
+        for src, locs in by_src.items():
+            ids = np.asarray(sorted(locs), np.int32)
+            padded = np.full((pow2_rung(ids.size),), -1, np.int32)
+            padded[:ids.size] = ids
+            locals_[src], _ = core_delete(locals_[src], jnp.asarray(padded))
+            locals_[src], _ = core_consolidate(locals_[src],
+                                               params=self.params)
+        self.core = self._stack_cores(locals_)
+        return base | {
+            "n_moved": plan.n_moved,
+            "translation": IdTranslation.build(old_gids, new_gids,
+                                               default="identity")}
+
     # ------------------------------------------------------------------ search
     def search(self, queries, k: int = 10, *, beam_width: int | None = None,
                max_iters: int | None = None, expand: int = 1,
@@ -672,7 +837,7 @@ class ShardedJasperIndex:
         Returns (GLOBAL ids (Q, k), dists (Q, k)). Exact-distance by
         default (JasperIndex.search symmetry); quantized=True or
         `search_rabitq` routes through the packed-code estimator."""
-        queries = jnp.asarray(queries, jnp.float32)
+        queries = self._prep_query(queries)
         bw = beam_width or max(k, 32)
         mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
         fn = self._fn("search", q_shape=queries.shape, k=k, bw=bw, mi=mi,
@@ -693,7 +858,7 @@ class ShardedJasperIndex:
         truth) — host-side full scan over the stacked arrays."""
         from repro.core.distances import pairwise_l2_squared
         from repro.core.mutations import unpack_bitmap
-        q = jnp.asarray(queries, jnp.float32)
+        q = self._prep_query(queries)
         d = pairwise_l2_squared(q, self.core.vectors, self.core.vec_sqnorm)
         rows = self.n_shards * self.cap
         local = jnp.arange(rows) % self.cap
@@ -753,19 +918,21 @@ class ShardedJasperIndex:
         from repro.core.index import save_npz_atomic
         meta = {
             "n_shards": self.n_shards, "dims": self.dims,
+            "metric": self.metric,
             "capacity_per_shard": self.cap, "id_stride": self.id_stride,
             "quantization": self.quantization, "bits": self.bits,
             "seed": self.seed,
             "construction": asdict(self.params),
             "row_axes": list(self.spec.row_axes),
             "query_axis": self.spec.query_axis,
+            "mips_max_sqnorm": self._mips_max_sqnorm,
         }
         shard_meta = {
-            "dims": self.dims, "metric": "l2", "capacity": self.cap,
+            "dims": self.dims, "metric": self.metric, "capacity": self.cap,
             "quantization": self.quantization, "bits": self.bits,
             "seed": self.seed,
             "construction": asdict(self.params),
-            "mips_max_sqnorm": None,
+            "mips_max_sqnorm": self._mips_max_sqnorm,
         }
         for s in range(self.n_shards):
             save_npz_atomic(f"{path}.shard{s}",
@@ -774,26 +941,65 @@ class ShardedJasperIndex:
             json.dump(meta, f)
 
     @classmethod
-    def load(cls, mesh: Mesh, path: str, *,
-             spec: ShardSpec | None = None) -> "ShardedJasperIndex":
+    def load(cls, mesh: Mesh, path: str, *, spec: ShardSpec | None = None,
+             n_shards: int | None = None) -> "ShardedJasperIndex":
+        """Restore a checkpoint at WHATEVER shard count the mesh provides.
+
+        Same count as saved -> bit-exact restore (tombstones + free pools
+        round-trip). Different count -> elastic reshard (core/resharding):
+        live rows re-partition into capacity-balanced cores, packed codes
+        bit-identical, adjacency remapped + repaired, and the old->new id
+        map lands on ``idx.reshard_translation`` for outstanding tickets
+        (None on an exact restore). `n_shards` is an optional guard: raise
+        rather than silently reshard to an unintended count.
+        """
         with open(path + ".meta.json") as f:
             meta = json.load(f)
-        if spec is None and meta.get("row_axes"):
+        metric = meta.get("metric", "l2")
+        store_dims = meta["dims"] + 1 if metric == "mips" else meta["dims"]
+        if (spec is None and meta.get("row_axes")
+                and all(a in mesh.axis_names for a in meta["row_axes"])):
+            qa = meta["query_axis"]
             spec = ShardSpec(row_axes=tuple(meta["row_axes"]),
-                             query_axis=meta["query_axis"])
-        idx = cls(mesh, meta["dims"], meta["capacity_per_shard"], spec=spec,
-                  construction=ConstructionParams(**meta["construction"]),
-                  quantization=meta["quantization"], bits=meta["bits"],
-                  seed=meta["seed"], id_stride=meta.get("id_stride"))
-        if idx.n_shards != meta["n_shards"]:
-            raise ValueError(
-                f"mesh provides {idx.n_shards} shards, checkpoint has "
-                f"{meta['n_shards']} (elastic resharding is not supported)")
+                             query_axis=qa if qa in mesh.axis_names else None)
+        params = ConstructionParams(**meta["construction"])
+        quantized = meta["quantization"] == "rabitq"
         locals_ = [core_from_arrays(
             np.load(f"{path}.shard{s}"), bits=meta["bits"],
-            store_dims=meta["dims"],
-            quantized=meta["quantization"] == "rabitq")
+            store_dims=store_dims, quantized=quantized)
             for s in range(meta["n_shards"])]
+
+        # resolve the target shard count from mesh+spec WITHOUT
+        # constructing: the constructor device-allocates a full empty
+        # stacked core, and on the reshard path capacity/stride are only
+        # known after the resplit — one construction, at the final shape
+        row_axes = (spec.row_axes if spec is not None
+                    else (tuple(a for a in mesh.axis_names if a != "model")
+                          or (mesh.axis_names[0],)))
+        target = 1
+        for ax in row_axes:
+            target *= mesh.shape[ax]
+        if n_shards is not None and target != n_shards:
+            raise ValueError(
+                f"mesh provides {target} row shards but n_shards="
+                f"{n_shards} was requested — pass a mesh/spec with "
+                f"{n_shards} row shards")
+        translation = None
+        cap, stride = meta["capacity_per_shard"], meta.get("id_stride")
+        if target != meta["n_shards"]:
+            from repro.core.resharding import reshard_cores
+            res = reshard_cores(
+                locals_,
+                old_id_stride=stride or 4 * cap,
+                n_shards=target, params=params)
+            cap, stride = res.capacity_per_shard, res.id_stride
+            locals_, translation = res.cores, res.translation
+        idx = cls(mesh, meta["dims"], cap, id_stride=stride, spec=spec,
+                  metric=metric, construction=params,
+                  quantization=meta["quantization"], bits=meta["bits"],
+                  seed=meta["seed"])
+        idx._mips_max_sqnorm = meta.get("mips_max_sqnorm")
         idx.core = idx._stack_cores(locals_)
+        idx.reshard_translation = translation
         idx._fn_cache.clear()
         return idx

@@ -360,6 +360,12 @@ def core_live_mask(core: IndexCore) -> np.ndarray:
     return (np.arange(core.capacity) < int(core.n_valid)) & ~dense
 
 
+def core_live_locals(core: IndexCore) -> np.ndarray:
+    """Ascending local ids of the live rows — the canonical per-shard row
+    order resharding and rebalancing deal from (host copy)."""
+    return np.where(core_live_mask(core))[0].astype(np.int64)
+
+
 def bitmap_test_np(tombstone_bits: np.ndarray, ids: np.ndarray) -> np.ndarray:
     """Host-side per-id bit test over the PACKED bytes (one byte gather +
     shift/mask per id) — the single definition of the bitmap encoding on

@@ -29,7 +29,12 @@ Since the IndexCore unification, the service is BACKEND-AGNOSTIC: it
 drives the shared driver surface (insert -> assigned ids, delete,
 search/search_rabitq, consolidate, generation, deleted_fraction,
 tombstoned) that `JasperIndex` and `ShardedJasperIndex` both expose —
-the same serve loop runs one device or a whole mesh unchanged.
+the same serve loop runs one device or a whole mesh unchanged. On the
+sharded backend the loop also levels load: when per-shard live counts
+drift past `rebalance_threshold` (skewed deletes), the tick runs
+`index.rebalance()` between mutations and searches and surfaces the
+old->new id translation for outstanding tickets in
+`StepResult.rebalanced` (see docs/resharding.md).
 """
 
 from __future__ import annotations
@@ -57,6 +62,10 @@ class StepResult(NamedTuple):
     n_deleted: int
     consolidated: dict | None
     search: SearchTicket | None
+    # rebalance stats when the shard-imbalance trigger fired this tick;
+    # rebalanced["translation"] remaps outstanding ticket ids (moved rows
+    # get new global ids — unmoved ids translate to themselves)
+    rebalanced: dict | None = None
 
 
 @dataclass
@@ -70,6 +79,8 @@ class ServiceStats:
     n_searches: int = 0
     n_search_queries: int = 0
     n_consolidations: int = 0
+    n_rebalances: int = 0
+    n_rebalance_rows: int = 0
     n_grows: int = 0
     last_generation: int = 0
 
@@ -85,12 +96,17 @@ class AnnsService:
                  beam_width: int | None = None, use_kernels: bool = False,
                  quantized: bool | None = None,
                  consolidate_threshold: float = 0.25,
+                 rebalance_threshold: float = 0.0,
                  verify: bool = True):
         """
         quantized: serve via search_rabitq (defaults to True iff the index
         was built with quantization='rabitq').
         consolidate_threshold: tombstone load factor that triggers automatic
         graph repair at the next tick (<= 0 disables auto-consolidation).
+        rebalance_threshold: per-shard live-count imbalance ((max-min)/mean)
+        that triggers a rebalance between ticks (<= 0 disables; only
+        meaningful for index drivers that expose `rebalance`, i.e. the
+        sharded backend — a single-device index never triggers).
         verify: re-check the no-tombstoned-ids contract on every served
         batch (host-side O(Q*k); raise on violation).
         """
@@ -101,6 +117,7 @@ class AnnsService:
         self.quantized = (index.quantization == "rabitq"
                           if quantized is None else quantized)
         self.consolidate_threshold = consolidate_threshold
+        self.rebalance_threshold = rebalance_threshold
         self.verify = verify
         self.stats = ServiceStats()
 
@@ -167,6 +184,32 @@ class AnnsService:
         self._stamp()
         return stats
 
+    def maybe_rebalance(self, force: bool = False) -> dict | None:
+        """Level shard loads if the live-count imbalance warrants it.
+
+        The elastic half of the serving story: skewed deletes drift
+        shards uneven, and the serve loop can repair that BETWEEN ticks
+        (rebalance is host-driven, so no in-flight search observes a
+        half-moved row — purity gives each search a consistent
+        snapshot). Returns the index's rebalance stats (including the
+        old->new `translation` for outstanding tickets) or None when the
+        trigger did not fire or the backend has no shards to level.
+        """
+        idx = self.index
+        if not hasattr(idx, "rebalance"):
+            return None                       # single-device backend
+        thresh = self.rebalance_threshold
+        trigger = force or (thresh > 0 and idx.shard_imbalance >= thresh)
+        if not trigger:
+            return None
+        stats = idx.rebalance()
+        if stats.get("n_moved"):
+            self.stats.n_rebalances += 1
+            self.stats.n_rebalance_rows += stats["n_moved"]
+            self._stamp()
+            return stats
+        return None
+
     # ----------------------------------------------------------------- loop
     def step(self, *, inserts=None, deletes=None, queries=None,
              k: int | None = None) -> StepResult:
@@ -175,20 +218,23 @@ class AnnsService:
 
         Deletes run first and consolidation (when the load factor triggers
         it) immediately after, so the insert half of the same tick can
-        reuse the slots they free; searches run last and observe every
-        mutation of the tick, stamped with the post-mutation generation.
+        reuse the slots they free; a shard rebalance (when the imbalance
+        trigger fires) follows while the freed slots are still empty;
+        searches run last and observe every mutation of the tick, stamped
+        with the post-mutation generation.
         """
         n_del = self.delete(deletes) if deletes is not None else 0
         cons = self.maybe_consolidate()
+        reb = self.maybe_rebalance()
         ins = self.insert(inserts) if inserts is not None else None
         ticket = self.search(queries, k) if queries is not None else None
         return StepResult(inserted_ids=ins, n_deleted=n_del,
-                          consolidated=cons, search=ticket)
+                          consolidated=cons, search=ticket, rebalanced=reb)
 
     def run(self, ops: Iterable[tuple[str, Any]]) -> list:
         """Drive an op stream: ("insert", vecs) | ("delete", ids) |
-        ("search", queries) | ("consolidate", None). Returns per-op results
-        in order."""
+        ("search", queries) | ("consolidate", None) | ("rebalance", None).
+        Returns per-op results in order."""
         out: list = []
         for kind, payload in ops:
             if kind == "insert":
@@ -199,10 +245,13 @@ class AnnsService:
                 # insert/delete-only stream still consolidates (and the
                 # freed slots recycle), matching step()'s ordering
                 self.maybe_consolidate()
+                self.maybe_rebalance()
             elif kind == "search":
                 out.append(self.search(payload))
             elif kind == "consolidate":
                 out.append(self.maybe_consolidate(force=True))
+            elif kind == "rebalance":
+                out.append(self.maybe_rebalance(force=True))
             else:
                 raise ValueError(f"unknown op {kind!r}")
         return out

@@ -1,0 +1,222 @@
+"""Cross-backend differential conformance suite for `core_search`.
+
+ONE parametrized matrix asserts result parity across
+
+    {exact, quantized} x {jnp, Pallas kernel} x {tombstones off/on}
+        x {1 shard, 4 shards}
+
+— the oracle grid future kernel work runs against: any new scoring /
+merge / epilogue kernel must keep every cell green before it lands.
+
+Seeding: dataset/queries/deletes all derive from `numpy.default_rng`
+with the constants below — every run sees the identical index.
+
+Tolerances (documented here, asserted below):
+
+  * `MIN_RECALL` (0.75 @ beam 48, k 10): the floor every cell must
+    clear against its backend's own brute force over LIVE rows — same
+    floor the core ANNS suite has always enforced.
+  * kernel-vs-jnp (same backend, same config): >= `KERNEL_ID_AGREEMENT`
+    (0.95) elementwise id agreement and distances allclose at
+    rtol `KERNEL_DIST_RTOL` / atol `KERNEL_DIST_ATOL`. The two paths
+    compute the same arithmetic but reduce in different orders, so
+    bit-equality is NOT the contract — near-total frontier agreement is
+    (tolerances inherited from tests/test_core_anns.py, where they have
+    been stable since the kernel paths landed).
+  * sharded-vs-single (same per-search beam): sharded recall >=
+    single-device recall - `SHARD_RECALL_SLACK` (0.02). Four
+    independent beams over quarters cover at least as much as one beam
+    over the whole set, so shard-and-merge must never lose recall.
+  * tombstones on: ZERO deleted ids returned, on every path — not a
+    tolerance, an invariant.
+
+The 4-shard half of the matrix runs in ONE subprocess (the XLA fake-
+device flag must precede jax init) whose JSON report the parametrized
+cells assert against — so the matrix stays visible test-by-test without
+paying subprocess startup per cell.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SEED = 321
+N, D, Q, K, BEAM = 2048, 32, 64, 10, 48
+N_DELETE = 200
+MIN_RECALL = 0.75
+KERNEL_ID_AGREEMENT = 0.95
+KERNEL_DIST_RTOL = 1e-3
+KERNEL_DIST_ATOL = 1e-2
+SHARD_RECALL_SLACK = 0.02
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CELLS = [
+    pytest.param(quantized, kernels, tombstones,
+                 id=f"{'rabitq' if quantized else 'exact'}-"
+                    f"{'kernel' if kernels else 'jnp'}-"
+                    f"{'tomb' if tombstones else 'clean'}")
+    for quantized in (False, True)
+    for kernels in (False, True)
+    for tombstones in (False, True)
+]
+
+
+def _dataset():
+    rng = np.random.default_rng(SEED)
+    data = rng.normal(size=(N, D)).astype(np.float32)
+    queries = rng.normal(size=(Q, D)).astype(np.float32)
+    dead = np.sort(rng.choice(N, N_DELETE, replace=False))
+    return data, queries, dead
+
+
+def _recall(ids, gt):
+    ids, gt = np.asarray(ids), np.asarray(gt)
+    return float(np.mean([len(set(ids[i]) & set(gt[i])) / gt.shape[1]
+                          for i in range(ids.shape[0])]))
+
+
+# --------------------------------------------------------------- 1 shard
+@pytest.fixture(scope="module")
+def single_results():
+    """All 8 single-device cells, computed once: {cell: (ids, dists)} plus
+    ground truths and the deleted-id set."""
+    from repro.core.construction import ConstructionParams
+    from repro.core.index import JasperIndex
+
+    params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                                max_iters=24, rev_cap=16, prune_chunk=256)
+    data, queries, dead = _dataset()
+    out = {"dead": dead}
+    for tombstones in (False, True):
+        idx = JasperIndex(D, capacity=N, construction=params,
+                          quantization="rabitq", bits=4, seed=SEED)
+        idx.build(data)
+        if tombstones:
+            idx.delete(dead)
+        gt, _ = idx.brute_force(queries, K)
+        out[("gt", tombstones)] = np.asarray(gt)
+        for quantized in (False, True):
+            for kernels in (False, True):
+                fn = idx.search_rabitq if quantized else idx.search
+                ids, dists = fn(queries, K, beam_width=BEAM,
+                                use_kernels=kernels)
+                out[(quantized, kernels, tombstones)] = (
+                    np.asarray(ids), np.asarray(dists))
+    return out
+
+
+@pytest.mark.parametrize("quantized,kernels,tombstones", CELLS)
+def test_single_shard_cell(single_results, quantized, kernels, tombstones):
+    ids, _ = single_results[(quantized, kernels, tombstones)]
+    gt = single_results[("gt", tombstones)]
+    # recall floor vs brute force over live rows
+    rec = _recall(ids, gt)
+    assert rec >= MIN_RECALL, (rec, MIN_RECALL)
+    # invariant: tombstoned ids never surface
+    if tombstones:
+        assert not np.isin(ids, single_results["dead"]).any()
+    # differential: kernel cell vs its jnp twin
+    if kernels:
+        ids_ref, dists_ref = single_results[(quantized, False, tombstones)]
+        _, dists = single_results[(quantized, kernels, tombstones)]
+        agree = float(np.mean(ids == ids_ref))
+        assert agree >= KERNEL_ID_AGREEMENT, agree
+        np.testing.assert_allclose(dists, dists_ref,
+                                   rtol=KERNEL_DIST_RTOL,
+                                   atol=KERNEL_DIST_ATOL)
+
+
+# -------------------------------------------------------------- 4 shards
+_SHARDED_SCRIPT = f"""
+import json, numpy as np, jax
+from repro.launch.mesh import make_mesh
+from repro.core.construction import ConstructionParams
+from repro.core.distributed import ShardedJasperIndex
+
+SEED, N, D, Q, K, BEAM, N_DELETE = {SEED}, {N}, {D}, {Q}, {K}, {BEAM}, {N_DELETE}
+rng = np.random.default_rng(SEED)
+data = rng.normal(size=(N, D)).astype(np.float32)
+queries = rng.normal(size=(Q, D)).astype(np.float32)
+dead = np.sort(rng.choice(N, N_DELETE, replace=False))
+params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                            max_iters=24, rev_cap=16, prune_chunk=256)
+mesh = make_mesh((4, 2), ("data", "model"))
+report = {{}}
+for tombstones in (False, True):
+    idx = ShardedJasperIndex(mesh, D, capacity_per_shard=N // 4,
+                             construction=params, quantization="rabitq",
+                             bits=4, seed=SEED)
+    idx.build(data)
+    if tombstones:
+        per = N // 4
+        gids = (dead // per) * idx.id_stride + dead % per
+        idx.delete(gids)
+        dead_set = gids
+    else:
+        dead_set = np.empty(0, np.int64)
+    gt, _ = idx.brute_force(queries, K)
+    gt = np.asarray(gt)
+    cells = {{}}
+    for quantized in (False, True):
+        for kernels in (False, True):
+            fn = idx.search_rabitq if quantized else idx.search
+            ids, dists = fn(queries, K, beam_width=BEAM, use_kernels=kernels)
+            ids = np.asarray(ids)
+            rec = float(np.mean([len(set(ids[i]) & set(gt[i])) / K
+                                 for i in range(Q)]))
+            cells[f"{{quantized}}-{{kernels}}"] = dict(
+                recall=rec,
+                leaks=int(np.isin(ids, dead_set).sum()),
+                ids=ids.tolist(), dists=np.asarray(dists).tolist())
+    report[str(tombstones)] = cells
+print("CONFORMANCE_JSON=" + json.dumps(report))
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_results():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c",
+                          textwrap.dedent(_SHARDED_SCRIPT)],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, (
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("CONFORMANCE_JSON=")][0]
+    return json.loads(line[len("CONFORMANCE_JSON="):])
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+@pytest.mark.parametrize("quantized,kernels,tombstones", CELLS)
+def test_four_shard_cell(sharded_results, single_results,
+                         quantized, kernels, tombstones):
+    cell = sharded_results[str(tombstones)][f"{quantized}-{kernels}"]
+    # recall floor vs the sharded backend's own brute force
+    assert cell["recall"] >= MIN_RECALL, cell["recall"]
+    # invariant: zero tombstone leaks, fused kernel epilogue included
+    assert cell["leaks"] == 0
+    # differential vs the jnp twin (global ids agree across scorer paths)
+    ref = sharded_results[str(tombstones)][f"{quantized}-False"]
+    if kernels:
+        agree = float(np.mean(np.asarray(cell["ids"])
+                              == np.asarray(ref["ids"])))
+        assert agree >= KERNEL_ID_AGREEMENT, agree
+        np.testing.assert_allclose(np.asarray(cell["dists"]),
+                                   np.asarray(ref["dists"]),
+                                   rtol=KERNEL_DIST_RTOL,
+                                   atol=KERNEL_DIST_ATOL)
+    # shard-and-merge never loses recall vs one device at the same beam
+    ids_single, _ = single_results[(quantized, kernels, tombstones)]
+    rec_single = _recall(ids_single, single_results[("gt", tombstones)])
+    assert cell["recall"] >= rec_single - SHARD_RECALL_SLACK, (
+        cell["recall"], rec_single)

@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # prepended to every subprocess script: the shared AxisType-compat mesh
@@ -227,6 +229,207 @@ def test_sharded_grow_and_single_device_parity():
         print("GROW_PARITY_OK", r_sh, r_solo)
     """)
     assert "GROW_PARITY_OK" in out
+
+
+def test_sharded_reshard_restore():
+    """Elastic resharding: a checkpoint saved at 4 shards restores at 2
+    and 8; live rows survive (packed codes bit-identical through the
+    translation), dead ids translate to -1, recall at equal total budget
+    stays within tolerance, and the fused kernel path leaks no
+    tombstones after the move."""
+    out = run_with_devices("""
+        import tempfile, os, numpy as np, jax
+        from repro.core.distributed import ShardedJasperIndex
+        from repro.core.construction import ConstructionParams
+
+        mesh4 = make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(5)
+        N, D, Q = 2048, 32, 64
+        data = rng.normal(size=(N, D)).astype(np.float32)
+        queries = rng.normal(size=(Q, D)).astype(np.float32)
+        params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                                    max_iters=24, rev_cap=16, prune_chunk=256)
+        idx = ShardedJasperIndex(mesh4, D, capacity_per_shard=1024,
+                                 construction=params,
+                                 quantization="rabitq", bits=4)
+        idx.build(data)
+        dead = np.arange(100, 160)            # shard-0 locals == global ids
+        idx.delete(dead)
+        d = tempfile.mkdtemp(); path = os.path.join(d, "ck")
+        idx.save(path)
+        r_base = idx.recall(queries, 10, beam_width=64, quantized=True)
+        packed4 = np.asarray(idx.core.codes.packed).reshape(4, 1024, -1)
+
+        for shards, mesh in [(2, make_mesh((2, 4), ("data", "model"))),
+                             (8, make_mesh((8,), ("data",)))]:
+            idx2 = ShardedJasperIndex.load(mesh, path, n_shards=shards)
+            assert idx2.n_shards == shards
+            assert idx2.size == N - 60
+            tr = idx2.reshard_translation
+            assert tr is not None and len(tr) == N - 60
+            # dead ids are not in the translation (unreturnable forever)
+            assert (tr.apply(dead) == -1).all()
+            # bijection: no two live ids collide after the move
+            mapped = tr.apply(tr.old_ids)
+            assert (mapped >= 0).all()
+            assert np.unique(mapped).size == mapped.size
+            # packed codes of moved rows are bit-identical (no re-encode)
+            new_packed = np.asarray(idx2.core.codes.packed).reshape(
+                shards, idx2.cap, -1)
+            probe = tr.old_ids[:: max(1, len(tr) // 64)]
+            for og, ng in zip(probe, tr.apply(probe)):
+                s_o, l_o = og // idx.id_stride, og % idx.id_stride
+                s_n, l_n = ng // idx2.id_stride, ng % idx2.id_stride
+                assert (packed4[s_o, l_o] == new_packed[s_n, l_n]).all()
+            # equal total search budget: S' shards x (256/S') beam
+            r = idx2.recall(queries, 10, beam_width=256 // shards,
+                            quantized=True)
+            assert r >= r_base - 0.05, (shards, r, r_base)
+            # fused kernel path: zero tombstone leaks after the reshard
+            ids_k, _ = idx2.search_rabitq(queries, 10,
+                                          beam_width=256 // shards,
+                                          use_kernels=True)
+            ret = np.asarray(ids_k).ravel(); ret = ret[ret >= 0]
+            assert not idx2.tombstoned(ret).any()
+            # restored index keeps serving: insert + delete still work
+            gids = idx2.insert(rng.normal(size=(shards, 8, D))
+                               .astype(np.float32))
+            assert np.unique(gids).size == gids.size
+            idx2.delete(gids.reshape(-1)[:4])
+
+        # n_shards guard: asking for a count the mesh cannot provide raises
+        try:
+            ShardedJasperIndex.load(make_mesh((2, 4), ("data", "model")),
+                                    path, n_shards=3)
+            raise SystemExit("guard did not fire")
+        except ValueError:
+            pass
+        print("RESHARD_OK")
+    """)
+    assert "RESHARD_OK" in out
+
+
+def test_sharded_rebalance_and_service_hook():
+    """Skewed deletes drift shards uneven; rebalance() levels live counts
+    by moving rows (packed codes re-derive bit-identically), returns an
+    identity-default translation for outstanding tickets, and the
+    AnnsService imbalance trigger drives it between ticks."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.core.distributed import ShardedJasperIndex
+        from repro.core.construction import ConstructionParams
+        from repro.serving.anns_service import AnnsService
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(6)
+        N, D, Q = 2048, 32, 64
+        data = rng.normal(size=(N, D)).astype(np.float32)
+        queries = rng.normal(size=(Q, D)).astype(np.float32)
+        params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                                    max_iters=24, rev_cap=16, prune_chunk=256)
+        idx = ShardedJasperIndex(mesh, D, capacity_per_shard=1024,
+                                 construction=params,
+                                 quantization="rabitq", bits=4)
+        idx.build(data)
+        # delete 300 rows on shard 0 only -> heavy skew
+        idx.delete(np.arange(100, 400))
+        assert idx.shard_imbalance > 0.5
+        st = idx.rebalance(tolerance=0.05)
+        counts = idx.shard_live_counts()
+        assert counts.max() - counts.min() <= 1, counts
+        assert st["n_moved"] > 0
+        tr = st["translation"]
+        # moved rows got new ids; unmoved ids translate to themselves
+        moved = tr.old_ids[tr.apply(tr.old_ids) != tr.old_ids]
+        assert moved.size == st["n_moved"]
+        assert int(tr.apply(np.asarray([50]))[0]) == 50
+        # moved rows are findable under their NEW ids and dead under old
+        assert not idx.tombstoned(tr.apply(tr.old_ids)).any()
+        r = idx.recall(queries, 10, beam_width=64, quantized=True)
+        assert r > 0.85, r
+        ids_k, _ = idx.search_rabitq(queries, 10, beam_width=64,
+                                     use_kernels=True)
+        ret = np.asarray(ids_k).ravel(); ret = ret[ret >= 0]
+        assert not idx.tombstoned(ret).any()
+
+        # service hook: imbalance past the threshold rebalances the tick
+        svc = AnnsService(idx, k=10, beam_width=48,
+                          rebalance_threshold=0.3, verify=True)
+        # skew shard 1 this time: delete 250 of its currently-live rows
+        cand = idx.id_stride + np.arange(512)
+        live1 = cand[~idx.tombstoned(cand)]
+        res = svc.step(deletes=live1[:250], queries=queries)
+        assert res.rebalanced is not None and res.rebalanced["n_moved"] > 0
+        assert svc.stats.n_rebalances == 1
+        c = idx.shard_live_counts()
+        assert (c.max() - c.min()) <= 1, c
+        # below threshold: the hook stays quiet
+        res2 = svc.step(queries=queries)
+        assert res2.rebalanced is None
+        print("REBALANCE_OK")
+    """)
+    assert "REBALANCE_OK" in out
+
+
+def test_sharded_mips_matches_single_device():
+    """Sharded MIPS (global max-norm fold before per-shard augmentation):
+    brute force argmax-IP parity with exact inner products AND with the
+    single-device MIPS driver, surviving a streaming norm raise."""
+    out = run_with_devices("""
+        import numpy as np, jax
+        from repro.core.distributed import ShardedJasperIndex
+        from repro.core.index import JasperIndex
+        from repro.core.construction import ConstructionParams
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(7)
+        D = 24
+        params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                                    max_iters=24, rev_cap=16, prune_chunk=256)
+        sh = ShardedJasperIndex(mesh, D, capacity_per_shard=512,
+                                construction=params, metric="mips")
+        d1 = rng.normal(size=(1024, D)).astype(np.float32)
+        sh.build(d1)
+        # second batch RAISES the global max-norm: every shard must
+        # re-augment its written rows or the reduction silently corrupts
+        d2 = (6.0 * rng.normal(size=(4, 128, D))).astype(np.float32)
+        sh.insert(d2)
+        q = rng.normal(size=(40, D)).astype(np.float32)
+
+        allrows = np.concatenate([d1.reshape(4, 256, D), d2],
+                                 axis=1).reshape(-1, D)
+        per = 256 + 128
+        ip = q @ allrows.T
+        gt_pos = ip.argmax(1)
+        gt_gid = (gt_pos // per) * sh.id_stride + gt_pos % per
+        got, _ = sh.brute_force(q, 1)
+        assert (np.asarray(got)[:, 0] == gt_gid).all()     # exact reduction
+
+        # parity with the single-device MIPS driver at matched budget
+        solo = JasperIndex(D, capacity=1536, metric="mips",
+                           construction=params)
+        solo.build(d1)
+        solo.insert(d2.reshape(-1, D))
+        gt10_sh, _ = sh.brute_force(q, 10)
+        ids_sh, _ = sh.search(q, 10, beam_width=48)
+        ids_solo, _ = solo.search(q, 10, beam_width=192)
+        gt10_solo, _ = solo.brute_force(q, 10)
+        def rec(ids, gt):
+            ids, gt = np.asarray(ids), np.asarray(gt)
+            return np.mean([len(set(ids[i]) & set(gt[i])) / 10
+                            for i in range(ids.shape[0])])
+        r_sh, r_solo = rec(ids_sh, gt10_sh), rec(ids_solo, gt10_solo)
+        assert r_sh >= r_solo - 0.1, (r_sh, r_solo)
+        # quantization rejects nothing: rabitq + mips compose
+        shq = ShardedJasperIndex(mesh, D, capacity_per_shard=512,
+                                 construction=params, metric="mips",
+                                 quantization="rabitq", bits=4)
+        shq.build(d1)
+        ids_q, _ = shq.search_rabitq(q, 10, beam_width=48)
+        assert np.asarray(ids_q).shape == (40, 10)
+        print("MIPS_OK", r_sh, r_solo)
+    """)
+    assert "MIPS_OK" in out
 
 
 def test_sharded_train_step_runs_and_matches_single_device():

@@ -1,12 +1,12 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Property-based tests on system invariants (hypothesis when installed,
+seeded deterministic fallback otherwise — see tests/prop_shim.py)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
+import pytest  # noqa: F401  (kept: fixtures / skips in individual tests)
 
-pytest.importorskip("hypothesis")  # optional dep: skip, don't error
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from prop_shim import given, settings, st
 
 from repro.core.distances import (
     mips_augment_data,
@@ -247,6 +247,196 @@ def test_grow_state_preserves_prefix(cap, extra, seed):
             == np.asarray(state.free_ids)).all()
     assert (np.asarray(grown.free_ids)[cap:] == -1).all()
     assert int(grown.n_free) == int(state.n_free)
+
+
+# -------------------------------------------------------------- resharding
+_RESHARD_CAP = 32          # fixed shapes: examples share jit executables
+_RESHARD_D = 8
+_RESHARD_PARAMS = None     # lazy ConstructionParams (small degree)
+
+
+def _reshard_params():
+    global _RESHARD_PARAMS
+    if _RESHARD_PARAMS is None:
+        from repro.core.construction import ConstructionParams
+        _RESHARD_PARAMS = ConstructionParams(
+            degree_bound=4, alpha=1.2, beam_width=8, max_iters=8,
+            rev_cap=4, prune_chunk=64)
+    return _RESHARD_PARAMS
+
+
+def _synthetic_cores(rng, n_shards: int, quantized: bool):
+    """Cores exercising all three slot states (LIVE / DELETED / FREE)
+    without a graph build: random rows + random adjacency, then a
+    delete -> consolidate -> delete again cycle."""
+    from dataclasses import replace
+
+    from repro.core.index_core import (
+        attach_quantizer, core_consolidate, core_delete, core_write_rows,
+        init_core)
+    from repro.core.rabitq import rabitq_train
+
+    params = _reshard_params()
+    rq = None
+    if quantized:
+        train = jnp.asarray(rng.normal(size=(16, _RESHARD_D)), jnp.float32)
+        rq = rabitq_train(jax.random.PRNGKey(0), train, bits=4)
+    cores = []
+    for _ in range(n_shards):
+        n = int(rng.integers(4, _RESHARD_CAP + 1))
+        core = init_core(_RESHARD_CAP, _RESHARD_D, params.degree_bound)
+        if rq is not None:
+            core = attach_quantizer(core, rq)
+        rows = jnp.asarray(rng.normal(size=(n, _RESHARD_D)), jnp.float32)
+        core = core_write_rows(core, jnp.arange(n, dtype=jnp.int32), rows)
+        adj = rng.integers(-1, n, (_RESHARD_CAP, params.degree_bound))
+        adj[n:] = -1
+        core = replace(core, adjacency=jnp.asarray(adj, jnp.int32),
+                       n_valid=jnp.int32(n),
+                       medoid=jnp.int32(rng.integers(n)))
+        # delete a batch, consolidate (-> FREE slots), delete again
+        # (-> DELETED-not-freed) so the compaction sees every state
+        for consolidate in (True, False):
+            k = min(8, int(rng.integers(0, max(1, n // 3))))
+            if k:
+                ids = np.full((8,), -1, np.int32)
+                ids[:k] = rng.choice(n, k, replace=False)
+                core, _ = core_delete(core, jnp.asarray(ids))
+                if consolidate:
+                    core, _ = core_consolidate(core, params=params)
+        cores.append(core)
+    return cores
+
+
+def _live_payload(cores, id_stride):
+    """{global_id: payload bytes} of every live row."""
+    from repro.core.index_core import core_live_mask
+
+    out = {}
+    for s, c in enumerate(cores):
+        for loc in np.where(core_live_mask(c))[0]:
+            row = (np.asarray(c.vectors[loc]).tobytes(),
+                   None if c.codes is None else
+                   (np.asarray(c.codes.packed[loc]).tobytes(),
+                    float(c.codes.data_add[loc]),
+                    float(c.codes.data_rescale[loc])))
+            out[s * id_stride + int(loc)] = row
+    return out
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s1=st.integers(1, 4),
+    s2=st.integers(1, 4),
+    s3=st.integers(1, 4),
+    quantized=st.sampled_from([False, True]),
+)
+def test_reshard_roundtrip_preserves_live_rows(seed, s1, s2, s3, quantized):
+    """save at S -> restore at S' -> S'' -> S preserves live rows
+    bit-identically (vectors + packed codes + per-row code scalars), the
+    composed id translation is a bijection on live ids, dead ids map to
+    -1, and every resharded core is compact (no tombstones, empty free
+    pool)."""
+    from repro.core.index_core import core_size
+    from repro.core.mutations import unpack_bitmap
+    from repro.core.resharding import reshard_cores
+
+    rng = np.random.default_rng(seed)
+    cores = _synthetic_cores(rng, s1, quantized)
+    stride0 = 4 * _RESHARD_CAP
+    before = _live_payload(cores, stride0)
+
+    r1 = reshard_cores(cores, old_id_stride=stride0, n_shards=s2,
+                       relink="none")
+    r2 = reshard_cores(r1.cores, old_id_stride=r1.id_stride, n_shards=s3,
+                       relink="none")
+    r3 = reshard_cores(r2.cores, old_id_stride=r2.id_stride, n_shards=s1,
+                       relink="none")
+    t = r1.translation.then(r2.translation).then(r3.translation)
+
+    live_ids = np.asarray(sorted(before))
+    # bijection on live ids (old side complete, new side collision-free)
+    assert set(t.old_ids.tolist()) == set(live_ids.tolist())
+    mapped = t.apply(live_ids)
+    assert (mapped >= 0).all()
+    assert np.unique(mapped).size == mapped.size
+    # dead / out-of-table ids -> -1
+    dead_probe = np.asarray([stride0 * s1 + 1, -1, stride0 - 1])
+    assert (t.apply(dead_probe) == -1).all()
+
+    after = _live_payload(r3.cores, r3.id_stride)
+    assert len(after) == len(before)
+    for gid, new_gid in zip(live_ids, mapped):
+        assert before[int(gid)] == after[int(new_gid)], gid
+
+    for res in (r1, r2, r3):
+        sizes = [core_size(c) for c in res.cores]
+        assert max(sizes) - min(sizes) <= 1          # capacity-balanced
+        for c in res.cores:
+            cap = c.capacity
+            assert not np.asarray(unpack_bitmap(c.mut.tombstone_bits,
+                                                cap)).any()
+            assert int(c.mut.n_free) == 0 and int(c.mut.n_deleted) == 0
+            assert int(c.n_valid) == core_size(c)    # compact prefix
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s_old=st.integers(1, 3),
+    s_new=st.integers(1, 5),
+)
+def test_reshard_adjacency_remap_is_edge_subset(seed, s_old, s_new):
+    """relink='none' never invents edges: every edge of a resharded core
+    maps back (through the inverse translation) to an edge the same row
+    had before, and no edge points at a dead or foreign-shard row."""
+    from repro.core.resharding import reshard_cores
+
+    rng = np.random.default_rng(seed)
+    cores = _synthetic_cores(rng, s_old, quantized=False)
+    stride0 = 4 * _RESHARD_CAP
+    res = reshard_cores(cores, old_id_stride=stride0, n_shards=s_new,
+                        relink="none")
+    inv = res.translation.inverse()
+    old_edges = {}
+    for s, c in enumerate(cores):
+        adj = np.asarray(c.adjacency)
+        for gid in res.translation.old_ids:
+            if gid // stride0 == s:
+                row = adj[gid % stride0]
+                old_edges[int(gid)] = {s * stride0 + int(e)
+                                       for e in row[row >= 0]}
+    for g, c in enumerate(res.cores):
+        adj = np.asarray(c.adjacency)
+        n = int(c.n_valid)
+        for loc in range(n):
+            new_gid = g * res.id_stride + loc
+            old_gid = int(inv.apply(np.asarray([new_gid]))[0])
+            for e in adj[loc][adj[loc] >= 0]:
+                assert 0 <= e < n                    # in-shard, live
+                e_old = int(inv.apply(
+                    np.asarray([g * res.id_stride + int(e)]))[0])
+                assert e_old in old_edges[old_gid], (old_gid, e_old)
+
+
+def test_reshard_empty_and_identity_translation():
+    """Degenerate cases: an all-dead input reshardes to empty cores; the
+    empty translation drops (or passes through) everything by default."""
+    from repro.core.index_core import core_delete, core_size, init_core
+    from repro.core.resharding import IdTranslation, reshard_cores
+
+    core = init_core(16, _RESHARD_D, 4)
+    import jax.numpy as jnp2
+    from dataclasses import replace as _rep
+    core = _rep(core, n_valid=jnp2.int32(4))
+    core, _ = core_delete(core, jnp2.asarray([0, 1, 2, 3], jnp2.int32))
+    res = reshard_cores([core], old_id_stride=64, n_shards=2, relink="none")
+    assert [core_size(c) for c in res.cores] == [0, 0]
+    assert len(res.translation) == 0
+    assert (res.translation.apply(np.arange(4)) == -1).all()
+    ident = IdTranslation.build([], [], default="identity")
+    assert (ident.apply(np.arange(4)) == np.arange(4)).all()
 
 
 # --------------------------------------------------------------------- mips

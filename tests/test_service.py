@@ -1,0 +1,115 @@
+"""AnnsService failure paths: the generation-stamp contract under
+consolidation/rebalance, auto-grow at capacity mid-churn, and invalid
+deletes. Each scenario asserts the serving contract: every ticket is
+stamped with the generation it was served at, generations only move
+forward under successful mutations, and no ticket ever contains a
+tombstoned id."""
+
+import numpy as np
+import pytest
+
+from repro.core.construction import ConstructionParams
+from repro.core.index import JasperIndex
+from repro.serving.anns_service import AnnsService
+
+SMALL = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                           max_iters=24, rev_cap=16, prune_chunk=256)
+
+
+@pytest.fixture()
+def svc():
+    rng = np.random.default_rng(77)
+    idx = JasperIndex(24, capacity=640, construction=SMALL,
+                      quantization="rabitq", bits=4)
+    idx.build(rng.normal(size=(500, 24)).astype(np.float32))
+    return AnnsService(idx, k=10, beam_width=32,
+                       consolidate_threshold=0.2, verify=True), rng
+
+
+def test_stale_generation_after_consolidate(svc):
+    """A ticket served BEFORE a consolidate carries an older generation
+    than one served after — and the old ticket's ids, re-validated at the
+    new generation, correctly surface as since-deleted. The stamp is what
+    lets a client reason about exactly this: results are a snapshot of
+    their generation, not of 'now'."""
+    service, rng = svc
+    q = rng.normal(size=(16, 24)).astype(np.float32)
+    t0 = service.search(q)
+    dead = np.asarray(t0.ids[0][t0.ids[0] >= 0][:5])
+    service.delete(dead)
+    forced = service.maybe_consolidate(force=True)
+    assert forced is not None and forced["n_freed"] == dead.size
+    t1 = service.search(q)
+    # strictly newer stamp: delete + consolidate both bumped generations
+    assert t1.generation > t0.generation
+    assert t1.generation == service.index.generation
+    # the stale ticket now names dead ids; the fresh one must not
+    assert service.index.tombstoned(dead).all()
+    assert not np.isin(t1.ids[t1.ids >= 0], dead).any()
+    # a ticket is immutable evidence of its snapshot: t0 predates the
+    # delete, so at ITS generation those ids were legitimately live
+    assert t0.generation == service.stats.as_dict()["last_generation"] - (
+        service.index.generation - t0.generation)
+
+
+def test_insert_at_capacity_triggers_auto_grow(svc):
+    """Insert past capacity mid-churn: the index auto-grows (copy
+    extension), the service counts it, the generation keeps moving
+    forward, and searches stay clean through the grow."""
+    service, rng = svc
+    idx = service.index
+    q = rng.normal(size=(8, 24)).astype(np.float32)
+    cap0 = idx.capacity
+    gen_before = idx.generation
+    res = service.step(
+        deletes=np.arange(10),
+        inserts=rng.normal(size=(cap0 - 500 + 60, 24)).astype(np.float32),
+        queries=q)
+    assert idx.capacity == 2 * cap0              # doubled, not rebuilt
+    assert service.stats.n_grows == 1
+    assert res.inserted_ids.size == cap0 - 500 + 60
+    # deleted slots were reclaimed-or-tombstoned, never returned
+    assert not np.isin(res.search.ids, np.arange(10)).any() or not (
+        idx.tombstoned(res.search.ids[res.search.ids >= 0]).any())
+    assert res.search.generation > gen_before
+    assert res.search.generation == idx.generation
+    # churn continues fine at the new capacity
+    t2 = service.search(q)
+    assert t2.generation >= res.search.generation
+    assert not idx.tombstoned(t2.ids[t2.ids >= 0]).any()
+
+
+def test_delete_already_tombstoned_id_raises_and_preserves_generation(svc):
+    """Deleting a tombstoned id is a client error: the driver raises, the
+    failed op bumps NOTHING (generation unchanged — a failed mutation
+    must not reorder anyone's tickets), and the service keeps serving."""
+    service, rng = svc
+    q = rng.normal(size=(8, 24)).astype(np.float32)
+    service.delete([3, 5])
+    gen = service.index.generation
+    stats_before = service.stats.as_dict()
+    with pytest.raises(ValueError, match="already deleted"):
+        service.delete([5])
+    with pytest.raises(ValueError, match="out of range"):
+        service.delete([10_000])
+    assert service.index.generation == gen       # failed ops stamp nothing
+    after = service.stats.as_dict()
+    assert after["n_delete_rows"] == stats_before["n_delete_rows"]
+    t = service.search(q)
+    assert t.generation == gen                   # still the same snapshot
+    assert not np.isin(t.ids, [3, 5]).any()
+
+
+def test_search_older_generation_than_rebalance_contract(svc):
+    """Single-device backend: the rebalance hook is a structured no-op
+    (no `rebalance` on JasperIndex), so a rebalance-threshold service
+    must neither crash nor stamp phantom generations."""
+    service, rng = svc
+    service.rebalance_threshold = 0.5
+    q = rng.normal(size=(8, 24)).astype(np.float32)
+    gen = service.index.generation
+    assert service.maybe_rebalance(force=True) is None
+    res = service.step(queries=q)
+    assert res.rebalanced is None
+    assert service.stats.n_rebalances == 0
+    assert res.search.generation == gen          # nothing mutated
