@@ -77,9 +77,12 @@ def run(csv, n: int | None = None,
         rec_q = idx.recall(queries, K, beam_width=BEAM, quantized=True)
 
         # merge-collective bytes from the compiled sharded search step
+        from repro.core.search_spec import SearchSpec
         fn = sharded_search_fn(
-            mesh, idx.spec, idx.core, id_stride=idx.id_stride, k=K,
-            beam_width=BEAM, max_iters=2 * BEAM + 12, quantized=True,
+            mesh, idx.spec, idx.core, id_stride=idx.id_stride,
+            spec=SearchSpec(k=K, beam_width=BEAM,
+                            max_iters=2 * BEAM + 12,
+                            quantized=True).resolve(),
             filter_tombstones=False)
         q_dev = jax.numpy.asarray(queries)
         ana = analyze_hlo(fn.lower(idx.core, q_dev).compile().as_text())

@@ -1,13 +1,15 @@
-"""Quickstart: build a Jasper index, search it, measure recall, save/load.
+"""Quickstart: build a Jasper index, search it through the declarative
+SearchSpec / Searcher surface, measure recall, save/load.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import time
 
+import jax
 import numpy as np
 
-from repro.core import JasperIndex
+from repro.core import JasperIndex, SearchSpec
 from repro.core.construction import ConstructionParams
 from repro.core.vamana import graph_degree_stats
 
@@ -31,12 +33,29 @@ def main() -> None:
     print(f"graph: mean degree {stats['mean_degree']:.1f}, "
           f"max {stats['max_degree']:.0f}")
 
+    # the query surface is declarative: one frozen SearchSpec per
+    # configuration, resolved + compiled once into a Searcher session
     for beam in (16, 32, 64):
         t0 = time.time()
-        r = idx.recall(queries, k=10, beam_width=beam)
-        rq = idx.recall(queries, k=10, beam_width=beam, quantized=True)
+        r = idx.recall(queries, spec=SearchSpec(k=10, beam_width=beam))
+        rq = idx.recall(queries, spec=SearchSpec(k=10, beam_width=beam,
+                                                 quantized=True))
         print(f"beam {beam:3d}: recall@10 exact {r:.3f} | rabitq {rq:.3f} "
               f"({time.time() - t0:.1f}s)")
+
+    # a reused session never re-compiles: same spec + same query shape
+    # serve straight from the plan cache (n_hops rides on every result)
+    spec = SearchSpec(k=10, beam_width=32, quantized=True)
+    session = idx.searcher(spec)
+    jax.block_until_ready(session.search(queries).ids)     # compile + warm
+    t0 = time.time()
+    res = session.search(queries)
+    jax.block_until_ready(res.ids)                         # async dispatch
+    print(f"session search: {queries.shape[0] / (time.time() - t0):.0f} q/s, "
+          f"mean hops {float(np.mean(np.asarray(res.n_hops))):.1f}, "
+          f"cache {session.cache_stats}")
+    # specs serialize — ship the served configuration with the checkpoint
+    assert SearchSpec.from_json(spec.to_json()) == spec
 
     print("memory:", idx.memory_stats())
 
@@ -48,9 +67,9 @@ def main() -> None:
 
     idx.save("/tmp/jasper_quickstart.npz")
     idx2 = JasperIndex.load("/tmp/jasper_quickstart.npz")
-    ids_a, _ = idx.search(queries[:8], k=5)
-    ids_b, _ = idx2.search(queries[:8], k=5)
-    assert (np.asarray(ids_a) == np.asarray(ids_b)).all()
+    res_a = idx.searcher(k=5).search(queries[:8])
+    res_b = idx2.searcher(k=5).search(queries[:8])
+    assert (np.asarray(res_a.ids) == np.asarray(res_b.ids)).all()
     print("save/load roundtrip OK")
 
 

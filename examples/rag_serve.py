@@ -35,11 +35,17 @@ def main() -> None:
     print(f"indexed {rag.index.size} docs "
           f"(compression: {rag.index.memory_stats().get('compression_ratio'):.1f}x)")
 
-    # retrieval
+    # retrieval — spec-driven under the hood: RagPipeline.retrieve opens a
+    # Searcher session on the index, so repeated retrievals at the same
+    # (k, beam_width) reuse one compiled plan from the shared cache
     q_toks, _ = fake_corpus(rng, 4, cfg.vocab_size)
     hits = rag.retrieve(q_toks, k=3)
     for i, h in enumerate(hits):
         print(f"query {i}: retrieved {h}")
+    hits = rag.retrieve(q_toks, k=3)          # served from the plan cache
+    stats = rag.index.plans.stats
+    print(f"plan cache after repeat retrieval: hits={stats.hits} "
+          f"retraces={stats.traces}")
 
     # streaming ingestion — no rebuild
     toks2, docs2 = fake_corpus(rng, 256, cfg.vocab_size)

@@ -23,8 +23,12 @@ import time
 
 import numpy as np
 
-from repro.core import JasperIndex
+from repro.core import JasperIndex, SearchSpec
 from repro.core.construction import ConstructionParams
+
+# ONE declarative serve configuration for the whole churn scenario — the
+# service resolves it once into a compiled Searcher session
+SERVE_SPEC = SearchSpec(k=10, beam_width=48, quantized=True)
 
 PARAMS = ConstructionParams(degree_bound=32, beam_width=32,
                             max_iters=48, rev_cap=32)
@@ -96,7 +100,7 @@ def run_churn(n0: int, rounds: int, batch: int, dims: int,
     data0 = rng.normal(size=(n0, dims)).astype(np.float32)
     idx.build(data0)
     queries = rng.normal(size=(100, dims)).astype(np.float32)
-    svc = AnnsService(idx, k=10, beam_width=48,
+    svc = AnnsService(idx, spec=SERVE_SPEC,
                       consolidate_threshold=0.15, verify=True)
 
     if sharded:
@@ -130,19 +134,31 @@ def run_churn(n0: int, rounds: int, batch: int, dims: int,
                                 < hw_before[ins // idx.id_stride]))
         else:
             reused = int((res.inserted_ids < hw_before).sum())
-        r = idx.recall(queries, k=10, beam_width=48)
+        r = idx.recall(queries, spec=SERVE_SPEC)
         cons = (f"freed={res.consolidated['n_freed']}"
                 if res.consolidated else "-")
         print(f"{t:4d} {idx.size:6d} {res.n_deleted:5d} "
               f"{res.inserted_ids.size:5d} {reused:6d} {cons:>12s} "
               f"{res.search.generation:4d} {r:9.3f}")
 
+    # spec-API lane check: the service's Searcher session must serve a
+    # repeated (same-spec, same-shape) search straight from the plan
+    # cache — zero retraces, one more hit
+    ses = svc.searcher()
+    ses.search(queries)
+    mid = ses.cache_stats.snapshot()
+    ses.search(queries)
+    after = ses.cache_stats
+    assert after.traces == mid.traces, \
+        f"session reuse retraced: {mid} -> {after}"
+    assert after.hits > mid.hits
     s = svc.stats.as_dict()
     print(f"\n{s['n_delete_rows']} deletes + {s['n_insert_rows']} inserts "
           f"+ {s['n_consolidations']} consolidations served across "
-          f"{s['last_generation']} generations; recall held with zero "
-          f"tombstoned ids returned — the index absorbed the churn "
-          f"without a rebuild.")
+          f"{s['last_generation']} generations; mean hops/query "
+          f"{s['mean_hops']:.1f}; recall held with zero tombstoned ids "
+          f"returned — the index absorbed the churn without a rebuild. "
+          f"Plan cache: {after.as_dict()} (reused session, zero retraces).")
 
 
 def run_reshard(n0: int, dims: int, quick: bool) -> None:
@@ -195,7 +211,7 @@ def run_reshard(n0: int, dims: int, quick: bool) -> None:
           f"{len(tr)} ids translated")
     assert r2 >= r4 - 0.05, (r2, r4)
 
-    svc = AnnsService(idx2, k=10, beam_width=48, consolidate_threshold=0.15,
+    svc = AnnsService(idx2, spec=SERVE_SPEC, consolidate_threshold=0.15,
                       rebalance_threshold=0.25, verify=True)
     live = tr.apply(tr.old_ids).tolist()
     for t in range(3):

@@ -19,17 +19,21 @@ case "$mode" in
     ;;
   smoke)
     # fast subset: the search/quantization hot path, kernel oracles, the
-    # single-shard half of the conformance matrix, and the serving
-    # failure paths — `slow` / `multidevice` markers keep subprocess
-    # fan-outs out of this lane (they run in full tier-1)
+    # single-shard half of the conformance matrix, the declarative
+    # SearchSpec/Searcher surface (shim parity + plan-cache behavior),
+    # and the serving failure paths — `slow` / `multidevice` markers keep
+    # subprocess fan-outs out of this lane (they run in full tier-1)
     python -m pytest -q -m "not slow and not multidevice" \
       tests/test_core_anns.py tests/test_kernels.py \
-      tests/test_conformance.py tests/test_service.py "$@"
-    # mutation-engine churn scenario end-to-end on synthetic data
-    # (insert/delete/consolidate interleaved through the serving loop)
+      tests/test_conformance.py tests/test_search_spec.py \
+      tests/test_service.py "$@"
+    # spec-API churn lane: mutation-engine scenario end-to-end through the
+    # spec-driven serving loop, asserting Searcher-session reuse (zero
+    # plan-cache retraces across ticks)
     python examples/streaming_updates.py --churn --quick
-    # multi-device lane: the SAME churn loop over ShardedJasperIndex
-    # (8 fake host devices; IndexCore shard_map-wrapped per row shard)
+    # multi-device lane: the SAME spec-driven churn loop + session-reuse
+    # assertion over ShardedJasperIndex (8 fake host devices; IndexCore
+    # shard_map-wrapped per row shard)
     XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
       python examples/streaming_updates.py --churn --quick --sharded
     # reshard lane: checkpoint at 4 shards -> restore at 2 -> churn ->

@@ -58,9 +58,21 @@ from repro.core.index_core import (
     core_search,
     init_core,
 )
+from repro.core.search_spec import (
+    CacheStats,
+    PlanCache,
+    ResolvedSearchSpec,
+    Searcher,
+    SearchResult,
+    SearchSpec,
+    SearchSurface,
+    measure_recall,
+)
 from repro.core.index import JasperIndex
 
 __all__ = [
+    "SearchSpec", "ResolvedSearchSpec", "SearchResult", "Searcher",
+    "PlanCache", "CacheStats", "SearchSurface", "measure_recall",
     "l2_squared", "inner_product", "pairwise_l2_squared",
     "pairwise_inner_product", "pairwise_distance",
     "mips_augment_data", "mips_augment_query",

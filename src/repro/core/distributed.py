@@ -64,6 +64,7 @@ from repro.core.index_core import (
 from repro.core.mutations import MutationState
 from repro.core.rabitq import RaBitQCodes, RaBitQParams, rabitq_train
 from repro.core.resharding import pow2_rung
+from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
 
 Array = jax.Array
 
@@ -179,39 +180,48 @@ def merge_topk(gids: Array, dists: Array, row_axes, k: int
 # shard_map-wrapped core ops
 # ---------------------------------------------------------------------------
 
-def sharded_search_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore, *,
-                      id_stride: int, k: int, beam_width: int,
-                      max_iters: int, expand: int = 1,
-                      quantized: bool = False, rerank: bool = True,
-                      use_kernels: bool = False, merge: str = "topk",
-                      traverse_deleted: bool = True,
-                      filter_tombstones: bool = True):
+def sharded_search_fn(mesh: Mesh, shard_spec: ShardSpec,
+                      template: IndexCore, *, id_stride: int, spec,
+                      filter_tombstones: bool = True, trace_counter=None):
     """Build the jit'd sharded search step: shard-local `core_search`
     (IDENTICAL to the single-device hot path — fused Pallas scorer over
     packed codes, per-shard tombstone bitmap, shard-local exact rerank)
     followed by the all_gather merge. fn(core_stacked, queries) ->
-    (GLOBAL ids (Q, k), dists (Q, k)), sharded over the query axis."""
-    row_axes = spec.row_axes
+    (GLOBAL ids (Q, k), dists (Q, k), n_hops (Q,)), sharded over the
+    query axis.
+
+    spec: a `ResolvedSearchSpec` — the ONE static search configuration
+    object, shared verbatim with the single-device plan builder (defaults
+    and validation live in `SearchSpec.resolve`, never here).
+    n_hops is the max over shards: the slowest shard's walk is the hop
+    cost the query actually paid.
+    trace_counter: optional zero-arg hook bumped at trace time (the plan
+    cache's retrace counter).
+    """
+    row_axes = shard_spec.row_axes
 
     def local_search(core_stacked, queries):
+        if trace_counter is not None:
+            trace_counter()
         core = _local_core(core_stacked)
-        ids, dists, _ = core_search(
-            core, queries, k=k, beam_width=beam_width, max_iters=max_iters,
-            expand=expand, quantized=quantized, rerank=rerank,
-            use_kernels=use_kernels, merge=merge,
-            traverse_deleted=traverse_deleted,
-            filter_tombstones=filter_tombstones)
+        ids, dists, n_hops = core_search(
+            core, queries, spec=spec, filter_tombstones=filter_tombstones)
         row0 = _shard_index(row_axes, dict(mesh.shape)) * id_stride
         gids = jnp.where(ids >= 0, ids + row0, -1)
-        return merge_topk(gids, dists, row_axes, k)
+        gids, dists = merge_topk(gids, dists, row_axes, spec.k)
+        for ax in row_axes:
+            n_hops = jax.lax.pmax(n_hops, ax)
+        return gids, dists, n_hops
 
-    q_spec = P(spec.query_axis, None)
+    q_spec = P(shard_spec.query_axis, None)
+    h_spec = P(shard_spec.query_axis)
     fn = shard_map(
         local_search, mesh=mesh,
-        in_specs=(core_partition_specs(template, spec), q_spec),
-        out_specs=(q_spec, q_spec), check_vma=False)
-    return jax.jit(fn, in_shardings=(core_shardings(mesh, template, spec),
-                                     NamedSharding(mesh, q_spec)))
+        in_specs=(core_partition_specs(template, shard_spec), q_spec),
+        out_specs=(q_spec, q_spec, h_spec), check_vma=False)
+    return jax.jit(fn,
+                   in_shardings=(core_shardings(mesh, template, shard_spec),
+                                 NamedSharding(mesh, q_spec)))
 
 
 def sharded_insert_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore, *,
@@ -268,7 +278,7 @@ def sharded_delete_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore):
 # Host driver — same role as JasperIndex, one core per shard
 # ---------------------------------------------------------------------------
 
-class ShardedJasperIndex:
+class ShardedJasperIndex(SearchSurface):
     """Row-sharded Jasper index: the IndexCore driver on a device mesh."""
 
     def __init__(self, mesh: Mesh, dims: int, capacity_per_shard: int, *,
@@ -321,7 +331,10 @@ class ShardedJasperIndex:
             self.n_shards *= mesh.shape[ax]
 
         self.core = self._device_put(self._empty_stacked_core())
-        self._fn_cache: dict = {}
+        # compiled-executable cache (search plans + insert/boot/delete
+        # steps) with hit/miss/trace counters — the same PlanCache the
+        # single-device driver owns; Searcher sessions share it
+        self.plans = PlanCache()
         # old->new IdTranslation of the last shard-count-changing load
         # (None after a same-count restore or a fresh construction)
         self.reshard_translation = None
@@ -532,7 +545,7 @@ class ShardedJasperIndex:
             params = rabitq_train(jax.random.PRNGKey(self.seed), rows,
                                   bits=self.bits)
             self.core = self._device_put(attach_quantizer(self.core, params))
-            self._fn_cache.clear()      # core structure changed
+            self.plans.clear()          # core structure changed
 
     def build(self, data) -> "ShardedJasperIndex":
         """Bulk build. data: (N, D) with N divisible by n_shards — rows are
@@ -752,7 +765,7 @@ class ShardedJasperIndex:
                         generation=c.mut.generation + 1),
             codes=codes))
         self.cap = new_cap
-        self._fn_cache.clear()          # row0 offsets / shapes changed
+        self.plans.clear()              # row0 offsets / shapes changed
         return self
 
     def rebalance(self, *, tolerance: float = 0.05) -> dict:
@@ -827,25 +840,36 @@ class ShardedJasperIndex:
                                                default="identity")}
 
     # ------------------------------------------------------------------ search
+    # searcher()/recall() come from SearchSurface — the one shared copy
+    def _search_plan(self, rspec, q_shape, filt: bool):
+        """Plan-cache lookup/build: `queries -> (GLOBAL ids, dists,
+        n_hops)` — the shard_map'd search step + all_gather merge."""
+        key = ("search", self.cap, rspec, tuple(q_shape), filt)
+
+        def build():
+            return sharded_search_fn(
+                self.mesh, self.spec, self._template(),
+                id_stride=self.id_stride, spec=rspec,
+                filter_tombstones=filt,
+                trace_counter=self.plans.count_trace)
+
+        fn = self.plans.get(key, build)
+        return lambda queries: fn(self.core, queries)
+
     def search(self, queries, k: int = 10, *, beam_width: int | None = None,
                max_iters: int | None = None, expand: int = 1,
                quantized: bool = False, rerank: bool = True,
                use_kernels: bool = False, merge: str = "topk",
                traverse_deleted: bool = True) -> tuple[Array, Array]:
-        """Global top-k over all shards. queries: (Q, D), Q divisible by
-        the query-axis size (or any Q when queries are replicated).
-        Returns (GLOBAL ids (Q, k), dists (Q, k)). Exact-distance by
-        default (JasperIndex.search symmetry); quantized=True or
-        `search_rabitq` routes through the packed-code estimator."""
-        queries = self._prep_query(queries)
-        bw = beam_width or max(k, 32)
-        mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
-        fn = self._fn("search", q_shape=queries.shape, k=k, bw=bw, mi=mi,
-                      expand=expand, quantized=quantized, rerank=rerank,
-                      use_kernels=use_kernels, merge=merge,
-                      traverse=traverse_deleted,
-                      filt=self._filter_tombstones)
-        return fn(self.core, queries)
+        """Global top-k over all shards — legacy kwargs shim over
+        `searcher(SearchSpec(...))`. queries: (Q, D), Q divisible by the
+        query-axis size (or any Q when queries are replicated). Returns
+        (GLOBAL ids (Q, k), dists (Q, k))."""
+        res = self.searcher(SearchSpec(
+            k=k, beam_width=beam_width, max_iters=max_iters, expand=expand,
+            quantized=quantized, rerank=rerank, use_kernels=use_kernels,
+            merge=merge, traverse_deleted=traverse_deleted)).search(queries)
+        return res.ids, res.dists
 
     def search_rabitq(self, queries, k: int = 10, **kw) -> tuple[Array, Array]:
         """Quantized search (serving-layer symmetry with JasperIndex)."""
@@ -871,41 +895,25 @@ class ShardedJasperIndex:
         gids = (pos // self.cap) * self.id_stride + pos % self.cap
         return gids.astype(jnp.int32), -neg
 
-    def recall(self, queries, k: int = 10, *, beam_width: int | None = None,
-               quantized: bool = False) -> float:
-        """Recall@k vs brute force (paper's Recall k@k), global ids."""
-        gt, _ = self.brute_force(queries, k)
-        ids, _ = self.search(queries, k, beam_width=beam_width,
-                             quantized=quantized)
-        hits = (ids[:, :, None] == gt[:, None, :]) & (ids >= 0)[:, :, None]
-        return float(jnp.mean(jnp.sum(jnp.any(hits, axis=2), axis=1) / k))
-
-    # ----------------------------------------------------------- fn cache
+    # ----------------------------------------------------------- plan cache
     def _fn(self, kind: str, **key):
+        """Mutation-step plans (insert/boot/delete) in the shared
+        PlanCache; search plans go through `_search_plan`."""
         ck = (kind, self.cap, tuple(sorted(key.items())))
-        if ck not in self._fn_cache:
+
+        def build():
             t = self._template()
-            if kind == "search":
-                self._fn_cache[ck] = sharded_search_fn(
-                    self.mesh, self.spec, t, id_stride=self.id_stride,
-                    k=key["k"], beam_width=key["bw"], max_iters=key["mi"],
-                    expand=key["expand"], quantized=key["quantized"],
-                    rerank=key["rerank"], use_kernels=key["use_kernels"],
-                    merge=key["merge"], traverse_deleted=key["traverse"],
-                    filter_tombstones=key["filt"])
-            elif kind == "insert":
-                self._fn_cache[ck] = sharded_insert_fn(
-                    self.mesh, self.spec, t, params=self.params)
-            elif kind == "boot":
-                self._fn_cache[ck] = sharded_bootstrap_fn(
-                    self.mesh, self.spec, t, n0=key["n0"],
-                    params=self.params)
-            elif kind == "delete":
-                self._fn_cache[ck] = sharded_delete_fn(
-                    self.mesh, self.spec, t)
-            else:
-                raise ValueError(kind)
-        return self._fn_cache[ck]
+            if kind == "insert":
+                return sharded_insert_fn(self.mesh, self.spec, t,
+                                         params=self.params)
+            if kind == "boot":
+                return sharded_bootstrap_fn(self.mesh, self.spec, t,
+                                            n0=key["n0"], params=self.params)
+            if kind == "delete":
+                return sharded_delete_fn(self.mesh, self.spec, t)
+            raise ValueError(kind)
+
+        return self.plans.get(ck, build)
 
     # -------------------------------------------------------------- save/load
     def save(self, path: str) -> None:
@@ -1001,5 +1009,5 @@ class ShardedJasperIndex:
         idx._mips_max_sqnorm = meta.get("mips_max_sqnorm")
         idx.core = idx._stack_cores(locals_)
         idx.reshard_translation = translation
-        idx._fn_cache.clear()
+        idx.plans.clear()
         return idx

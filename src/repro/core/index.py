@@ -63,6 +63,7 @@ from repro.core.index_core import (
 )
 from repro.core.mutations import MutationState
 from repro.core.pq import make_pq_scorer, pq_encode, pq_train
+from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
 from repro.core.rabitq import (
     RaBitQCodes,
     RaBitQParams,
@@ -98,7 +99,7 @@ def _search_pq(vectors, vec_sqnorm, graph, pparams, pcodes, tomb_bits,
     return f_ids[:, :k], f_dists[:, :k], res.n_hops
 
 
-class JasperIndex:
+class JasperIndex(SearchSurface):
     """Updatable TPU-native ANNS index (Vamana graph + optional RaBitQ)."""
 
     def __init__(self, dims: int, capacity: int, *, metric: str = "l2",
@@ -129,6 +130,10 @@ class JasperIndex:
 
         self.core: IndexCore = init_core(capacity, self.store_dims,
                                          self.params.degree_bound)
+        # compiled search plans keyed on (resolved spec, query shape,
+        # liveness mode) — the single-device twin of the sharded driver's
+        # plan cache; Searcher sessions and the legacy shims share it
+        self.plans = PlanCache()
         # PQ is the deprecated comparison baseline — it rides as driver-side
         # side arrays, deliberately OUTSIDE the core (the sharded backend
         # and the kernel stack only ever see RaBitQ)
@@ -419,29 +424,35 @@ class JasperIndex:
         return self
 
     # ------------------------------------------------------------------ search
+    # searcher()/recall() come from SearchSurface — the one shared copy
+    def _search_plan(self, rspec, q_shape, filt: bool):
+        """Plan-cache lookup/build: `queries -> (ids, dists, n_hops)`."""
+        key = ("search", rspec, tuple(q_shape), filt)
+
+        def build():
+            plans = self.plans
+
+            def run(core, queries):
+                plans.count_trace()       # runs at trace time only
+                return core_search(core, queries, spec=rspec,
+                                   filter_tombstones=filt)
+            return jax.jit(run)
+
+        fn = self.plans.get(key, build)
+        return lambda queries: fn(self.core, queries)
+
     def search(self, queries: np.ndarray | Array, k: int = 10, *,
                beam_width: int | None = None, max_iters: int | None = None,
                expand: int = 1, use_kernels: bool = False,
                merge: str = "topk",
                traverse_deleted: bool = True) -> tuple[Array, Array]:
-        """Exact-distance beam search. Returns (ids (Q,k), dists (Q,k)).
-
-        expand > 1: multi-expansion (CAGRA-style) — E frontier nodes per
-        iteration, ~E x fewer sequential steps (§Perf #C1).
-        use_kernels: score with the Pallas gather-distance kernel.
-        merge: frontier merge strategy ("topk" | "sort" | "kernel").
-        traverse_deleted: walk through tombstoned rows (connectivity-
-        preserving default); either way they are never returned.
-        """
-        q = self._prep_query(queries)
-        bw = beam_width or max(k, 32)
-        mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
-        ids, dists, _ = core_search(
-            self.core, q, k=k, beam_width=bw, max_iters=mi, expand=expand,
-            quantized=False, use_kernels=use_kernels, merge=merge,
-            traverse_deleted=traverse_deleted,
-            filter_tombstones=self._filter_tombstones)
-        return ids, dists
+        """Exact-distance beam search — legacy kwargs shim over
+        `searcher(SearchSpec(...))`; returns (ids (Q,k), dists (Q,k))."""
+        res = self.searcher(SearchSpec(
+            k=k, beam_width=beam_width, max_iters=max_iters, expand=expand,
+            use_kernels=use_kernels, merge=merge,
+            traverse_deleted=traverse_deleted)).search(queries)
+        return res.ids, res.dists
 
     def search_rabitq(self, queries: np.ndarray | Array, k: int = 10, *,
                       beam_width: int | None = None,
@@ -449,31 +460,15 @@ class JasperIndex:
                       expand: int = 1, use_kernels: bool = False,
                       merge: str = "topk",
                       traverse_deleted: bool = True) -> tuple[Array, Array]:
-        """RaBitQ estimated-distance beam search (Jasper RaBitQ).
-
-        use_kernels: score with the fused Pallas estimator kernel (in-VMEM
-        unpack + MXU dot + masking epilogue) over the canonical packed
-        codes — the paper's §5.1 hot path. The jnp estimator path reads
-        the same packed bytes and is the parity oracle.
-        rerank: re-score the final frontier with exact distances, tiled
-        through `rerank_frontier` so the gathered f32 buffer stays bounded.
-        expand > 1: multi-expansion, as in exact search (§Perf #C1).
-        merge: frontier merge strategy ("topk" partial merge by default,
-        "sort" reference, "kernel" Pallas min-extraction).
-        traverse_deleted: False folds the tombstone bitmap into the kernel
-        epilogue mask (one byte per candidate rides with the packed gather).
-        """
+        """RaBitQ estimated-distance beam search (the paper's §5.1 hot
+        path) — legacy kwargs shim over `searcher(SearchSpec(...))`."""
         if self.core.codes is None:
             raise RuntimeError("index was not built with quantization='rabitq'")
-        q = self._prep_query(queries)
-        bw = beam_width or max(k, 32)
-        mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
-        ids, dists, _ = core_search(
-            self.core, q, k=k, beam_width=bw, max_iters=mi, expand=expand,
+        res = self.searcher(SearchSpec(
+            k=k, beam_width=beam_width, max_iters=max_iters, expand=expand,
             quantized=True, rerank=rerank, use_kernels=use_kernels,
-            merge=merge, traverse_deleted=traverse_deleted,
-            filter_tombstones=self._filter_tombstones)
-        return ids, dists
+            merge=merge, traverse_deleted=traverse_deleted)).search(queries)
+        return res.ids, res.dists
 
     def search_pq(self, queries: np.ndarray | Array, k: int = 10, *,
                   beam_width: int | None = None,
@@ -485,19 +480,28 @@ class JasperIndex:
         The paper's negative result (§5, Fig 12): scattered 256-entry table
         lookups, no kernel backing, kept only so benchmarks can reproduce
         the comparison. Requires the explicit quantization='pq' opt-in.
-        (Deliberately NOT a core op: the sharded backend never sees PQ.)
+        (Deliberately NOT a core op or a SearchSpec mode: the sharded
+        backend and the Searcher surface never see PQ.)
         """
         if self.pq_codes is None:
             raise RuntimeError("index was not built with quantization='pq'")
+        warnings.warn(
+            "search_pq is deprecated (the paper's negative-result baseline); "
+            "use quantization='rabitq' with searcher(SearchSpec(quantized="
+            "True)) for the kernel-backed quantized path.",
+            DeprecationWarning, stacklevel=2)
+        # defaults resolve through the ONE definition site (SearchSpec)
+        rspec = SearchSpec(
+            k=k, beam_width=beam_width, max_iters=max_iters, expand=expand,
+            merge=merge, traverse_deleted=traverse_deleted).resolve()
         q = self._prep_query(queries)
-        bw = beam_width or max(k, 32)
-        mi = max_iters or ((2 * bw + 8) // max(expand, 1) + 4)
         tomb = (self.core.mut.tombstone_bits if self._filter_tombstones
                 else None)
         ids, dists, _ = _search_pq(self.core.vectors, self.core.vec_sqnorm,
                                    self.core.graph, self.pq_params,
                                    self.pq_codes, tomb, q,
-                                   k=k, beam_width=bw, max_iters=mi,
+                                   k=k, beam_width=rspec.beam_width,
+                                   max_iters=rspec.max_iters,
                                    rerank=rerank, expand=expand, merge=merge,
                                    traverse_deleted=traverse_deleted)
         return ids, dists
@@ -508,16 +512,6 @@ class JasperIndex:
         q = self._prep_query(queries)
         return core_brute_force(self.core, q, k=k)
 
-    def recall(self, queries, k: int = 10, *, beam_width: int | None = None,
-               quantized: bool = False) -> float:
-        """Recall@k vs brute force (paper's Recall k@k)."""
-        gt, _ = self.brute_force(queries, k)
-        if quantized:
-            ids, _ = self.search_rabitq(queries, k, beam_width=beam_width)
-        else:
-            ids, _ = self.search(queries, k, beam_width=beam_width)
-        hits = (ids[:, :, None] == gt[:, None, :]) & (ids >= 0)[:, :, None]
-        return float(jnp.mean(jnp.sum(jnp.any(hits, axis=2), axis=1) / k))
 
     # ----------------------------------------------------------------- memory
     def memory_stats(self) -> dict[str, float]:

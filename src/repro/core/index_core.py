@@ -221,65 +221,67 @@ def core_build(core: IndexCore, data: Array, *, params: ConstructionParams,
     return core
 
 
-@partial(jax.jit, static_argnames=(
-    "k", "beam_width", "max_iters", "expand", "quantized", "rerank",
-    "use_kernels", "merge", "traverse_deleted", "filter_tombstones",
-    "rerank_tile"))
-def core_search(core: IndexCore, queries: Array, *, k: int, beam_width: int,
-                max_iters: int, expand: int = 1, quantized: bool = False,
-                rerank: bool = True, use_kernels: bool = False,
-                merge: str = "topk", traverse_deleted: bool = True,
-                filter_tombstones: bool = True, rerank_tile: int = 512
+@partial(jax.jit, static_argnames=("spec", "filter_tombstones"))
+def core_search(core: IndexCore, queries: Array, *, spec,
+                filter_tombstones: bool = True
                 ) -> tuple[Array, Array, Array]:
     """THE search path — exact and quantized, kernel and jnp, 1..N shards.
 
+    spec: a `ResolvedSearchSpec` (frozen/hashable, so it is ONE static jit
+      argument instead of the former 11-kwarg explosion). Build it with
+      `SearchSpec(...).resolve()` — all default formulas and validation
+      live there, never here.
     queries are already metric-prepped (the drivers handle MIPS
     augmentation). Returns (ids (Q,k), dists (Q,k), n_hops (Q,)).
 
-    quantized: beam-search on RaBitQ estimated distances over the packed
-      codes; use_kernels routes scoring through the fused Pallas
-      `rabitq_search_step` kernel (in-VMEM unpack + MXU dot + masking
-      epilogue). rerank then re-scores the final frontier exactly, tiled
-      `rerank_tile` queries at a time (see `rerank_frontier`).
+    spec.quantized: beam-search on RaBitQ estimated distances over the
+      packed codes; spec.use_kernels routes scoring through the fused
+      Pallas `rabitq_search_step` kernel (in-VMEM unpack + MXU dot +
+      masking epilogue). spec.rerank then re-scores the final frontier
+      exactly, tiled `spec.rerank_tile` queries at a time.
     filter_tombstones: False skips every bitmap lookup — the drivers pass
       it when no bit can possibly be set, keeping the delete-free
-      workload on filter-free executables.
-    traverse_deleted: False additionally folds the bitmap into the
+      workload on filter-free executables. (Execution-time liveness, not
+      configuration: deliberately NOT a spec field.)
+    spec.traverse_deleted: False additionally folds the bitmap into the
       scoring epilogues (kernel paths fuse the per-candidate byte gather).
     """
+    k = spec.k
     tomb = core.mut.tombstone_bits if filter_tombstones else None
     graph = core.graph
-    if quantized:
+    if spec.quantized:
         if core.codes is None:
             raise ValueError("core has no quantized codes")
         rq = rabitq_preprocess_query(core.rq_params, queries)
         res = beam_search_quantized(
-            graph, core.codes, rq, beam_width=beam_width,
-            max_iters=max_iters, expand_per_iter=expand,
-            use_kernels=use_kernels, merge_strategy=merge,
-            tombstone_bits=tomb, traverse_deleted=traverse_deleted)
-        if rerank:
+            graph, core.codes, rq, beam_width=spec.beam_width,
+            max_iters=spec.max_iters, expand_per_iter=spec.expand,
+            use_kernels=spec.use_kernels, merge_strategy=spec.merge,
+            tombstone_bits=tomb, traverse_deleted=spec.traverse_deleted)
+        if spec.rerank:
             exact_d = rerank_frontier(
                 core.vectors, core.vec_sqnorm, queries, res.frontier_ids,
-                tile_q=rerank_tile, use_kernels=use_kernels)
+                tile_q=spec.rerank_tile, use_kernels=spec.use_kernels)
             sd, si = jax.lax.sort((exact_d, res.frontier_ids), dimension=1,
                                   is_stable=True, num_keys=1)
             si = jnp.where(jnp.isfinite(sd), si, -1)
             return si[:, :k], sd[:, :k], res.n_hops
     else:
-        if use_kernels:
+        if spec.use_kernels:
             from repro.kernels.distance.ops import make_kernel_scorer
             score = make_kernel_scorer(
                 core.vectors, queries, graph.n_valid, core.vec_sqnorm,
-                tombstone_bits=(None if traverse_deleted else tomb))
+                tombstone_bits=(None if spec.traverse_deleted else tomb))
         else:
             score = make_exact_scorer(core.vectors, queries, graph.n_valid,
                                       core.vec_sqnorm)
         res = beam_search(graph, score, queries.shape[0],
-                          beam_width=beam_width, max_iters=max_iters,
-                          expand_per_iter=expand, merge_strategy=merge,
+                          beam_width=spec.beam_width,
+                          max_iters=spec.max_iters,
+                          expand_per_iter=spec.expand,
+                          merge_strategy=spec.merge,
                           tombstone_bits=tomb,
-                          traverse_deleted=traverse_deleted)
+                          traverse_deleted=spec.traverse_deleted)
     return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
 
 

@@ -1,0 +1,404 @@
+"""One query surface: declarative SearchSpec + compiled Searcher sessions.
+
+The paper's throughput story (§5: fused estimator + optimized greedy
+search) used to hide behind a kwarg explosion — `search/search_rabitq/
+search_pq` on two drivers, the service, the dry-run launcher, and every
+benchmark each re-declared the same ~8 tuning knobs and copy-pasted the
+default formulas. This module makes the query configuration a first-class
+object (the online-serving literature treats it as a scheduling object —
+cf. the real-time adaptive multi-stream GPU ANNS system, arXiv:2408.02937):
+
+  * `SearchSpec` — frozen, hashable, JSON-serializable description of ONE
+    search configuration. `resolve()` is the single definition site of
+    every default formula and every validation rule in the system: the
+    beam-width default, the iteration-budget formula, merge-strategy
+    membership, and the up-front "quantized search needs codes" check all
+    live here and nowhere else.
+  * `ResolvedSearchSpec` — the fully-concrete, normalized form. Frozen and
+    hashable, so it is BOTH the static jit argument `core_search` compiles
+    against and the plan-cache key.
+  * `SearchResult` — what a search returns: ids, dists, per-query hop
+    counts (`core_search` always computed n_hops; every driver used to
+    drop it), and the snapshot generation. The serving layer's
+    `SearchTicket` IS this type.
+  * `PlanCache` — executable cache keyed on (resolved spec, query shape,
+    liveness mode) with hit/miss/trace counters. Generalizes the `_fn`
+    cache that previously existed only in `ShardedJasperIndex` to both
+    backends: repeated single-device searches no longer re-enter
+    `core_search`'s 11-static-arg dispatch path per call.
+  * `Searcher` — a compiled search session from `index.searcher(spec)`:
+    resolves the spec once, looks up (or builds) the jitted executable per
+    query shape, and supports `submit()/drain()` double-buffered batching
+    so a serving loop can overlap host scheduling with device search.
+
+Driver contract (both `JasperIndex` and `ShardedJasperIndex` satisfy it):
+`_prep_query`, `_filter_tombstones`, `generation`, `brute_force`, a
+`plans: PlanCache`, and `_search_plan(resolved, q_shape, filt)` returning
+a callable `queries -> (ids, dists, n_hops)`.
+"""
+
+from __future__ import annotations
+
+import json
+import numbers
+from collections import deque
+from dataclasses import asdict, dataclass, fields, replace
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.core.beam_search import MERGE_STRATEGIES
+
+SPEC_VERSION = 1
+
+
+def check_quantized_backend(index, *, need_codes: bool = True) -> None:
+    """THE quantized-capability check: the index must be a RaBitQ backend
+    and (unless `need_codes=False` — e.g. a service constructed before the
+    first build/insert trains the quantizer) already hold packed codes.
+    `resolve(index)` and the serving layer both call this one function."""
+    if getattr(index, "quantization", None) != "rabitq":
+        raise ValueError(
+            "quantized=True requires an index built with "
+            "quantization='rabitq' (this core has no packed codes)")
+    core = getattr(index, "core", None)
+    if need_codes and core is not None and core.codes is None:
+        raise ValueError(
+            "quantized=True on a codeless core: this "
+            "quantization='rabitq' index has not trained its quantizer "
+            "yet — build or insert data before opening a quantized "
+            "search session")
+
+
+def _as_int(name: str, value, *, floor: int) -> int:
+    """Coerce an integral spec field (python or numpy int — the legacy
+    kwargs surface routinely receives numpy scalars) to a plain int;
+    bool and everything non-integral are configuration errors."""
+    if isinstance(value, bool) or not isinstance(value, numbers.Integral):
+        raise ValueError(f"{name} must be an int, got {value!r}")
+    value = int(value)
+    if value < floor:
+        raise ValueError(f"{name} must be >= {floor}, got {value}")
+    return value
+
+
+# ---------------------------------------------------------------------------
+# The declarative spec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SearchSpec:
+    """Declarative description of one search configuration.
+
+    k:            results per query.
+    beam_width:   frontier size (None -> resolved default).
+    max_iters:    greedy-walk iteration budget (None -> resolved default,
+                  which scales with beam_width / expand).
+    expand:       frontier nodes expanded per iteration (CAGRA-style
+                  multi-expansion; E x fewer sequential steps).
+    quantized:    beam-search on RaBitQ estimated distances over the packed
+                  codes instead of exact distances.
+    rerank:       (quantized only) re-score the final frontier exactly.
+    rerank_tile:  query-tile size for the exact rerank gather buffer.
+    use_kernels:  route scoring through the fused Pallas kernels.
+    merge:        per-hop frontier merge strategy ("topk"|"sort"|"kernel").
+    traverse_deleted: tombstone policy — walk through tombstoned rows
+                  (connectivity-preserving default) or mask them inside the
+                  scoring epilogues. Either way they are never returned.
+    """
+
+    k: int = 10
+    beam_width: int | None = None
+    max_iters: int | None = None
+    expand: int = 1
+    quantized: bool = False
+    rerank: bool = True
+    rerank_tile: int = 512
+    use_kernels: bool = False
+    merge: str = "topk"
+    traverse_deleted: bool = True
+
+    # ------------------------------------------------------------- resolve
+    def resolve(self, index: Any = None) -> "ResolvedSearchSpec":
+        """Fill defaults, validate, normalize — the ONE definition site.
+
+        Every default formula in the search stack lives here: callers
+        (drivers, service, benchmarks, launchers) never re-derive them.
+        With `index` given, configuration errors that would otherwise
+        surface mid-trace are rejected up front (e.g. `quantized=True`
+        on a core that has no codes).
+        """
+        k = _as_int("k", self.k, floor=1)
+        expand = _as_int("expand", self.expand, floor=1)
+        if self.merge not in MERGE_STRATEGIES:
+            raise ValueError(
+                f"merge must be one of {MERGE_STRATEGIES}, "
+                f"got {self.merge!r}")
+        bw = (max(k, 32) if self.beam_width is None
+              else _as_int("beam_width", self.beam_width, floor=1))
+        if bw < k:
+            raise ValueError(
+                f"beam_width must be an int >= k={k}, got {bw!r} "
+                "(the final frontier is the result buffer: a beam narrower "
+                "than k cannot hold k results)")
+        mi = ((2 * bw + 8) // expand + 4 if self.max_iters is None
+              else _as_int("max_iters", self.max_iters, floor=1))
+        rerank_tile = _as_int("rerank_tile", self.rerank_tile, floor=1)
+        if index is not None and self.quantized:
+            # reject a codeless core up front, not mid-trace
+            check_quantized_backend(index)
+        # normalize fields the exact path never reads, so exact-path specs
+        # that differ only in rerank knobs share one plan-cache entry
+        rerank = bool(self.rerank) if self.quantized else True
+        if not (self.quantized and rerank):
+            rerank_tile = 512
+        return ResolvedSearchSpec(
+            k=k, beam_width=bw, max_iters=mi, expand=expand,
+            quantized=bool(self.quantized), rerank=rerank,
+            rerank_tile=rerank_tile, use_kernels=bool(self.use_kernels),
+            merge=self.merge, traverse_deleted=bool(self.traverse_deleted))
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"version": SPEC_VERSION, **asdict(self)}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SearchSpec":
+        d = dict(d)
+        version = d.pop("version", SPEC_VERSION)
+        if version > SPEC_VERSION:
+            raise ValueError(f"SearchSpec version {version} is newer than "
+                             f"this build supports ({SPEC_VERSION})")
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown SearchSpec fields: {sorted(unknown)}")
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "SearchSpec":
+        return cls.from_dict(json.loads(s))
+
+    def with_(self, **kw) -> "SearchSpec":
+        """Functional update (specs are frozen)."""
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ResolvedSearchSpec:
+    """Fully-concrete, validated, normalized search configuration.
+
+    Hashable and immutable: this is the static argument `core_search`
+    jit-compiles against AND the plan-cache key — one object, one compiled
+    executable per distinct configuration.
+    """
+
+    k: int
+    beam_width: int
+    max_iters: int
+    expand: int
+    quantized: bool
+    rerank: bool
+    rerank_tile: int
+    use_kernels: bool
+    merge: str
+    traverse_deleted: bool
+
+    def to_spec(self) -> SearchSpec:
+        return SearchSpec(**asdict(self))
+
+
+class SearchResult(NamedTuple):
+    """One served search batch.
+
+    The serving layer's `SearchTicket` is an alias of this type — the
+    core and the service stamp results identically.
+    """
+
+    ids: Any        # (Q, k) int32, -1 padded, never tombstoned
+    dists: Any      # (Q, k) f32
+    n_hops: Any     # (Q,) int32 — greedy-walk hops per query (the paper's
+                    # per-query work metric; max over shards when sharded)
+    generation: int  # index generation this batch was served at
+
+
+# ---------------------------------------------------------------------------
+# Plan cache — shared executable cache for both backends
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CacheStats:
+    """Counters for the plan cache (monotonic; `clear()` keeps them)."""
+
+    hits: int = 0
+    misses: int = 0
+    traces: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)
+
+    def delta(self, since: "CacheStats") -> dict:
+        return {k: v - getattr(since, k) for k, v in self.__dict__.items()}
+
+    def snapshot(self) -> "CacheStats":
+        return CacheStats(**self.__dict__)
+
+
+class PlanCache:
+    """Executable cache keyed on (kind, resolved spec, shapes, liveness).
+
+    Both index drivers own one. `get` returns the cached plan or builds
+    it; builders bump `stats.traces` from INSIDE the traced function, so
+    the counter reflects actual retraces (jit re-entry on a changed core
+    structure counts; a cache hit on an unchanged key does not).
+    """
+
+    def __init__(self) -> None:
+        self._plans: dict = {}
+        self.stats = CacheStats()
+
+    def get(self, key, build):
+        try:
+            plan = self._plans[key]
+            self.stats.hits += 1
+            return plan
+        except KeyError:
+            self.stats.misses += 1
+            plan = self._plans[key] = build()
+            return plan
+
+    def count_trace(self) -> None:
+        """Call from inside a traced function body: runs once per trace."""
+        self.stats.traces += 1
+
+    def clear(self) -> None:
+        """Drop compiled plans (index structure changed); stats persist."""
+        self._plans.clear()
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+
+# ---------------------------------------------------------------------------
+# The compiled search session
+# ---------------------------------------------------------------------------
+
+class Searcher:
+    """A compiled search session over one index driver.
+
+    Created via `index.searcher(spec)`. The spec is resolved (validated,
+    defaults filled) exactly once, at construction; each distinct query
+    shape then compiles at most once into the index's shared `PlanCache`,
+    so repeated searches — and every other Searcher or legacy-shim call
+    with the same configuration — reuse the same executable.
+
+    `search()` is the synchronous path. `submit()`/`drain()` expose the
+    asynchronous dispatch underneath: `submit` enqueues device work and
+    returns immediately (JAX dispatch is async), so the host can schedule
+    the next batch while the device runs this one; `drain` blocks on the
+    transfers and returns completed `SearchResult`s in submission order —
+    the double-buffering hook the serving loop batches through.
+    """
+
+    def __init__(self, index, spec: SearchSpec):
+        self.index = index
+        self.spec = spec
+        self.resolved = spec.resolve(index)
+        self._inflight: deque = deque()
+
+    # ----------------------------------------------------------- execution
+    def _dispatch(self, queries) -> SearchResult:
+        idx = self.index
+        q = idx._prep_query(queries)
+        generation = idx.generation
+        plan = idx._search_plan(self.resolved, q.shape,
+                                idx._filter_tombstones)
+        ids, dists, n_hops = plan(q)
+        return SearchResult(ids=ids, dists=dists, n_hops=n_hops,
+                            generation=generation)
+
+    def search(self, queries) -> SearchResult:
+        """Synchronous search at the current snapshot generation."""
+        return self._dispatch(queries)
+
+    def submit(self, queries) -> int:
+        """Enqueue a batch (async dispatch); returns the in-flight depth."""
+        self._inflight.append(self._dispatch(queries))
+        return len(self._inflight)
+
+    def drain(self, limit: int | None = None) -> list[SearchResult]:
+        """Block on the oldest `limit` in-flight batches (None = all);
+        results in submission order, host-resident (np arrays)."""
+        out = []
+        while self._inflight and (limit is None or len(out) < limit):
+            r = self._inflight.popleft()
+            out.append(SearchResult(
+                ids=np.asarray(r.ids), dists=np.asarray(r.dists),
+                n_hops=np.asarray(r.n_hops), generation=r.generation))
+        return out
+
+    @property
+    def pending(self) -> int:
+        return len(self._inflight)
+
+    @property
+    def cache_stats(self) -> CacheStats:
+        """The index's shared plan-cache counters (hits/misses/traces)."""
+        return self.index.plans.stats
+
+
+# ---------------------------------------------------------------------------
+# Shared driver surface — ONE implementation for both drivers
+# ---------------------------------------------------------------------------
+
+class SearchSurface:
+    """The spec-driven query surface both index drivers inherit.
+
+    Hosts the ONE copy of session opening and recall measurement; the
+    driver supplies the execution contract (`_prep_query`,
+    `_filter_tombstones`, `generation`, `brute_force`, `plans`,
+    `_search_plan`) documented in this module's header.
+    """
+
+    def searcher(self, spec: SearchSpec | None = None, **kw) -> Searcher:
+        """Open a compiled search session (THE query surface).
+
+        `spec` (or keyword fields building one; keywords alongside a spec
+        derive `spec.with_(**kw)`) is resolved — defaults filled,
+        validated against this index — exactly once; the session then
+        compiles at most one executable per query shape into the index's
+        shared plan cache. See docs/search_api.md.
+        """
+        spec = SearchSpec(**kw) if spec is None else \
+            (spec.with_(**kw) if kw else spec)
+        return Searcher(self, spec)
+
+    def recall(self, queries, k: int = 10, *,
+               beam_width: int | None = None, quantized: bool = False,
+               use_kernels: bool = False, expand: int = 1,
+               spec: SearchSpec | None = None) -> float:
+        """Recall@k vs brute force (paper's Recall k@k) at the exact
+        served configuration — delegates to `measure_recall`."""
+        spec = spec or SearchSpec(k=k, beam_width=beam_width,
+                                  quantized=quantized,
+                                  use_kernels=use_kernels, expand=expand)
+        return measure_recall(self, queries, spec)
+
+
+def measure_recall(index, queries, spec: SearchSpec) -> float:
+    """Recall@k vs the index's own brute force (paper's Recall k@k), at the
+    EXACT configuration described by `spec`.
+
+    This is the single recall implementation both drivers delegate to —
+    and unlike the old per-driver copies it honors every spec field
+    (`use_kernels`, `expand`, `merge`, ...), so recall is measured on the
+    configuration actually being served, not a simplified twin of it.
+    """
+    gt, _ = index.brute_force(queries, spec.resolve(index).k)
+    res = index.searcher(spec).search(queries)
+    ids, gt = np.asarray(res.ids), np.asarray(gt)
+    hits = (ids[:, :, None] == gt[:, None, :]) & (ids >= 0)[:, :, None]
+    return float(np.mean(hits.any(axis=2).sum(axis=1) / gt.shape[1]))

@@ -42,6 +42,7 @@ from repro.compat import shard_map
 from repro.configs.base import ANNS_DATASETS
 from repro.core.distributed import ShardSpec, merge_topk, sharded_search_fn
 from repro.core.index_core import IndexCore
+from repro.core.search_spec import SearchSpec
 from repro.core.mutations import MutationState
 from repro.core.rabitq import RaBitQCodes, RaBitQParams
 from repro.launch.mesh import make_production_mesh
@@ -115,10 +116,13 @@ def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
             # (degenerate stub): the paper's memory story, measured honestly
             vec_dims=(1 if quantized and not rerank else None),
             quantized=quantized, bits=bits)
-        fn = sharded_search_fn(
-            mesh, spec, core, id_stride=cap, k=K, beam_width=BEAM,
-            max_iters=MAX_ITERS, expand=EXPAND, quantized=quantized,
-            rerank=rerank, use_kernels=False, filter_tombstones=True)
+        # the dry-run lowers the SAME resolved spec object the serving
+        # driver compiles against — one configuration type, end to end
+        search = SearchSpec(
+            k=K, beam_width=BEAM, max_iters=MAX_ITERS, expand=EXPAND,
+            quantized=quantized, rerank=rerank).resolve()
+        fn = sharded_search_fn(mesh, spec, core, id_stride=cap,
+                               spec=search, filter_tombstones=True)
         queries = jax.ShapeDtypeStruct((n_queries, d), f32)
         lowered = fn.lower(core, queries)
     elif variant == "bruteforce":

@@ -8,6 +8,11 @@ that design:
 
   * mutations and searches are BATCHED — the host loop is the stream
     scheduler, the device only ever sees fixed-shape jit'd work;
+  * the search configuration is a first-class `SearchSpec` (the
+    multi-stream literature's "query configuration as scheduling object"):
+    the service resolves it ONCE into a compiled `Searcher` session, and
+    every tick reuses that session's cached executables — no per-tick
+    re-dispatch through a kwarg pile;
   * every mutation bumps the index's generation counter; every search
     result is stamped with the generation it was served at, so a client
     (or a replica fan-out) can order results against mutations without a
@@ -19,7 +24,11 @@ that design:
     invariant is the service's serving contract;
   * deletes are tombstone-cheap, so the service absorbs them at stream
     rate and amortizes graph repair: `consolidate` triggers automatically
-    once the tombstone load factor passes `consolidate_threshold`.
+    once the tombstone load factor passes `consolidate_threshold`;
+  * consecutive search batches pipeline through the Searcher's
+    `submit()/drain()` double buffer — host scheduling of batch i+1
+    overlaps device search of batch i (async dispatch), the first step of
+    the ROADMAP's query-axis batching item.
 
 `step()` is one scheduler tick (deletes -> maybe-consolidate -> inserts ->
 searches); `run()` drives a whole op stream. Both are synchronous host
@@ -27,32 +36,34 @@ drivers, mirroring build/insert in core.
 
 Since the IndexCore unification, the service is BACKEND-AGNOSTIC: it
 drives the shared driver surface (insert -> assigned ids, delete,
-search/search_rabitq, consolidate, generation, deleted_fraction,
-tombstoned) that `JasperIndex` and `ShardedJasperIndex` both expose —
-the same serve loop runs one device or a whole mesh unchanged. On the
-sharded backend the loop also levels load: when per-shard live counts
-drift past `rebalance_threshold` (skewed deletes), the tick runs
-`index.rebalance()` between mutations and searches and surfaces the
-old->new id translation for outstanding tickets in
-`StepResult.rebalanced` (see docs/resharding.md).
+searcher(spec), consolidate, generation, deleted_fraction, tombstoned)
+that `JasperIndex` and `ShardedJasperIndex` both expose — the same serve
+loop runs one device or a whole mesh unchanged. On the sharded backend
+the loop also levels load: when per-shard live counts drift past
+`rebalance_threshold` (skewed deletes), the tick runs `index.rebalance()`
+between mutations and searches and surfaces the old->new id translation
+for outstanding tickets in `StepResult.rebalanced` (docs/resharding.md).
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Iterable, NamedTuple
 
 import numpy as np
 
+from repro.core.search_spec import (
+    SearchResult,
+    SearchSpec,
+    check_quantized_backend,
+)
+
+# One stamped-result type across the stack: the service's ticket IS the
+# core's search result (ids, dists, n_hops, generation).
+SearchTicket = SearchResult
+
 __all__ = ["AnnsService", "SearchTicket", "StepResult", "ServiceStats"]
-
-
-class SearchTicket(NamedTuple):
-    """One served search batch, stamped with its snapshot generation."""
-
-    ids: np.ndarray     # (Q, k) int32, -1 padded, never tombstoned
-    dists: np.ndarray   # (Q, k) f32
-    generation: int     # index generation this batch was served at
 
 
 class StepResult(NamedTuple):
@@ -83,24 +94,40 @@ class ServiceStats:
     n_rebalance_rows: int = 0
     n_grows: int = 0
     last_generation: int = 0
+    # greedy-walk work actually served (SearchResult.n_hops, summed over
+    # every query): hops_sum/n_search_queries is the service-lifetime
+    # mean, last_mean_hops the most recent tick's
+    hops_sum: float = 0.0
+    last_mean_hops: float = 0.0
+
+    @property
+    def mean_hops(self) -> float:
+        """Mean greedy-walk hops per served query (service lifetime)."""
+        return self.hops_sum / self.n_search_queries \
+            if self.n_search_queries else 0.0
 
     def as_dict(self) -> dict:
-        return dict(self.__dict__)
+        return dict(self.__dict__, mean_hops=self.mean_hops)
 
 
 class AnnsService:
     """Interleaved insert/delete/search serving over one index driver
     (JasperIndex or ShardedJasperIndex — both expose the core surface)."""
 
-    def __init__(self, index, *, k: int = 10,
-                 beam_width: int | None = None, use_kernels: bool = False,
-                 quantized: bool | None = None,
+    def __init__(self, index, *, spec: SearchSpec | None = None,
+                 k: int = 10, beam_width: int | None = None,
+                 use_kernels: bool = False, quantized: bool | None = None,
                  consolidate_threshold: float = 0.25,
                  rebalance_threshold: float = 0.0,
                  verify: bool = True):
         """
-        quantized: serve via search_rabitq (defaults to True iff the index
-        was built with quantization='rabitq').
+        spec: the search configuration to serve (a `SearchSpec`) — the
+        preferred surface. When omitted, the legacy tuning kwargs
+        (k/beam_width/use_kernels/quantized) build one, with a
+        DeprecationWarning on any non-default value; `quantized=None`
+        auto-detects (True iff the index was built with
+        quantization='rabitq') and never warns. Passing BOTH a spec and
+        legacy tuning kwargs is an error.
         consolidate_threshold: tombstone load factor that triggers automatic
         graph repair at the next tick (<= 0 disables auto-consolidation).
         rebalance_threshold: per-shard live-count imbalance ((max-min)/mean)
@@ -111,20 +138,58 @@ class AnnsService:
         batch (host-side O(Q*k); raise on violation).
         """
         self.index = index
-        self.k = k
-        self.beam_width = beam_width
-        self.use_kernels = use_kernels
-        self.quantized = (index.quantization == "rabitq"
-                          if quantized is None else quantized)
+        legacy = (k != 10 or beam_width is not None or use_kernels
+                  or quantized is not None)
+        if spec is not None:
+            if legacy:
+                raise ValueError(
+                    "pass either spec= or the legacy tuning kwargs "
+                    "(k/beam_width/use_kernels/quantized), not both")
+            self.spec = spec
+        else:
+            if legacy:
+                warnings.warn(
+                    "AnnsService legacy tuning kwargs are deprecated — "
+                    "pass spec=SearchSpec(...) instead "
+                    "(see docs/search_api.md)",
+                    DeprecationWarning, stacklevel=2)
+            self.spec = SearchSpec(
+                k=k, beam_width=beam_width, use_kernels=use_kernels,
+                quantized=(index.quantization == "rabitq"
+                           if quantized is None else quantized))
+        # fail fast on static spec errors and backend mismatch; the
+        # codes-presence half of the check runs at session creation — a
+        # quantized service may legitimately be constructed BEFORE the
+        # first build/insert trains the quantizer
+        self.spec.resolve()
+        if self.spec.quantized:
+            check_quantized_backend(index, need_codes=False)
         self.consolidate_threshold = consolidate_threshold
         self.rebalance_threshold = rebalance_threshold
         self.verify = verify
         self.stats = ServiceStats()
+        self._searcher = None             # lazy compiled session
 
     # ------------------------------------------------------------------ ops
     @property
     def generation(self) -> int:
         return self.index.generation
+
+    @property
+    def k(self) -> int:
+        return self.spec.k
+
+    def searcher(self, k: int | None = None, **overrides):
+        """The service's compiled search session (k / legacy-kwarg
+        overrides derive a sibling session; plans share the index's
+        cache either way)."""
+        if k is not None and k != self.spec.k:
+            overrides["k"] = k
+        if overrides:
+            return self.index.searcher(self.spec.with_(**overrides))
+        if self._searcher is None:
+            self._searcher = self.index.searcher(self.spec)
+        return self._searcher
 
     def insert(self, vectors) -> np.ndarray:
         """Batch insert; returns assigned row ids (freed slots reused)."""
@@ -144,17 +209,11 @@ class AnnsService:
         self._stamp()
         return n
 
-    def search(self, queries, k: int | None = None, **kw) -> SearchTicket:
-        """Serve one search batch at the current snapshot generation."""
-        k = k or self.k
-        kw.setdefault("beam_width", self.beam_width)
-        kw.setdefault("use_kernels", self.use_kernels)
-        gen = self.index.generation
-        if self.quantized:
-            ids, dists = self.index.search_rabitq(queries, k, **kw)
-        else:
-            ids, dists = self.index.search(queries, k, **kw)
-        ids = np.asarray(ids)
+    def _finish(self, res: SearchResult) -> SearchTicket:
+        """Host-land a search result: verify the serving contract, fold
+        the hop counts into the stats, stamp the ticket."""
+        ids = np.asarray(res.ids)
+        n_hops = np.asarray(res.n_hops)
         if self.verify:
             # O(Q*k): gather only the returned ids' tombstone bits — the
             # full bitmap never unpacks on the serving path (the drivers'
@@ -165,11 +224,49 @@ class AnnsService:
             if dead.size:
                 raise AssertionError(
                     f"serving contract violated: tombstoned ids returned "
-                    f"at generation {gen}: {dead[:8].tolist()}")
+                    f"at generation {res.generation}: {dead[:8].tolist()}")
         self.stats.n_searches += 1
         self.stats.n_search_queries += int(ids.shape[0])
+        self.stats.hops_sum += float(n_hops.sum())
+        self.stats.last_mean_hops = float(n_hops.mean()) if n_hops.size \
+            else 0.0
         self._stamp()
-        return SearchTicket(ids=ids, dists=np.asarray(dists), generation=gen)
+        return SearchTicket(ids=ids, dists=np.asarray(res.dists),
+                            n_hops=n_hops, generation=res.generation)
+
+    def search(self, queries, k: int | None = None, **kw) -> SearchTicket:
+        """Serve one search batch at the current snapshot generation.
+
+        Extra keyword overrides (beam_width, use_kernels, ...) are the
+        legacy per-call surface: they derive a sibling spec for this call
+        (DeprecationWarning) — prefer one spec per configuration."""
+        # None means "keep the service default" in the legacy surface
+        kw = {f: v for f, v in kw.items() if v is not None}
+        if kw:
+            warnings.warn(
+                "per-call search kwargs are deprecated — serve a "
+                "spec=SearchSpec(...) configuration instead "
+                "(see docs/search_api.md)",
+                DeprecationWarning, stacklevel=2)
+        return self._finish(self.searcher(k, **kw).search(queries))
+
+    MAX_INFLIGHT = 2        # double buffer: bound queued device work
+    _FLUSH_EVERY = 16       # run(): bound the buffered search-op payloads
+
+    def search_many(self, query_batches, k: int | None = None
+                    ) -> list[SearchTicket]:
+        """Serve several batches through the session's submit/drain double
+        buffer: host scheduling of batch i+1 overlaps device search of
+        batch i (async dispatch), with at most `MAX_INFLIGHT` batches
+        queued on the device — so an arbitrarily long batch list runs in
+        bounded memory. Between-batch mutations are impossible here, so
+        every ticket carries the same snapshot generation."""
+        ses = self.searcher(k)
+        tickets: list[SearchTicket] = []
+        for q in query_batches:
+            if ses.submit(q) >= self.MAX_INFLIGHT:
+                tickets += [self._finish(r) for r in ses.drain(1)]
+        return tickets + [self._finish(r) for r in ses.drain()]
 
     def maybe_consolidate(self, force: bool = False) -> dict | None:
         """Repair the graph if the tombstone load factor warrants it."""
@@ -234,9 +331,28 @@ class AnnsService:
     def run(self, ops: Iterable[tuple[str, Any]]) -> list:
         """Drive an op stream: ("insert", vecs) | ("delete", ids) |
         ("search", queries) | ("consolidate", None) | ("rebalance", None).
-        Returns per-op results in order."""
+        Returns per-op results in order. The stream is consumed LAZILY
+        (generators / unbounded queues work); runs of consecutive search
+        ops buffer and pipeline through `search_many` (double-buffered
+        dispatch, bounded in-flight depth), flushing at the next mutation
+        op or every `_FLUSH_EVERY` buffered batches — so a search-only
+        unbounded stream still produces tickets and stays in bounded
+        memory. Result order is unchanged."""
         out: list = []
+        searches: list = []
+
+        def flush() -> None:
+            if searches:
+                out.extend(self.search_many(searches))
+                searches.clear()
+
         for kind, payload in ops:
+            if kind == "search":
+                searches.append(payload)
+                if len(searches) >= self._FLUSH_EVERY:
+                    flush()
+                continue
+            flush()
             if kind == "insert":
                 out.append(self.insert(payload))
             elif kind == "delete":
@@ -246,14 +362,13 @@ class AnnsService:
                 # freed slots recycle), matching step()'s ordering
                 self.maybe_consolidate()
                 self.maybe_rebalance()
-            elif kind == "search":
-                out.append(self.search(payload))
             elif kind == "consolidate":
                 out.append(self.maybe_consolidate(force=True))
             elif kind == "rebalance":
                 out.append(self.maybe_rebalance(force=True))
             else:
                 raise ValueError(f"unknown op {kind!r}")
+        flush()
         return out
 
     def _stamp(self) -> None:

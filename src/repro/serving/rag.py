@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.construction import ConstructionParams
 from repro.core.index import JasperIndex
+from repro.core.search_spec import SearchSpec
 from repro.models.model import forward
 
 Array = jax.Array
@@ -75,9 +76,12 @@ class RagPipeline:
 
     def retrieve(self, query_tokens: Array, k: int = 4,
                  beam_width: int = 32) -> list[list[Any]]:
-        """Top-k payloads for each query."""
+        """Top-k payloads for each query (spec-driven search session —
+        repeated retrievals at the same configuration reuse one compiled
+        plan from the index's shared cache)."""
         q = embed_texts(self.params, self.cfg, query_tokens)
-        ids, _ = self.index.search(q, k=k, beam_width=beam_width)
-        ids = jax.device_get(ids)
+        res = self.index.searcher(
+            SearchSpec(k=k, beam_width=beam_width)).search(q)
+        ids = jax.device_get(res.ids)
         return [[self._docs[int(i)] for i in row if int(i) in self._docs]
                 for row in ids]

@@ -439,6 +439,54 @@ def test_reshard_empty_and_identity_translation():
     assert (ident.apply(np.arange(4)) == np.arange(4)).all()
 
 
+# -------------------------------------------------------------- search spec
+@settings(**SETTINGS)
+@given(
+    k=st.integers(1, 64),
+    beam_extra=st.integers(-1, 96),       # -1 -> leave beam_width unset
+    max_iters=st.integers(0, 128),        # 0  -> leave unset
+    expand=st.integers(1, 4),
+    quantized=st.sampled_from([False, True]),
+    rerank=st.sampled_from([False, True]),
+    use_kernels=st.sampled_from([False, True]),
+    merge=st.sampled_from(["topk", "sort", "kernel"]),
+    traverse=st.sampled_from([False, True]),
+)
+def test_search_spec_json_roundtrip(k, beam_extra, max_iters, expand,
+                                    quantized, rerank, use_kernels, merge,
+                                    traverse):
+    """Any valid SearchSpec survives to_json/from_json exactly, and the
+    round-tripped spec resolves to the identical ResolvedSearchSpec (so a
+    persisted serving config compiles the identical plan)."""
+    from repro.core.search_spec import SearchSpec
+
+    spec = SearchSpec(
+        k=k,
+        beam_width=None if beam_extra < 0 else k + beam_extra,
+        max_iters=max_iters or None,
+        expand=expand, quantized=quantized, rerank=rerank,
+        use_kernels=use_kernels, merge=merge, traverse_deleted=traverse)
+    back = SearchSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.resolve() == spec.resolve()
+    assert hash(back) == hash(spec)
+
+
+@settings(**SETTINGS)
+@given(k=st.integers(1, 64), expand=st.integers(1, 4))
+def test_search_spec_default_formulas(k, expand):
+    """The ONE definition site: resolved defaults follow the documented
+    formulas for every (k, expand)."""
+    from repro.core.search_spec import SearchSpec
+
+    r = SearchSpec(k=k, expand=expand).resolve()
+    bw = max(k, 32)
+    assert r.beam_width == bw
+    assert r.max_iters == (2 * bw + 8) // expand + 4
+    # idempotence: resolving the resolved spec's SearchSpec twin is stable
+    assert r.to_spec().resolve() == r
+
+
 # --------------------------------------------------------------------- mips
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 64))

@@ -1,0 +1,328 @@
+"""The declarative query surface: SearchSpec resolution, kwargs-shim
+parity, Searcher plan-cache behavior, submit/drain batching, and the
+spec-driven AnnsService.
+
+Key contracts asserted here (ISSUE 5 acceptance criteria):
+
+  * legacy `search`/`search_rabitq` kwargs calls are BIT-IDENTICAL to the
+    equivalent `searcher(SearchSpec(...))` calls, across
+    {exact, rabitq} x {jnp, kernel};
+  * a reused Searcher session never retraces: the second search with the
+    same spec + query shape is a pure plan-cache hit (trace counter flat);
+  * invalid specs fail at `resolve()` time — before any tracing — with
+    ValueError, including `quantized=True` against a codeless core;
+  * SearchSpec JSON round-trips exactly (the property-grid twin lives in
+    tests/test_properties.py);
+  * n_hops flows end-to-end: core -> SearchResult -> SearchTicket ->
+    ServiceStats.mean_hops.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.construction import ConstructionParams
+from repro.core.index import JasperIndex
+from repro.core.search_spec import (
+    ResolvedSearchSpec,
+    SearchResult,
+    SearchSpec,
+    Searcher,
+)
+from repro.serving.anns_service import AnnsService, SearchTicket
+
+SMALL = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                           max_iters=24, rev_cap=16, prune_chunk=256)
+N, D, Q = 600, 24, 24
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(99)
+    idx = JasperIndex(D, capacity=N + 64, construction=SMALL,
+                      quantization="rabitq", bits=4)
+    idx.build(rng.normal(size=(N, D)).astype(np.float32))
+    queries = rng.normal(size=(Q, D)).astype(np.float32)
+    return idx, queries
+
+
+# ------------------------------------------------------------- resolution
+def test_resolve_fills_documented_defaults():
+    r = SearchSpec(k=10).resolve()
+    assert isinstance(r, ResolvedSearchSpec)
+    assert r.beam_width == 32                   # max(k, 32)
+    assert r.max_iters == (2 * 32 + 8) // 1 + 4
+    r = SearchSpec(k=50).resolve()
+    assert r.beam_width == 50                   # max(k, 32) again
+    r = SearchSpec(k=10, beam_width=64, expand=4).resolve()
+    assert r.max_iters == (2 * 64 + 8) // 4 + 4
+    # explicit values pass through untouched
+    r = SearchSpec(k=5, beam_width=17, max_iters=9).resolve()
+    assert (r.beam_width, r.max_iters) == (17, 9)
+
+
+def test_resolve_normalizes_exact_path_rerank_fields():
+    """Exact-path specs that differ only in (never-read) rerank knobs
+    resolve to ONE configuration — one plan-cache entry."""
+    a = SearchSpec(k=10, rerank=False, rerank_tile=7).resolve()
+    b = SearchSpec(k=10).resolve()
+    assert a == b
+    # on the quantized path the knobs are live and preserved
+    qa = SearchSpec(k=10, quantized=True, rerank=False).resolve()
+    assert qa.rerank is False
+
+
+@pytest.mark.parametrize("bad", [
+    dict(k=0),
+    dict(k=-3),
+    dict(k=10, beam_width=4),            # beam narrower than k
+    dict(expand=0),
+    dict(max_iters=0),
+    dict(merge="bogus"),
+    dict(quantized=True, rerank_tile=0),
+])
+def test_invalid_specs_raise_at_resolve(bad):
+    with pytest.raises(ValueError):
+        SearchSpec(**bad).resolve()
+
+
+def test_quantized_on_codeless_core_rejected_up_front():
+    idx = JasperIndex(D, capacity=64, construction=SMALL)   # no quantizer
+    with pytest.raises(ValueError, match="rabitq"):
+        SearchSpec(quantized=True).resolve(idx)
+    with pytest.raises(ValueError, match="rabitq"):
+        idx.searcher(SearchSpec(quantized=True))            # same site
+    # a rabitq index whose quantizer has not trained yet (lazy training:
+    # no build/insert so far) is ALSO codeless — rejected at resolve,
+    # never mid-trace
+    lazy = JasperIndex(D, capacity=64, construction=SMALL,
+                       quantization="rabitq")
+    with pytest.raises(ValueError, match="codeless"):
+        lazy.searcher(SearchSpec(quantized=True))
+    lazy.build(np.random.default_rng(0).normal(size=(64, D))
+               .astype(np.float32))
+    lazy.searcher(SearchSpec(quantized=True))               # now fine
+
+
+def test_numpy_integer_fields_coerce(built):
+    """The legacy kwargs surface routinely passes numpy ints (e.g. a beam
+    drawn from an array sweep) — resolve coerces, never rejects."""
+    idx, q = built
+    r = SearchSpec(k=np.int32(10), beam_width=np.int64(48),
+                   max_iters=np.int32(20)).resolve()
+    assert (r.k, r.beam_width, r.max_iters) == (10, 48, 20)
+    assert all(type(v) is int for v in (r.k, r.beam_width, r.max_iters))
+    a, _ = idx.search(q, 10, beam_width=np.int32(48))      # legacy shim
+    b, _ = idx.search(q, 10, beam_width=48)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    with pytest.raises(ValueError, match="must be an int"):
+        SearchSpec(k=True).resolve()                       # bool is not an int
+    with pytest.raises(ValueError, match="must be an int"):
+        SearchSpec(k=10.5).resolve()
+
+
+def test_spec_json_roundtrip_and_versioning():
+    spec = SearchSpec(k=7, beam_width=33, quantized=True, use_kernels=True,
+                      merge="sort", traverse_deleted=False)
+    assert SearchSpec.from_json(spec.to_json()) == spec
+    d = spec.to_dict()
+    assert d["version"] == 1
+    with pytest.raises(ValueError, match="version"):
+        SearchSpec.from_dict({"version": 99, "k": 3})
+    with pytest.raises(ValueError, match="unknown"):
+        SearchSpec.from_dict({"k": 3, "beam": 7})
+
+
+# ---------------------------------------------------------- shim parity
+@pytest.mark.parametrize("quantized", [False, True],
+                         ids=["exact", "rabitq"])
+@pytest.mark.parametrize("use_kernels", [False, True],
+                         ids=["jnp", "kernel"])
+def test_legacy_kwargs_shim_parity(built, quantized, use_kernels):
+    """legacy kwargs call == spec call, bit-identical ids AND dists."""
+    idx, q = built
+    spec = SearchSpec(k=10, beam_width=32, quantized=quantized,
+                      use_kernels=use_kernels)
+    res = idx.searcher(spec).search(q)
+    if quantized:
+        ids, dists = idx.search_rabitq(q, 10, beam_width=32,
+                                       use_kernels=use_kernels)
+    else:
+        ids, dists = idx.search(q, 10, beam_width=32,
+                                use_kernels=use_kernels)
+    assert (np.asarray(ids) == np.asarray(res.ids)).all()
+    assert (np.asarray(dists) == np.asarray(res.dists)).all()
+
+
+def test_search_result_fields(built):
+    idx, q = built
+    res = idx.searcher(k=5, beam_width=32).search(q)
+    assert isinstance(res, SearchResult)
+    assert np.asarray(res.ids).shape == (Q, 5)
+    assert np.asarray(res.dists).shape == (Q, 5)
+    hops = np.asarray(res.n_hops)
+    assert hops.shape == (Q,) and (hops > 0).all()
+    assert res.generation == idx.generation
+
+
+# ------------------------------------------------------------ plan cache
+def test_searcher_session_zero_retraces(built):
+    """The acceptance criterion: repeated single-device searches with a
+    reused Searcher show ZERO re-traces (and pure cache hits)."""
+    idx, q = built
+    ses = idx.searcher(SearchSpec(k=10, beam_width=24, quantized=True))
+    ses.search(q)
+    mid = idx.plans.stats.snapshot()
+    for _ in range(3):
+        ses.search(q)
+    after = idx.plans.stats
+    assert after.traces == mid.traces          # zero retraces
+    assert after.misses == mid.misses          # no new plan entries
+    assert after.hits == mid.hits + 3          # pure cache hits
+
+
+def test_plan_cache_shared_across_sessions_and_shims(built):
+    """A second Searcher with an equal spec — and the legacy shim with the
+    equivalent kwargs — reuse the FIRST session's compiled plan."""
+    idx, q = built
+    spec = SearchSpec(k=10, beam_width=28)
+    idx.searcher(spec).search(q)
+    mid = idx.plans.stats.snapshot()
+    idx.searcher(SearchSpec(k=10, beam_width=28)).search(q)   # equal spec
+    idx.search(q, 10, beam_width=28)                          # legacy shim
+    after = idx.plans.stats
+    assert after.traces == mid.traces
+    assert after.hits == mid.hits + 2
+
+
+def test_new_shape_or_spec_compiles_new_plan(built):
+    idx, q = built
+    ses = idx.searcher(SearchSpec(k=10, beam_width=26))
+    ses.search(q)
+    mid = idx.plans.stats.snapshot()
+    ses.search(q[: Q // 2])                    # new query shape
+    idx.searcher(SearchSpec(k=10, beam_width=27)).search(q)   # new spec
+    after = idx.plans.stats
+    assert after.misses == mid.misses + 2
+    assert after.traces == mid.traces + 2
+
+
+def test_submit_drain_matches_sync_search(built):
+    idx, q = built
+    ses = idx.searcher(SearchSpec(k=10, beam_width=32, quantized=True))
+    ref = ses.search(q)
+    assert ses.submit(q) == 1
+    assert ses.submit(q[: Q // 2]) == 2
+    assert ses.pending == 2
+    out = ses.drain()
+    assert ses.pending == 0 and len(out) == 2
+    assert (out[0].ids == np.asarray(ref.ids)).all()
+    assert (out[1].ids == np.asarray(ref.ids)[: Q // 2]).all()
+    assert isinstance(out[0].ids, np.ndarray)  # drained results are host
+
+
+def test_searcher_is_shared_class_with_sharded_backend(built):
+    """Both drivers expose the SAME session type (the sharded half of the
+    matrix runs in tests/test_distributed.py / conformance)."""
+    idx, q = built
+    assert type(idx.searcher(k=3)) is Searcher
+
+
+# ------------------------------------------------------- service surface
+def test_service_accepts_spec_and_rejects_mixed_kwargs(built):
+    idx, q = built
+    spec = SearchSpec(k=10, beam_width=32, quantized=True)
+    svc = AnnsService(idx, spec=spec, verify=True)
+    t = svc.search(q)
+    assert isinstance(t, SearchTicket) and isinstance(t, SearchResult)
+    assert t.n_hops.shape == (Q,) and (t.n_hops > 0).all()
+    assert svc.stats.mean_hops == pytest.approx(float(t.n_hops.mean()))
+    assert svc.stats.last_mean_hops == pytest.approx(float(t.n_hops.mean()))
+    # parity with the legacy-kwargs service
+    with pytest.warns(DeprecationWarning, match="SearchSpec"):
+        legacy = AnnsService(idx, k=10, beam_width=32, quantized=True)
+    t2 = legacy.search(q)
+    assert (t.ids == t2.ids).all() and t.generation == t2.generation
+    # spec + legacy tuning kwargs together is a config error
+    with pytest.raises(ValueError, match="not both"):
+        AnnsService(idx, spec=spec, beam_width=16)
+
+
+def test_service_search_many_pipelines_one_generation(built):
+    idx, q = built
+    svc = AnnsService(idx, spec=SearchSpec(k=10, beam_width=32),
+                      verify=True)
+    tickets = svc.search_many([q, q[: Q // 2], q])
+    assert len(tickets) == 3
+    assert len({t.generation for t in tickets}) == 1
+    ref = svc.search(q)
+    assert (tickets[0].ids == ref.ids).all()
+    assert svc.stats.n_searches == 4
+    # run() pipelines maximal consecutive search runs, order preserved
+    out = svc.run([("search", q), ("search", q[: Q // 2])])
+    assert (out[0].ids == ref.ids).all()
+    assert out[1].ids.shape == (Q // 2, 10)
+
+
+def test_service_run_consumes_stream_lazily(built):
+    """run() must execute ops as the stream yields them (generators /
+    unbounded queues), not materialize the whole stream first."""
+    idx, q = built
+    svc = AnnsService(idx, spec=SearchSpec(k=10, beam_width=32),
+                      verify=True)
+    executed = []
+
+    def stream():
+        yield ("insert", np.random.default_rng(1)
+               .normal(size=(8, D)).astype(np.float32))
+        # the insert above must have executed BEFORE the stream advances
+        executed.append(svc.stats.n_inserts)
+        yield ("search", q)
+        yield ("search", q[: Q // 2])
+
+    out = svc.run(stream())
+    assert executed == [1]
+    assert len(out) == 3
+    assert out[1].ids.shape == (Q, 10) and out[2].ids.shape == (Q // 2, 10)
+
+
+def test_service_per_call_kwarg_override_deprecated_but_working(built):
+    """The legacy per-call surface svc.search(q, beam_width=..) still
+    serves (derived sibling spec) with a DeprecationWarning."""
+    idx, q = built
+    svc = AnnsService(idx, spec=SearchSpec(k=10, beam_width=32))
+    with pytest.warns(DeprecationWarning, match="per-call"):
+        t = svc.search(q, beam_width=64)
+    ref = idx.searcher(SearchSpec(k=10, beam_width=64)).search(q)
+    assert (t.ids == np.asarray(ref.ids)).all()
+    # explicit None = "keep the service default" (old surface): served
+    # without warning, no sibling spec derived
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t2 = svc.search(q, beam_width=None)
+    assert (t2.ids == np.asarray(svc.search(q).ids)).all()
+
+
+def test_service_invalid_spec_fails_at_construction(built):
+    idx, _ = built
+    with pytest.raises(ValueError):
+        AnnsService(idx, spec=SearchSpec(k=0))
+    codeless = JasperIndex(D, capacity=64, construction=SMALL)
+    with pytest.raises(ValueError, match="rabitq"):
+        AnnsService(codeless, spec=SearchSpec(quantized=True))
+
+
+# ------------------------------------------------------- shared recall
+def test_recall_honors_full_spec(built):
+    """The deduped recall helper measures the configuration actually
+    served — use_kernels/expand included (the old copies ignored them)."""
+    idx, q = built
+    spec = SearchSpec(k=10, beam_width=48, quantized=True,
+                      use_kernels=True, expand=2)
+    r = idx.recall(q, spec=spec)
+    assert 0.5 < r <= 1.0
+    # kwargs form routes through the same helper
+    r2 = idx.recall(q, k=10, beam_width=48, quantized=True,
+                    use_kernels=True, expand=2)
+    assert r == r2
