@@ -47,6 +47,19 @@ def sweep_specs(k: int, quantized_available: bool) -> list[tuple[str, SearchSpec
                    SearchSpec(k=k, beam_width=b, quantized=True,
                               use_kernels=True))
                   for b in beams]
+        # fused lanes (ISSUE 6): one launch per hop / per search, and the
+        # narrowing beam-schedule at the widest beam (wide early hops for
+        # recall, narrow late hops for traffic)
+        b = max(beams)
+        specs += [(f"rabitq_hop/beam{b}",
+                   SearchSpec(k=k, beam_width=b, quantized=True,
+                              fusion="hop")),
+                  (f"rabitq_mega/beam{b}",
+                   SearchSpec(k=k, beam_width=b, quantized=True,
+                              fusion="megakernel")),
+                  (f"rabitq_mega_sched/beam{b}",
+                   SearchSpec(k=k, quantized=True, fusion="megakernel",
+                              beam_schedule=(b, b // 2, max(b // 4, k))))]
     return specs
 
 
@@ -91,6 +104,9 @@ def run(csv: Csv, datasets=("bigann", "deep", "gist"), k: int = 10,
                 "dataset": name, "path": path, "beam": int(beam), "k": k,
                 "dims": d,
                 "bits": BITS if spec.quantized else None,
+                "fusion": spec.fusion,
+                "beam_schedule": (list(spec.beam_schedule)
+                                  if spec.beam_schedule else None),
                 "spec": spec.to_dict(),
                 "bytes_per_candidate": bpc,
                 "us_per_batch": round(us, 1),

@@ -40,6 +40,13 @@ case "$mode" in
     # verify the id-translation + zero-tombstoned-ids contracts
     XLA_FLAGS="--xla_force_host_platform_device_count=8 ${XLA_FLAGS:-}" \
       python examples/streaming_updates.py --reshard --quick
+    # fused-search lane (ISSUE 6): the per-hop fused kernel and the
+    # whole-search megakernel through interpret-mode Pallas on CPU —
+    # kernel-vs-oracle parity, beam-schedule properties, and the fused
+    # single-shard conformance cells (the 4-shard fused cells run in
+    # full tier-1 under the multidevice marker)
+    python -m pytest -q -k "fused or schedule" \
+      tests/test_kernels.py tests/test_properties.py
     ;;
   *)
     echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2

@@ -137,13 +137,55 @@ MERGE_FNS = {
 }
 
 
+def expand_schedule(beam_schedule, beam_width: int, max_iters: int
+                    ) -> tuple[int, ...]:
+    """Static per-hop frontier widths, one entry per iteration.
+
+    Hop t runs at width schedule[min(t, len-1)] — a short schedule's last
+    entry extends to the full budget. None means constant beam_width.
+    This is THE schedule semantics; the jnp loop, the fused kernels, and
+    the ref oracle all expand through here.
+    """
+    if beam_schedule is None:
+        return (beam_width,) * max_iters
+    sched = tuple(int(w) for w in beam_schedule)
+    return tuple(sched[min(t, len(sched) - 1)] for t in range(max_iters))
+
+
+def apply_beam_width(f_ids, f_dists, f_vis, w):
+    """Narrow a merged frontier to `w` live slots (positions >= w become
+    empty: id -1, dist +inf, unvisited). `w` may be traced (a per-hop
+    schedule entry); with w == L this is an exact no-op — schedule
+    (B,...,B) is bitwise identical to a constant beam."""
+    keep = jnp.arange(f_ids.shape[1])[None, :] < w
+    return (jnp.where(keep, f_ids, -1),
+            jnp.where(keep, f_dists, _INF),
+            jnp.where(keep, f_vis, False))
+
+
+def finalize_frontier(f_ids, f_dists, tombstone_bits):
+    """Shared search epilogue: drop tombstoned entries to the (+inf, -1)
+    tail and mask unconverged +inf padding back to -1 ids. Every search
+    path — fused or not — finishes through this one function, so the
+    'never return a deleted id' invariant has a single definition."""
+    if tombstone_bits is not None:
+        from repro.core.mutations import bitmap_gather  # lazy: no cycle
+        dead = bitmap_gather(tombstone_bits, f_ids)
+        f_dists = jnp.where(dead, _INF, f_dists)
+        f_dists, f_ids = jax.lax.sort((f_dists, f_ids), dimension=1,
+                                      is_stable=True, num_keys=1)
+    f_ids = jnp.where(jnp.isfinite(f_dists), f_ids, -1)
+    return f_ids, f_dists
+
+
 def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None = None,
                 *, beam_width: int, max_iters: int,
                 fixed_trip: bool = False,
                 expand_per_iter: int = 1,
                 merge_strategy: str = "topk",
                 tombstone_bits: Array | None = None,
-                traverse_deleted: bool = True) -> BeamSearchResult:
+                traverse_deleted: bool = True,
+                beam_schedule: tuple | None = None) -> BeamSearchResult:
     """Run greedy beam search for a batch of queries.
 
     graph:      VamanaGraph (read-only snapshot — purity gives ParlayANN's
@@ -173,6 +215,11 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 masks them during scoring as well (fused into self-masking
                 kernel epilogues), the cheaper mode once `consolidate` has
                 repaired the graph around them.
+    beam_schedule: optional static per-hop frontier widths (wide early,
+                narrow late) — hop t merges at full width then narrows to
+                `schedule[min(t, len-1)]` slots (see expand_schedule /
+                apply_beam_width). None = constant beam_width, and a
+                constant schedule (B,...,B) is bitwise identical to None.
     """
     if merge_strategy not in MERGE_STRATEGIES:
         raise ValueError(
@@ -192,6 +239,11 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
     n_valid = graph.n_valid
     degree = adj.shape[1]
     e_exp = expand_per_iter
+    # per-hop width table, indexed by the (traced) iteration counter; None
+    # skips the narrowing pass entirely so existing plans are unchanged
+    sched = (None if beam_schedule is None else
+             jnp.asarray(expand_schedule(beam_schedule, beam_width,
+                                         max_iters), jnp.int32))
 
     # Infer Q by probing score_fn shape statically via the medoid column.
     if num_queries is None:
@@ -273,26 +325,34 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
 
         f_ids, f_dists, f_vis = merge(
             f_ids, f_dists, f_vis, nbrs, d, beam_width=l_width)
+        if sched is not None:
+            # narrow only rows that expanded work this hop: a converged
+            # row's frontier is frozen, so its results don't depend on how
+            # long the rest of the batch keeps iterating (and the fused
+            # megakernel — which retires converged blocks early — agrees)
+            ni, nd, nv = apply_beam_width(f_ids, f_dists, f_vis, sched[it])
+            act = jnp.any(pick_valid, axis=1)[:, None]
+            f_ids = jnp.where(act, ni, f_ids)
+            f_dists = jnp.where(act, nd, f_dists)
+            f_vis = jnp.where(act, nv, f_vis)
         return (it + 1, f_ids, f_dists, f_vis, vlog, vdlog, hops)
 
     if fixed_trip:
+        # convergence guard: a converged frontier skips the body, so the
+        # fixed-trip lowering is bit-identical to the while_loop — same
+        # number of body applications, same n_hops accounting (hops count
+        # expansions actually performed, never loop trips)
         def fbody(_, st):
-            return body(st)
+            return jax.lax.cond(has_work(st), body, lambda s: s, st)
         state = jax.lax.fori_loop(0, max_iters, fbody, state)
     else:
         state = jax.lax.while_loop(cond, body, state)
 
     _, f_ids, f_dists, f_vis, vlog, vdlog, hops = state
-    if tombstone_bits is not None:
-        # returnability filter: tombstoned frontier entries drop to the
-        # tail as (+inf, -1) — searches NEVER return deleted ids, whatever
-        # the traversal mode was
-        dead = bitmap_gather(tombstone_bits, f_ids)
-        f_dists = jnp.where(dead, _INF, f_dists)
-        f_dists, f_ids = jax.lax.sort((f_dists, f_ids), dimension=1,
-                                      is_stable=True, num_keys=1)
-    # mask unconverged +inf padding back to -1 ids
-    f_ids = jnp.where(jnp.isfinite(f_dists), f_ids, -1)
+    # returnability filter: tombstoned frontier entries drop to the tail as
+    # (+inf, -1) — searches NEVER return deleted ids, whatever the
+    # traversal mode was
+    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
     return BeamSearchResult(frontier_ids=f_ids, frontier_dists=f_dists,
                             visited_ids=vlog, visited_dists=vdlog, n_hops=hops)
 
@@ -350,6 +410,7 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                           merge_strategy: str = "topk",
                           tombstone_bits: Array | None = None,
                           traverse_deleted: bool = True,
+                          beam_schedule: tuple | None = None,
                           interpret: bool | None = None) -> BeamSearchResult:
     """Beam search on RaBitQ estimated distances (Jasper RaBitQ).
 
@@ -380,7 +441,8 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                       fixed_trip=fixed_trip, expand_per_iter=expand_per_iter,
                       merge_strategy=merge_strategy,
                       tombstone_bits=tombstone_bits,
-                      traverse_deleted=traverse_deleted)
+                      traverse_deleted=traverse_deleted,
+                      beam_schedule=beam_schedule)
     if rerank_score_fn is None:
         return res
     exact_d = rerank_score_fn(res.frontier_ids)

@@ -249,6 +249,39 @@ def core_search(core: IndexCore, queries: Array, *, spec,
     k = spec.k
     tomb = core.mut.tombstone_bits if filter_tombstones else None
     graph = core.graph
+    if spec.fusion != "none":
+        # fused execution: ONE Pallas launch per hop ("hop") or per search
+        # ("megakernel") — gather + score + liveness + top-L merge fused,
+        # frontier state on-chip. Same shapes in/out as the unfused loop,
+        # so the rerank / k-slice epilogue below is shared verbatim.
+        from repro.kernels.search_step.ops import fused_beam_search
+        if spec.quantized:
+            if core.codes is None:
+                raise ValueError("core has no quantized codes")
+            rq = rabitq_preprocess_query(core.rq_params, queries)
+            res = fused_beam_search(
+                graph, mode=spec.fusion, beam_width=spec.beam_width,
+                max_iters=spec.max_iters, beam_schedule=spec.beam_schedule,
+                codes=core.codes, rq_query=rq, tombstone_bits=tomb,
+                traverse_deleted=spec.traverse_deleted)
+            if spec.rerank:
+                exact_d = rerank_frontier(
+                    core.vectors, core.vec_sqnorm, queries,
+                    res.frontier_ids, tile_q=spec.rerank_tile,
+                    use_kernels=spec.use_kernels)
+                sd, si = jax.lax.sort((exact_d, res.frontier_ids),
+                                      dimension=1, is_stable=True,
+                                      num_keys=1)
+                si = jnp.where(jnp.isfinite(sd), si, -1)
+                return si[:, :k], sd[:, :k], res.n_hops
+        else:
+            res = fused_beam_search(
+                graph, mode=spec.fusion, beam_width=spec.beam_width,
+                max_iters=spec.max_iters, beam_schedule=spec.beam_schedule,
+                queries=queries, vectors=core.vectors,
+                vec_sqnorm=core.vec_sqnorm, tombstone_bits=tomb,
+                traverse_deleted=spec.traverse_deleted)
+        return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
     if spec.quantized:
         if core.codes is None:
             raise ValueError("core has no quantized codes")
@@ -257,7 +290,8 @@ def core_search(core: IndexCore, queries: Array, *, spec,
             graph, core.codes, rq, beam_width=spec.beam_width,
             max_iters=spec.max_iters, expand_per_iter=spec.expand,
             use_kernels=spec.use_kernels, merge_strategy=spec.merge,
-            tombstone_bits=tomb, traverse_deleted=spec.traverse_deleted)
+            tombstone_bits=tomb, traverse_deleted=spec.traverse_deleted,
+            beam_schedule=spec.beam_schedule)
         if spec.rerank:
             exact_d = rerank_frontier(
                 core.vectors, core.vec_sqnorm, queries, res.frontier_ids,
@@ -281,7 +315,8 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                           expand_per_iter=spec.expand,
                           merge_strategy=spec.merge,
                           tombstone_bits=tomb,
-                          traverse_deleted=spec.traverse_deleted)
+                          traverse_deleted=spec.traverse_deleted,
+                          beam_schedule=spec.beam_schedule)
     return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
 
 

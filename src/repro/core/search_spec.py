@@ -51,6 +51,8 @@ from repro.core.beam_search import MERGE_STRATEGIES
 
 SPEC_VERSION = 1
 
+FUSION_MODES = ("none", "hop", "megakernel")
+
 
 def check_quantized_backend(index, *, need_codes: bool = True) -> None:
     """THE quantized-capability check: the index must be a RaBitQ backend
@@ -105,6 +107,13 @@ class SearchSpec:
     traverse_deleted: tombstone policy — walk through tombstoned rows
                   (connectivity-preserving default) or mask them inside the
                   scoring epilogues. Either way they are never returned.
+    fusion:       search-loop fusion level: "none" (kernel-per-step jnp
+                  loop), "hop" (ONE fused Pallas launch per hop: gather +
+                  score + merge), or "megakernel" (the whole beam loop in
+                  ONE persistent launch, frontier resident on-chip).
+    beam_schedule: optional per-hop frontier widths (wide early, narrow
+                  late). Hop t uses schedule[min(t, len-1)]; beam_width
+                  defaults to max(schedule). None = constant beam_width.
     """
 
     k: int = 10
@@ -117,6 +126,8 @@ class SearchSpec:
     use_kernels: bool = False
     merge: str = "topk"
     traverse_deleted: bool = True
+    fusion: str = "none"
+    beam_schedule: tuple | None = None
 
     # ------------------------------------------------------------- resolve
     def resolve(self, index: Any = None) -> "ResolvedSearchSpec":
@@ -134,8 +145,35 @@ class SearchSpec:
             raise ValueError(
                 f"merge must be one of {MERGE_STRATEGIES}, "
                 f"got {self.merge!r}")
-        bw = (max(k, 32) if self.beam_width is None
+        if self.fusion not in FUSION_MODES:
+            raise ValueError(
+                f"fusion must be one of {FUSION_MODES}, got {self.fusion!r}")
+        schedule = self.beam_schedule
+        if schedule is not None:
+            try:
+                schedule = tuple(_as_int("beam_schedule entries", w, floor=1)
+                                 for w in schedule)
+            except TypeError:
+                raise ValueError(
+                    f"beam_schedule must be a sequence of ints, "
+                    f"got {self.beam_schedule!r}") from None
+            if not schedule:
+                raise ValueError("beam_schedule must be non-empty or None")
+            if min(schedule) < k:
+                raise ValueError(
+                    f"every beam_schedule entry must be >= k={k}, got "
+                    f"{schedule} (a hop narrower than k cannot carry k "
+                    "results to the output)")
+        bw = (max(schedule) if schedule is not None
+              else max(k, 32) if self.beam_width is None
               else _as_int("beam_width", self.beam_width, floor=1))
+        if self.beam_width is not None and schedule is not None:
+            bw = _as_int("beam_width", self.beam_width, floor=1)
+            if max(schedule) > bw:
+                raise ValueError(
+                    f"beam_schedule entries must be <= beam_width={bw}, "
+                    f"got {schedule} (the frontier buffer is beam_width "
+                    "wide; a hop cannot be wider than the buffer)")
         if bw < k:
             raise ValueError(
                 f"beam_width must be an int >= k={k}, got {bw!r} "
@@ -152,11 +190,24 @@ class SearchSpec:
         rerank = bool(self.rerank) if self.quantized else True
         if not (self.quantized and rerank):
             rerank_tile = 512
+        merge = self.merge
+        if self.fusion != "none":
+            if expand != 1:
+                raise ValueError(
+                    f"fusion={self.fusion!r} supports expand=1 only "
+                    f"(got expand={expand}): the fused kernels expand one "
+                    "frontier node per hop — use fusion='none' for "
+                    "multi-expansion")
+            # the fused kernels carry their own min-extraction merge; the
+            # merge field is dead there, so normalize it and let fused
+            # specs that differ only in merge share one compiled plan
+            merge = "topk"
         return ResolvedSearchSpec(
             k=k, beam_width=bw, max_iters=mi, expand=expand,
             quantized=bool(self.quantized), rerank=rerank,
             rerank_tile=rerank_tile, use_kernels=bool(self.use_kernels),
-            merge=self.merge, traverse_deleted=bool(self.traverse_deleted))
+            merge=merge, traverse_deleted=bool(self.traverse_deleted),
+            fusion=self.fusion, beam_schedule=schedule)
 
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:
@@ -176,6 +227,10 @@ class SearchSpec:
         unknown = set(d) - known
         if unknown:
             raise ValueError(f"unknown SearchSpec fields: {sorted(unknown)}")
+        if d.get("beam_schedule") is not None:
+            # JSON round-trips tuples as lists; the spec form is a tuple
+            # (hashable — it is part of the plan-cache key)
+            d["beam_schedule"] = tuple(d["beam_schedule"])
         return cls(**d)
 
     @classmethod
@@ -206,6 +261,8 @@ class ResolvedSearchSpec:
     use_kernels: bool
     merge: str
     traverse_deleted: bool
+    fusion: str
+    beam_schedule: tuple | None
 
     def to_spec(self) -> SearchSpec:
         return SearchSpec(**asdict(self))

@@ -1,0 +1,13 @@
+"""Fused beam-search kernels: one launch per hop, or one per search.
+
+ops/ref/kernel triplet (repo kernel idiom):
+
+  * `ref.py`    — pure-jnp oracle, bit-exact vs the unfused
+                  `core.beam_search` merge="topk" path;
+  * `search_step_kernel.py` — the Pallas kernels: the fused per-hop
+                  kernel (gather + score + merge in ONE launch) and the
+                  persistent whole-search megakernel (the entire beam
+                  loop on-chip);
+  * `ops.py`    — public wrappers (`fused_beam_search`) handling padding,
+                  interpret auto-detection, and the hop-loop driver.
+"""

@@ -1,0 +1,131 @@
+"""Reference oracle for the fused search kernels (pure jnp).
+
+This is the testing contract of `kernels/search_step` (docs/megakernel.md):
+the oracle re-states the per-hop dataflow the kernels implement — pick
+first unvisited, gather adjacency, validity/liveness epilogue, score,
+partial top-L merge, per-hop beam narrowing — using the SAME jnp ops as
+the unfused `core.beam_search` loop with `merge="topk"` and `expand=1`.
+
+Two parity edges hang off it:
+
+  * oracle vs `beam_search(merge="topk")`: BIT-EXACT (same ops, same
+    order) — asserted in tests/test_kernels.py;
+  * Pallas kernels vs oracle: tolerance-bounded (the kernels reduce on
+    the MXU in a different association order) — same tolerances as every
+    other kernel/jnp pair in the conformance suite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.beam_search import (
+    apply_beam_width,
+    expand_schedule,
+    finalize_frontier,
+    merge_frontier_topk,
+)
+
+Array = jax.Array
+
+_INF = float("inf")
+
+
+def init_frontier(medoid: Array, d0: Array, num_queries: int,
+                  beam_width: int) -> tuple[Array, Array, Array]:
+    """The entry-point frontier every search path starts from: medoid in
+    slot 0 (scored), the rest empty. d0: (Q, 1) medoid distances."""
+    f_ids = jnp.full((num_queries, beam_width), -1, dtype=jnp.int32)
+    f_ids = f_ids.at[:, 0].set(medoid)
+    f_dists = jnp.full((num_queries, beam_width), _INF, dtype=jnp.float32)
+    f_dists = f_dists.at[:, :1].set(d0)
+    f_vis = jnp.zeros((num_queries, beam_width), dtype=jnp.bool_)
+    return f_ids, f_dists, f_vis
+
+
+def fused_hop_ref(f_ids, f_dists, f_vis, *, score_fn, adjacency, n_valid,
+                  width, tombstone_bits=None):
+    """ONE hop of the fused dataflow, pure jnp.
+
+    Mirrors `beam_search`'s body at expand=1 exactly: pick the first
+    unvisited frontier slot, expand its adjacency row, drop out-of-range /
+    duplicate / (exclude-mode) tombstoned candidates to id -1, score,
+    top-L merge, then narrow rows that expanded work to `width` slots.
+    Returns (f_ids, f_dists, f_vis, pick_valid).
+    """
+    l_width = f_ids.shape[1]
+    unvis = (f_ids >= 0) & ~f_vis
+    order = jnp.where(unvis, jnp.arange(l_width)[None, :], l_width)
+    pick = jnp.min(order, axis=1)                       # (Q,)
+    pick_valid = pick < l_width
+    safe_pos = jnp.minimum(pick, l_width - 1)
+    cur = jnp.take_along_axis(f_ids, safe_pos[:, None], axis=1)[:, 0]
+    cur = jnp.where(pick_valid, cur, -1)
+
+    hit = jnp.arange(l_width)[None, :] == safe_pos[:, None]
+    f_vis = f_vis | (hit & unvis & pick_valid[:, None])
+
+    nbrs = adjacency[jnp.maximum(cur, 0)]               # (Q, R)
+    nbrs = jnp.where((cur >= 0)[:, None], nbrs, -1)
+    in_range = (nbrs >= 0) & (nbrs < n_valid)
+    dup = jnp.any(nbrs[:, :, None] == f_ids[:, None, :], axis=2)
+    valid = in_range & ~dup
+    if tombstone_bits is not None:
+        from repro.core.mutations import bitmap_gather
+        valid &= ~bitmap_gather(tombstone_bits, nbrs)
+    nbrs = jnp.where(valid, nbrs, -1)
+
+    d = score_fn(nbrs)                                  # (Q, R)
+    d = jnp.where(valid, d, _INF)
+
+    f_ids, f_dists, f_vis = merge_frontier_topk(
+        f_ids, f_dists, f_vis, nbrs, d, beam_width=l_width)
+    # per-hop narrowing applies only to rows that expanded work this hop —
+    # a converged row's frontier is frozen (so early-converged queries see
+    # identical results whether the batch keeps iterating or not)
+    ni, nd, nv = apply_beam_width(f_ids, f_dists, f_vis, width)
+    act = pick_valid[:, None]
+    f_ids = jnp.where(act, ni, f_ids)
+    f_dists = jnp.where(act, nd, f_dists)
+    f_vis = jnp.where(act, nv, f_vis)
+    return f_ids, f_dists, f_vis, pick_valid
+
+
+def fused_search_ref(adjacency, n_valid, medoid, score_fn, num_queries, *,
+                     beam_width: int, max_iters: int,
+                     beam_schedule: tuple | None = None,
+                     tombstone_bits=None, traverse_deleted: bool = True
+                     ) -> tuple[Array, Array, Array]:
+    """Whole-search oracle: the megakernel's semantics in pure jnp.
+
+    Returns (frontier_ids (Q, L), frontier_dists (Q, L), n_hops (Q,)),
+    finalized (tombstone returnability filter + -1 masking applied) — the
+    same contract `fused_beam_search` and `beam_search` ship.
+    """
+    sched = jnp.asarray(
+        expand_schedule(beam_schedule, beam_width, max_iters), jnp.int32)
+    exclude = tombstone_bits is not None and not traverse_deleted
+    body_tomb = tombstone_bits if exclude else None
+
+    d0 = score_fn(jnp.full((num_queries, 1), medoid, jnp.int32))
+    f_ids, f_dists, f_vis = init_frontier(medoid, d0, num_queries,
+                                          beam_width)
+    hops = jnp.zeros((num_queries,), jnp.int32)
+
+    def cond(st):
+        it, f_ids, _, f_vis, _ = st
+        return (it < max_iters) & jnp.any((f_ids >= 0) & ~f_vis)
+
+    def body(st):
+        it, f_ids, f_dists, f_vis, hops = st
+        f_ids, f_dists, f_vis, pv = fused_hop_ref(
+            f_ids, f_dists, f_vis, score_fn=score_fn, adjacency=adjacency,
+            n_valid=n_valid, width=sched[it], tombstone_bits=body_tomb)
+        return (it + 1, f_ids, f_dists, f_vis,
+                hops + pv.astype(jnp.int32))
+
+    _, f_ids, f_dists, _, hops = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), f_ids, f_dists, f_vis, hops))
+    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
+    return f_ids, f_dists, hops

@@ -1,0 +1,309 @@
+"""Fused per-hop search kernel + persistent whole-search megakernel.
+
+The paper's headline utilization (§6, contribution 3) comes from a greedy
+search kernel that keeps the frontier on-chip and fuses traversal,
+distance estimation, and candidate maintenance into one launch. The TPU
+translation (docs/megakernel.md):
+
+  * grid = query blocks (the GPU one-block-per-query analogue — here a
+    (TQ, ...) tile of queries advances together, vectorized on the VPU);
+  * the frontier (ids / dists / visited) lives in VMEM — as pallas values
+    inside the per-hop kernel, as VMEM scratch across hops inside the
+    megakernel: only the final top-L and per-query hop counts leave chip;
+  * adjacency rows, candidate rows (packed RaBitQ codes or f32 vectors),
+    per-row metadata, and tombstone bytes stay in `pltpu.ANY` memory and
+    are gathered per hop with dynamic row loads (production TPU would
+    double-buffer these through `make_async_copy` DMA; the sequential
+    loads are the interpreter-verified form);
+  * scoring reuses the rabitq_dot unpack + estimator math on the MXU
+    (one (TQ, R, D) x (TQ, D) batch dot per hop);
+  * the merge is the kernels/topk min-extraction loop (L argmin+mask
+    passes, first-occurrence ties via the iota trick) — tie semantics
+    identical to `lax.top_k`, so the fused frontier matches the unfused
+    merge="topk" path;
+  * per-hop beam schedules ride in SMEM: hop t narrows rows that expanded
+    work to sched[t] slots after the merge.
+
+One kernel body (`_hop_update`) is traced into both kernels; the per-hop
+kernel runs it once per launch, the megakernel loops it under
+`fori_loop` + `pl.when(has_work)` so converged blocks retire early while
+the lowering stays fixed-trip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.rabitq_dot.rabitq_kernel import _unpack_tile
+
+Array = jax.Array
+
+_INF = float("inf")  # python float: a jnp scalar here would be a captured
+#                      constant inside the kernel closures (pallas rejects)
+
+
+def _gather_rows(ref, ids: Array, out_dtype=None) -> Array:
+    """Sequential dynamic row gather: (n,) traced ids -> (n, W) values.
+
+    `ref` is a full-array (cap, W) ref in ANY memory; ids are clamped to
+    [0, cap-1] — callers mask invalid rows downstream (the same clamp-
+    then-mask contract every scorer in the repo uses).
+    """
+    n = ids.shape[0]
+    cap, w = ref.shape
+    dtype = out_dtype or ref.dtype
+
+    def body(r, acc):
+        idx = jax.lax.dynamic_index_in_dim(ids, r, keepdims=False)
+        idx = jnp.clip(idx, 0, cap - 1)
+        row = ref[pl.ds(idx, 1), :].astype(dtype)
+        return jax.lax.dynamic_update_slice(acc, row, (r, 0))
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros((n, w), dtype))
+
+
+def _merge_topl(all_i: Array, all_d: Array, all_v: Array, l_width: int):
+    """Partial top-L via min-extraction (kernels/topk idiom): L sequential
+    argmin+mask passes, first-occurrence ties via the column iota — the
+    extraction order equals a stable ascending sort by distance, i.e. the
+    exact tie semantics of `lax.top_k(-d, L)` in the unfused merge."""
+    tq, c = all_d.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (tq, c), 1)
+
+    def step(s, carry):
+        work, oi, od, ov = carry
+        m = jnp.min(work, axis=1, keepdims=True)               # (TQ, 1)
+        first = jnp.min(jnp.where(work == m, col, c), axis=1,
+                        keepdims=True)
+        sel = col == first
+        pick_i = jnp.sum(jnp.where(sel, all_i, 0), axis=1, keepdims=True)
+        pick_v = jnp.sum(jnp.where(sel, all_v, 0), axis=1, keepdims=True)
+        oi = jax.lax.dynamic_update_slice(oi, pick_i, (0, s))
+        od = jax.lax.dynamic_update_slice(od, m, (0, s))
+        ov = jax.lax.dynamic_update_slice(ov, pick_v, (0, s))
+        return jnp.where(sel, _INF, work), oi, od, ov
+
+    init = (all_d,
+            jnp.full((tq, l_width), -1, jnp.int32),
+            jnp.full((tq, l_width), jnp.inf, jnp.float32),
+            jnp.zeros((tq, l_width), jnp.int32))
+    _, oi, od, ov = jax.lax.fori_loop(0, l_width, step, init)
+    return oi, od, ov
+
+
+def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
+                adj_ref, data_ref, meta_ref, tomb_ref, *,
+                quantized: bool, bits: int, use_tomb: bool):
+    """One fused hop over a (TQ, L) frontier block — pure values in/out,
+    ANY-memory refs for the gathers. Shared by both kernels.
+
+    q/qa/qb: quantized -> (q_rot, query_add, query_sumq);
+             exact     -> (queries, |q|^2, unused).
+    Returns (f_ids, f_dists, f_vis, pick_valid)."""
+    tq, l_width = f_ids.shape
+    degree = adj_ref.shape[1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (tq, l_width), 1)
+
+    # ---- pick: first unvisited slot (frontier is distance-sorted)
+    unvis = (f_ids >= 0) & (f_vis == 0)
+    order = jnp.where(unvis, col, l_width)
+    pick = jnp.min(order, axis=1)                          # (TQ,)
+    pick_valid = pick < l_width
+    safe_pos = jnp.minimum(pick, l_width - 1)
+    sel = col == safe_pos[:, None]
+    cur = jnp.sum(jnp.where(sel, f_ids, 0), axis=1)        # one-hot select
+    cur = jnp.where(pick_valid, cur, -1)
+    f_vis = jnp.where(sel & unvis & pick_valid[:, None], 1, f_vis)
+
+    # ---- expand: gather the picked nodes' adjacency rows
+    nbrs = _gather_rows(adj_ref, cur)                      # (TQ, R)
+    nbrs = jnp.where((cur >= 0)[:, None], nbrs, -1)
+    in_range = (nbrs >= 0) & (nbrs < nvalid)
+    dup = jnp.any(nbrs[:, :, None] == f_ids[:, None, :], axis=2)
+    valid = in_range & ~dup
+    flat = nbrs.reshape(tq * degree)
+    if use_tomb:
+        # exclude-mode liveness: one byte gather per candidate, bit test
+        # fused right here (never a dense bitmap unpack)
+        byte = _gather_rows(tomb_ref, flat >> 3, jnp.int32)
+        bit = (byte.reshape(tq, degree)
+               >> (jnp.maximum(nbrs, 0) & 7)) & 1
+        valid &= bit == 0
+
+    # ---- score: candidate rows gathered once, MXU batch dot
+    rows = _gather_rows(data_ref, flat)
+    meta = _gather_rows(meta_ref, flat, jnp.float32)
+    if quantized:
+        codes = _unpack_tile(rows, bits)                   # (TQ*R, D)
+        codes = codes.reshape(tq, degree, -1)
+        dot = jax.lax.dot_general(
+            codes, q, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)            # (TQ, R)
+        m = meta.reshape(tq, degree, 2)
+        d = m[..., 0] + qa + m[..., 1] * (dot - qb)
+    else:
+        cand = rows.astype(jnp.float32).reshape(tq, degree, -1)
+        dot = jax.lax.dot_general(
+            cand, q, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        d = qa - 2.0 * dot + meta.reshape(tq, degree)
+    d = jnp.maximum(d, 0.0)
+    c_ids = jnp.where(valid, nbrs, -1)
+    c_d = jnp.where(valid, d, _INF)
+
+    # ---- merge: partial top-L over frontier ++ candidates
+    all_i = jnp.concatenate([f_ids, c_ids], axis=1)
+    all_d = jnp.concatenate([f_dists, c_d], axis=1)
+    all_v = jnp.concatenate([f_vis, jnp.zeros((tq, degree), jnp.int32)],
+                            axis=1)
+    nfi, nfd, nfv = _merge_topl(all_i, all_d, all_v, l_width)
+
+    # ---- per-hop beam narrowing (rows that expanded work only)
+    keep = (col < width) | (~pick_valid)[:, None]
+    nfi = jnp.where(keep, nfi, -1)
+    nfd = jnp.where(keep, nfd, _INF)
+    nfv = jnp.where(keep, nfv, 0)
+    return nfi, nfd, nfv, pick_valid
+
+
+def _hop_kernel(w_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref, fd_ref,
+                fv_ref, adj_ref, data_ref, meta_ref, tomb_ref,
+                ofi_ref, ofd_ref, ofv_ref, oh_ref, *,
+                quantized: bool, bits: int, use_tomb: bool):
+    """Stage 1: ONE launch per hop — frontier in/out through VMEM blocks,
+    all gathers + scoring + merge fused inside."""
+    nfi, nfd, nfv, pv = _hop_update(
+        fi_ref[...], fd_ref[...], fv_ref[...], w_ref[0],
+        q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0],
+        adj_ref, data_ref, meta_ref, tomb_ref,
+        quantized=quantized, bits=bits, use_tomb=use_tomb)
+    ofi_ref[...] = nfi
+    ofd_ref[...] = nfd
+    ofv_ref[...] = nfv
+    oh_ref[...] = pv[:, None].astype(jnp.int32)
+
+
+def _mega_kernel(sched_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref,
+                 fd_ref, fv_ref, adj_ref, data_ref, meta_ref, tomb_ref,
+                 ofi_ref, ofd_ref, oh_ref, fi_s, fd_s, fv_s, h_s, *,
+                 quantized: bool, bits: int, use_tomb: bool,
+                 max_iters: int):
+    """Stage 2: the whole beam loop in ONE persistent launch.
+
+    Frontier ids/dists/visited and hop counters live in VMEM scratch
+    across hops; the fori_loop body is guarded by `pl.when(has_work)` so a
+    converged block retires into no-op trips (fixed-trip lowering, early
+    convergence — the same accounting contract as the unfused loop: hops
+    count expansions performed, never loop trips)."""
+    fi_s[...] = fi_ref[...]
+    fd_s[...] = fd_ref[...]
+    fv_s[...] = fv_ref[...]
+    h_s[...] = jnp.zeros_like(h_s)
+
+    def step(t, carry):
+        f_ids = fi_s[...]
+        f_vis = fv_s[...]
+        has = jnp.any((f_ids >= 0) & (f_vis == 0))
+
+        @pl.when(has)
+        def _():
+            nfi, nfd, nfv, pv = _hop_update(
+                f_ids, fd_s[...], f_vis, sched_ref[t],
+                q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0],
+                adj_ref, data_ref, meta_ref, tomb_ref,
+                quantized=quantized, bits=bits, use_tomb=use_tomb)
+            fi_s[...] = nfi
+            fd_s[...] = nfd
+            fv_s[...] = nfv
+            h_s[...] = h_s[...] + pv[:, None].astype(jnp.int32)
+
+        return carry
+
+    jax.lax.fori_loop(0, max_iters, step, 0)
+    ofi_ref[...] = fi_s[...]
+    ofd_ref[...] = fd_s[...]
+    oh_ref[...] = h_s[...]
+
+
+def _common_specs(block_q: int, d: int, l_width: int):
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    anys = pl.BlockSpec(memory_space=pltpu.ANY)
+    blk = lambda w: pl.BlockSpec((block_q, w), lambda i: (i, 0))  # noqa: E731
+    in_specs = [
+        smem,                    # schedule / width
+        smem,                    # n_valid
+        blk(d), blk(1), blk(1),  # q, qa, qb
+        blk(l_width), blk(l_width), blk(l_width),  # frontier in
+        anys, anys, anys, anys,  # adjacency, data, meta, tombstones
+    ]
+    return in_specs, blk
+
+
+def fused_hop_pallas(f_ids, f_dists, f_vis, width, q, qa, qb, adjacency,
+                     data, meta, tomb, n_valid, *, quantized: bool,
+                     bits: int, block_q: int = 8,
+                     interpret: bool = False):
+    """One fused hop. All (Q, ·) arrays pre-padded to block_q rows.
+    Returns (f_ids, f_dists, f_vis, hop_inc (Q, 1))."""
+    qn, l_width = f_ids.shape
+    d = q.shape[1]
+    in_specs, blk = _common_specs(block_q, d, l_width)
+    return pl.pallas_call(
+        functools.partial(_hop_kernel, quantized=quantized, bits=bits,
+                          use_tomb=tomb is not None),
+        grid=(qn // block_q,),
+        in_specs=in_specs,
+        out_specs=[blk(l_width), blk(l_width), blk(l_width), blk(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
+            jax.ShapeDtypeStruct((qn, l_width), jnp.float32),
+            jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
+            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(jnp.asarray(width, jnp.int32).reshape(1),
+      jnp.asarray(n_valid, jnp.int32).reshape(1),
+      q, qa, qb, f_ids, f_dists, f_vis, adjacency, data, meta,
+      tomb if tomb is not None else jnp.zeros((1, 1), jnp.uint8))
+
+
+def fused_search_pallas(f_ids, f_dists, f_vis, schedule, q, qa, qb,
+                        adjacency, data, meta, tomb, n_valid, *,
+                        quantized: bool, bits: int, max_iters: int,
+                        block_q: int = 8, interpret: bool = False):
+    """The megakernel: whole search, one launch. schedule: (max_iters,)
+    i32 per-hop widths. Returns (f_ids, f_dists, n_hops (Q, 1))."""
+    qn, l_width = f_ids.shape
+    d = q.shape[1]
+    degree = adjacency.shape[1]
+    in_specs, blk = _common_specs(block_q, d, l_width)
+    return pl.pallas_call(
+        functools.partial(_mega_kernel, quantized=quantized, bits=bits,
+                          use_tomb=tomb is not None, max_iters=max_iters),
+        grid=(qn // block_q,),
+        in_specs=in_specs,
+        out_specs=[blk(l_width), blk(l_width), blk(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
+            jax.ShapeDtypeStruct((qn, l_width), jnp.float32),
+            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, l_width), jnp.int32),    # frontier ids
+            pltpu.VMEM((block_q, l_width), jnp.float32),  # frontier dists
+            pltpu.VMEM((block_q, l_width), jnp.int32),    # visited flags
+            pltpu.VMEM((block_q, 1), jnp.int32),          # hop counters
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(jnp.asarray(schedule, jnp.int32).reshape(-1),
+      jnp.asarray(n_valid, jnp.int32).reshape(1),
+      q, qa, qb, f_ids, f_dists, f_vis, adjacency, data, meta,
+      tomb if tomb is not None else jnp.zeros((1, 1), jnp.uint8))

@@ -23,6 +23,10 @@ Variants per dataset:
                    buffer), the paper's memory-footprint story
     rabitq_rerank  packed-code search + tiled exact rerank — f32 rows
                    resident, the recall-recovery configuration
+    exact_mega     exact search through the persistent whole-search
+                   megakernel (fusion="megakernel", ISSUE 6)
+    rabitq_mega    packed-code megakernel search, no rerank — the paper's
+                   fused-kernel + memory-footprint posture combined
     bruteforce     one matmul tile over all rows (roofline sanity anchor)
 
 Usage:
@@ -106,9 +110,11 @@ def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
     d = ds.dims + (1 if ds.metric == "mips" else 0)
     f32 = jnp.float32
 
-    if variant in ("exact", "exact_bf16", "rabitq", "rabitq_rerank"):
+    if variant in ("exact", "exact_bf16", "rabitq", "rabitq_rerank",
+                   "exact_mega", "rabitq_mega"):
         quantized = variant.startswith("rabitq")
         rerank = variant == "rabitq_rerank"
+        fusion = "megakernel" if variant.endswith("_mega") else "none"
         core = abstract_core(
             n_shards, cap, d,
             vec_dtype=jnp.bfloat16 if variant == "exact_bf16" else f32,
@@ -119,8 +125,9 @@ def lower_anns_cell(ds_name: str, variant: str, mesh, *, bits: int = 4,
         # the dry-run lowers the SAME resolved spec object the serving
         # driver compiles against — one configuration type, end to end
         search = SearchSpec(
-            k=K, beam_width=BEAM, max_iters=MAX_ITERS, expand=EXPAND,
-            quantized=quantized, rerank=rerank).resolve()
+            k=K, beam_width=BEAM, max_iters=MAX_ITERS,
+            expand=1 if fusion != "none" else EXPAND,
+            quantized=quantized, rerank=rerank, fusion=fusion).resolve()
         fn = sharded_search_fn(mesh, spec, core, id_stride=cap,
                                spec=search, filter_tombstones=True)
         queries = jax.ShapeDtypeStruct((n_queries, d), f32)

@@ -5,6 +5,11 @@ ONE parametrized matrix asserts result parity across
     {exact, quantized} x {jnp, Pallas kernel} x {tombstones off/on}
         x {1 shard, 4 shards}
 
+plus the fused-search lanes (FUSED_CELLS): {exact, quantized} x
+{fusion="hop", fusion="megakernel", merge="kernel"} x {tombstones
+off/on} x {1 shard, 4 shards}, each diffed against the unfused jnp cell
+of the same config.
+
 — the oracle grid future kernel work runs against: any new scoring /
 merge / epilogue kernel must keep every cell green before it lands.
 
@@ -66,6 +71,31 @@ CELLS = [
     for tombstones in (False, True)
 ]
 
+# fused-search lanes (ISSUE 6): the per-hop fused kernel and the
+# persistent megakernel, each asserted against the unfused jnp cell of
+# the same config at the standard kernel tolerances.  "merge-kernel" is
+# the unfused loop with the Pallas min-extraction merge — the third
+# merge strategy, promoted to a conformance lane of its own.
+FUSED_LANES = ("hop", "megakernel", "merge-kernel")
+FUSED_CELLS = [
+    pytest.param(quantized, lane, tombstones,
+                 id=f"{'rabitq' if quantized else 'exact'}-{lane}-"
+                    f"{'tomb' if tombstones else 'clean'}")
+    for quantized in (False, True)
+    for lane in FUSED_LANES
+    for tombstones in (False, True)
+]
+
+
+def _lane_spec(lane: str, quantized: bool):
+    """SearchSpec for a fused/merge conformance lane."""
+    from repro.core.search_spec import SearchSpec
+    if lane == "merge-kernel":
+        return SearchSpec(k=K, beam_width=BEAM, quantized=quantized,
+                          merge="kernel")
+    return SearchSpec(k=K, beam_width=BEAM, quantized=quantized,
+                      fusion=lane)
+
 
 def _dataset():
     rng = np.random.default_rng(SEED)
@@ -108,6 +138,11 @@ def single_results():
                                 use_kernels=kernels)
                 out[(quantized, kernels, tombstones)] = (
                     np.asarray(ids), np.asarray(dists))
+            for lane in FUSED_LANES:
+                res = idx.searcher(_lane_spec(lane, quantized)).search(
+                    queries)
+                out[(quantized, lane, tombstones)] = (
+                    np.asarray(res.ids), np.asarray(res.dists))
     return out
 
 
@@ -132,12 +167,39 @@ def test_single_shard_cell(single_results, quantized, kernels, tombstones):
                                    atol=KERNEL_DIST_ATOL)
 
 
+@pytest.mark.parametrize("quantized,lane,tombstones", FUSED_CELLS)
+def test_single_shard_fused_cell(single_results, quantized, lane,
+                                 tombstones):
+    ids, dists = single_results[(quantized, lane, tombstones)]
+    gt = single_results[("gt", tombstones)]
+    rec = _recall(ids, gt)
+    assert rec >= MIN_RECALL, (rec, MIN_RECALL)
+    # invariant: fused epilogues never surface a tombstoned id
+    if tombstones:
+        assert not np.isin(ids, single_results["dead"]).any()
+    # differential vs the unfused jnp cell of the same config
+    ids_ref, dists_ref = single_results[(quantized, False, tombstones)]
+    agree = float(np.mean(ids == ids_ref))
+    assert agree >= KERNEL_ID_AGREEMENT, agree
+    np.testing.assert_allclose(dists, dists_ref,
+                               rtol=KERNEL_DIST_RTOL,
+                               atol=KERNEL_DIST_ATOL)
+
+
 # -------------------------------------------------------------- 4 shards
 _SHARDED_SCRIPT = f"""
 import json, numpy as np, jax
 from repro.launch.mesh import make_mesh
 from repro.core.construction import ConstructionParams
 from repro.core.distributed import ShardedJasperIndex
+from repro.core.search_spec import SearchSpec
+
+def lane_spec(lane, quantized, K=None, BEAM=None):
+    if lane == "merge-kernel":
+        return SearchSpec(k=K, beam_width=BEAM, quantized=quantized,
+                          merge="kernel")
+    return SearchSpec(k=K, beam_width=BEAM, quantized=quantized,
+                      fusion=lane)
 
 SEED, N, D, Q, K, BEAM, N_DELETE = {SEED}, {N}, {D}, {Q}, {K}, {BEAM}, {N_DELETE}
 rng = np.random.default_rng(SEED)
@@ -174,6 +236,16 @@ for tombstones in (False, True):
                 recall=rec,
                 leaks=int(np.isin(ids, dead_set).sum()),
                 ids=ids.tolist(), dists=np.asarray(dists).tolist())
+        for lane in ("hop", "megakernel", "merge-kernel"):
+            res = idx.searcher(lane_spec(lane, quantized, K=K,
+                                         BEAM=BEAM)).search(queries)
+            ids = np.asarray(res.ids)
+            rec = float(np.mean([len(set(ids[i]) & set(gt[i])) / K
+                                 for i in range(Q)]))
+            cells[f"{{quantized}}-{{lane}}"] = dict(
+                recall=rec,
+                leaks=int(np.isin(ids, dead_set).sum()),
+                ids=ids.tolist(), dists=np.asarray(res.dists).tolist())
     report[str(tombstones)] = cells
 print("CONFORMANCE_JSON=" + json.dumps(report))
 """
@@ -217,6 +289,33 @@ def test_four_shard_cell(sharded_results, single_results,
                                    atol=KERNEL_DIST_ATOL)
     # shard-and-merge never loses recall vs one device at the same beam
     ids_single, _ = single_results[(quantized, kernels, tombstones)]
+    rec_single = _recall(ids_single, single_results[("gt", tombstones)])
+    assert cell["recall"] >= rec_single - SHARD_RECALL_SLACK, (
+        cell["recall"], rec_single)
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+@pytest.mark.parametrize("quantized,lane,tombstones", FUSED_CELLS)
+def test_four_shard_fused_cell(sharded_results, single_results,
+                               quantized, lane, tombstones):
+    """Fused lanes under shard_map: every row-shard runs the identical
+    megakernel / fused-hop / kernel-merge search, and the merged global
+    top-k must clear the same bars as the unfused sharded cells."""
+    cell = sharded_results[str(tombstones)][f"{quantized}-{lane}"]
+    assert cell["recall"] >= MIN_RECALL, cell["recall"]
+    assert cell["leaks"] == 0
+    # differential vs the unfused jnp sharded cell of the same config
+    ref = sharded_results[str(tombstones)][f"{quantized}-False"]
+    agree = float(np.mean(np.asarray(cell["ids"])
+                          == np.asarray(ref["ids"])))
+    assert agree >= KERNEL_ID_AGREEMENT, agree
+    np.testing.assert_allclose(np.asarray(cell["dists"]),
+                               np.asarray(ref["dists"]),
+                               rtol=KERNEL_DIST_RTOL,
+                               atol=KERNEL_DIST_ATOL)
+    # shard-and-merge never loses recall vs the single-device fused lane
+    ids_single, _ = single_results[(quantized, lane, tombstones)]
     rec_single = _recall(ids_single, single_results[("gt", tombstones)])
     assert cell["recall"] >= rec_single - SHARD_RECALL_SLACK, (
         cell["recall"], rec_single)

@@ -252,6 +252,30 @@ def test_fixed_trip_matches_while_loop(built_index):
     r2 = beam_search(idx.graph, score, 6, beam_width=16, max_iters=40,
                      fixed_trip=True)
     assert (np.asarray(r1.frontier_ids) == np.asarray(r2.frontier_ids)).all()
+    # hop ACCOUNTING parity too: the fori lowering's body is guarded by
+    # the same has_work predicate the while cond uses, so a converged
+    # query stops accruing hops — n_hops counts expansions performed,
+    # never loop trips (ISSUE 6 satellite)
+    assert (np.asarray(r1.n_hops) == np.asarray(r2.n_hops)).all()
+    assert (np.asarray(r1.frontier_dists)
+            == np.asarray(r2.frontier_dists)).all()
+
+
+def test_fixed_trip_hop_parity_multi_expand(built_index):
+    """Same fori/while n_hops parity under expand_per_iter > 1 — the
+    guard must compose with multi-expansion."""
+    idx, _ = built_index
+    q = randn(6, 48)
+    score = make_exact_scorer(idx.vectors, q, idx.graph.n_valid,
+                              idx.vec_sqnorm)
+    for e in (2, 4):
+        r1 = beam_search(idx.graph, score, 6, beam_width=16, max_iters=40,
+                         expand_per_iter=e)
+        r2 = beam_search(idx.graph, score, 6, beam_width=16, max_iters=40,
+                         expand_per_iter=e, fixed_trip=True)
+        assert (np.asarray(r1.n_hops) == np.asarray(r2.n_hops)).all()
+        assert (np.asarray(r1.frontier_ids)
+                == np.asarray(r2.frontier_ids)).all()
 
 
 def test_kernel_backed_search_matches_jnp(built_index):

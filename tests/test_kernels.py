@@ -306,3 +306,145 @@ def test_flash_attention_grads_vs_autodiff(hk, causal, window):
     for a, b_ in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
                                    rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------- fused search (ISSUE 6)
+@pytest.fixture(scope="module")
+def fused_index():
+    """Small built index shared by the fused-search kernel tests."""
+    from repro.core.construction import ConstructionParams
+    from repro.core.index import JasperIndex
+
+    rng = np.random.default_rng(321)
+    n, d, q = 384, 16, 16
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    queries = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                                max_iters=24, rev_cap=16, prune_chunk=256)
+    idx = JasperIndex(d, capacity=n, construction=params,
+                      quantization="rabitq", bits=4, seed=321)
+    idx.build(data)
+    return idx, queries
+
+
+@pytest.mark.parametrize("schedule", [None, (16, 12, 10)])
+def test_fused_search_ref_bitwise_vs_beam_search(fused_index, schedule):
+    """The oracle contract: fused_search_ref IS beam_search(merge="topk",
+    expand=1) — bit-exact ids, dists, AND hop counts, with or without a
+    beam schedule."""
+    from repro.core.beam_search import beam_search, make_exact_scorer
+    from repro.kernels.search_step.ref import fused_search_ref
+
+    idx, queries = fused_index
+    nq = queries.shape[0]
+    score = make_exact_scorer(idx.vectors, queries, idx.graph.n_valid,
+                              idx.vec_sqnorm)
+    res = beam_search(idx.graph, score, nq, beam_width=16, max_iters=40,
+                      merge_strategy="topk", beam_schedule=schedule)
+    ri, rd, rh = fused_search_ref(
+        idx.graph.adjacency, idx.graph.n_valid, idx.graph.medoid, score,
+        nq, beam_width=16, max_iters=40, beam_schedule=schedule)
+    assert (np.asarray(res.frontier_ids) == np.asarray(ri)).all()
+    assert (np.asarray(res.frontier_dists) == np.asarray(rd)).all()
+    assert (np.asarray(res.n_hops) == np.asarray(rh)).all()
+
+
+@pytest.mark.parametrize("quantized", [False, True],
+                         ids=["exact", "rabitq"])
+@pytest.mark.parametrize("mode", ["hop", "megakernel"])
+def test_fused_kernel_vs_ref_oracle(fused_index, quantized, mode):
+    """Both Pallas kernels vs the jnp oracle, whole-search: near-total id
+    agreement, dists allclose (MXU reduction order differs), hop counts
+    exactly equal."""
+    from repro.core.beam_search import make_exact_scorer, make_rabitq_scorer
+    from repro.core.rabitq import rabitq_preprocess_query
+    from repro.kernels.search_step.ops import fused_beam_search
+    from repro.kernels.search_step.ref import fused_search_ref
+
+    idx, queries = fused_index
+    nq = queries.shape[0]
+    if quantized:
+        rq = rabitq_preprocess_query(idx.rabitq_params, queries)
+        score = make_rabitq_scorer(idx.rabitq_codes, rq)
+        res = fused_beam_search(idx.graph, mode=mode, beam_width=16,
+                                max_iters=40, codes=idx.rabitq_codes,
+                                rq_query=rq)
+    else:
+        score = make_exact_scorer(idx.vectors, queries, idx.graph.n_valid,
+                                  idx.vec_sqnorm)
+        res = fused_beam_search(idx.graph, mode=mode, beam_width=16,
+                                max_iters=40, queries=queries,
+                                vectors=idx.vectors,
+                                vec_sqnorm=idx.vec_sqnorm)
+    ri, rd, rh = fused_search_ref(
+        idx.graph.adjacency, idx.graph.n_valid, idx.graph.medoid, score,
+        nq, beam_width=16, max_iters=40)
+    agree = float(np.mean(np.asarray(res.frontier_ids) == np.asarray(ri)))
+    assert agree >= 0.95, agree
+    fin = np.isfinite(np.asarray(rd))
+    np.testing.assert_allclose(np.asarray(res.frontier_dists)[fin],
+                               np.asarray(rd)[fin], rtol=1e-4, atol=1e-3)
+    assert (np.asarray(res.n_hops) == np.asarray(rh)).all()
+
+
+@pytest.mark.parametrize("mode", ["hop", "megakernel"])
+def test_fused_kernel_beam_schedule_vs_ref(fused_index, mode):
+    """One narrowing-schedule case straight at the kernel layer."""
+    from repro.core.beam_search import make_exact_scorer
+    from repro.kernels.search_step.ops import fused_beam_search
+    from repro.kernels.search_step.ref import fused_search_ref
+
+    idx, queries = fused_index
+    nq = queries.shape[0]
+    sched = (16, 12, 10)
+    score = make_exact_scorer(idx.vectors, queries, idx.graph.n_valid,
+                              idx.vec_sqnorm)
+    res = fused_beam_search(idx.graph, mode=mode, beam_width=16,
+                            max_iters=40, beam_schedule=sched,
+                            queries=queries, vectors=idx.vectors,
+                            vec_sqnorm=idx.vec_sqnorm)
+    ri, rd, rh = fused_search_ref(
+        idx.graph.adjacency, idx.graph.n_valid, idx.graph.medoid, score,
+        nq, beam_width=16, max_iters=40, beam_schedule=sched)
+    agree = float(np.mean(np.asarray(res.frontier_ids) == np.asarray(ri)))
+    assert agree >= 0.95, agree
+    assert (np.asarray(res.n_hops) == np.asarray(rh)).all()
+
+
+@pytest.mark.parametrize("traverse", [False, True],
+                         ids=["exclude", "traverse"])
+def test_fused_kernel_tombstones_vs_ref(fused_index, traverse):
+    """Tombstones through the kernels: exclude mode gathers liveness bytes
+    in-kernel, traverse mode filters only the final frontier — both must
+    match the oracle and never return a deleted id."""
+    from repro.core.beam_search import make_exact_scorer
+    from repro.core.mutations import pack_bitmap
+    from repro.kernels.search_step.ops import fused_beam_search
+    from repro.kernels.search_step.ref import fused_search_ref
+
+    idx, queries = fused_index
+    nq = queries.shape[0]
+    cap = idx.vectors.shape[0]
+    rng = np.random.default_rng(7)
+    dead = np.sort(rng.choice(384, 40, replace=False)).astype(np.int32)
+    dense = np.zeros((cap,), bool)
+    dense[dead] = True
+    tomb = pack_bitmap(jnp.asarray(dense))
+    score = make_exact_scorer(idx.vectors, queries, idx.graph.n_valid,
+                              idx.vec_sqnorm)
+    for mode in ("hop", "megakernel"):
+        res = fused_beam_search(idx.graph, mode=mode, beam_width=16,
+                                max_iters=40, queries=queries,
+                                vectors=idx.vectors,
+                                vec_sqnorm=idx.vec_sqnorm,
+                                tombstone_bits=tomb,
+                                traverse_deleted=traverse)
+        ids = np.asarray(res.frontier_ids)
+        assert not np.isin(ids, dead).any()
+        ri, _, rh = fused_search_ref(
+            idx.graph.adjacency, idx.graph.n_valid, idx.graph.medoid,
+            score, nq, beam_width=16, max_iters=40, tombstone_bits=tomb,
+            traverse_deleted=traverse)
+        agree = float(np.mean(ids == np.asarray(ri)))
+        assert agree >= 0.95, (mode, agree)
+        assert (np.asarray(res.n_hops) == np.asarray(rh)).all()

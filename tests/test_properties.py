@@ -501,3 +501,104 @@ def test_mips_reduction_exact(seed, d):
         assert da[i].argmin() == ip[i].argmax()
         # full ranking preserved, not just argmax
         assert (np.argsort(da[i]) == np.argsort(-ip[i])).all()
+
+
+# ----------------------------------------------------------- beam schedules
+def _sched_index():
+    """Small shared index for schedule properties (built once, cached on
+    the function object — property examples only vary the spec)."""
+    if not hasattr(_sched_index, "cache"):
+        from repro.core.construction import ConstructionParams
+        from repro.core.index import JasperIndex
+
+        rng = np.random.default_rng(321)
+        n, d = 256, 16
+        data = rng.normal(size=(n, d)).astype(np.float32)
+        queries = rng.normal(size=(8, d)).astype(np.float32)
+        params = ConstructionParams(degree_bound=16, alpha=1.2,
+                                    beam_width=16, max_iters=24,
+                                    rev_cap=16, prune_chunk=256)
+        idx = JasperIndex(d, capacity=n, construction=params,
+                          quantization="rabitq", bits=4, seed=321)
+        idx.build(data)
+        _sched_index.cache = (idx, queries)
+    return _sched_index.cache
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    fusion=st.sampled_from(["none", "hop", "megakernel"]),
+    reps=st.integers(1, 5),
+    quantized=st.sampled_from([False, True]),
+)
+def test_constant_beam_schedule_is_identity(fusion, reps, quantized):
+    """schedule=(B,...,B) is a bitwise no-op vs no schedule — on every
+    fusion mode (the narrowing mask keeps all B slots, so the fused and
+    unfused dataflows are untouched)."""
+    from repro.core.search_spec import SearchSpec
+
+    idx, queries = _sched_index()
+    base = idx.searcher(SearchSpec(
+        k=8, beam_width=16, quantized=quantized,
+        fusion=fusion)).search(queries)
+    sched = idx.searcher(SearchSpec(
+        k=8, beam_schedule=(16,) * reps, quantized=quantized,
+        fusion=fusion)).search(queries)
+    assert (np.asarray(base.ids) == np.asarray(sched.ids)).all()
+    assert (np.asarray(base.dists) == np.asarray(sched.dists)).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    length=st.integers(1, 4),
+    fusion=st.sampled_from(["hop", "megakernel"]),
+)
+def test_narrowing_schedule_fused_matches_unfused(seed, length, fusion):
+    """Any schedule (min >= k): fused results agree with the unfused loop
+    running the SAME schedule, and the top-k is well-formed (live ids,
+    ascending distances)."""
+    from repro.core.search_spec import SearchSpec
+
+    idx, queries = _sched_index()
+    rng = np.random.default_rng(seed)
+    sched = tuple(int(w) for w in rng.integers(8, 17, size=length))
+    a = idx.searcher(SearchSpec(k=8, beam_schedule=sched)).search(queries)
+    b = idx.searcher(SearchSpec(k=8, beam_schedule=sched,
+                                fusion=fusion)).search(queries)
+    ids = np.asarray(b.ids)
+    dists = np.asarray(b.dists)
+    assert (ids >= 0).all()
+    assert (np.diff(dists, axis=1) >= 0).all()
+    agree = float(np.mean(ids == np.asarray(a.ids)))
+    assert agree >= 0.9, agree
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    length=st.integers(1, 6),
+    k=st.integers(1, 64),
+    max_iters=st.integers(1, 40),
+)
+def test_beam_schedule_resolution(seed, length, k, max_iters):
+    """Resolution invariants: beam_width = max(schedule); schedule with
+    min < k is rejected; expand_schedule broadcasts the last entry out to
+    max_iters."""
+    from repro.core.beam_search import expand_schedule
+    from repro.core.search_spec import SearchSpec
+
+    rng = np.random.default_rng(seed)
+    sched = tuple(int(w) for w in rng.integers(1, 65, size=length))
+    spec = SearchSpec(k=k, beam_schedule=sched)
+    if min(sched) < k:
+        with pytest.raises(ValueError):
+            spec.resolve()
+    else:
+        r = spec.resolve()
+        assert r.beam_width == max(sched)
+        assert r.beam_schedule == sched
+        full = expand_schedule(sched, r.beam_width, max_iters)
+        assert len(full) == max_iters
+        for t in range(max_iters):
+            assert full[t] == sched[min(t, len(sched) - 1)]
