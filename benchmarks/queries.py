@@ -96,6 +96,17 @@ def run(csv: Csv, datasets=("bigann", "deep", "gist"), k: int = 10,
             qps = queries.shape[0] / (us / 1e6)
             rec = recall(res.ids)
             bpc = bytes_per_cand(spec)
+            # telemetry columns (ISSUE 7) from a sibling telemetry="on"
+            # search — its own plan, so the timed off-mode run stays the
+            # exact production executable
+            tel = idx.searcher(spec.with_(telemetry="on")).search(
+                queries).telemetry
+            occ = np.asarray(tel.occupancy)
+            scored = np.asarray(tel.scored, dtype=np.float64)
+            masked = np.asarray(tel.masked, dtype=np.float64)
+            mean_occ = float(occ[occ > 0].mean()) if (occ > 0).any() else 0.0
+            cand = scored + masked
+            masked_frac = float((masked / np.maximum(cand, 1)).mean())
             path, beam = label.split("/beam")
             csv.add(f"queries/{name}/{label}", us,
                     f"recall@{k}={rec:.3f} {qps:.0f} q/s {bpc}B/cand "
@@ -114,6 +125,8 @@ def run(csv: Csv, datasets=("bigann", "deep", "gist"), k: int = 10,
                 "recall": round(float(rec), 4),
                 "mean_hops": round(float(np.mean(np.asarray(res.n_hops))),
                                    2),
+                "mean_beam_occupancy": round(mean_occ, 2),
+                "masked_candidate_fraction": round(masked_frac, 4),
                 # plan-cache accounting across warm + timed calls: the
                 # session must compile once (traces==1) and then serve
                 # every repeat from cache (hits > 0, no further traces)

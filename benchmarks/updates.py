@@ -21,6 +21,7 @@ import numpy as np
 
 from benchmarks.common import BENCH_PARAMS, Csv, time_call
 from repro.core.index import JasperIndex
+from repro.obs.tracing import SpanTracer, span, use_tracer
 
 DIMS = 64
 DELETE_FRAC = 0.2
@@ -44,6 +45,17 @@ def _recall(idx: JasperIndex, queries, *, quantized=False, use_kernels=False,
 
 def run(csv: Csv, n: int | None = None, churn_rounds: int = 3,
         out_json: str | None = "BENCH_updates.json") -> dict:
+    # phase timings (ISSUE 7): the span tracer wraps every mutation phase
+    # below; its per-name summary lands in the JSON as phase_timings
+    tracer = SpanTracer()
+    with use_tracer(tracer):
+        record = _run(csv, tracer, n=n, churn_rounds=churn_rounds,
+                      out_json=out_json)
+    return record
+
+
+def _run(csv: Csv, tracer: SpanTracer, n: int | None, churn_rounds: int,
+         out_json: str | None) -> dict:
     n = n or 8000
     rng = np.random.default_rng(0)
     data = rng.normal(size=(n, DIMS)).astype(np.float32)
@@ -60,7 +72,8 @@ def run(csv: Csv, n: int | None = None, churn_rounds: int = 3,
     # ---- batched tombstone delete (20%) --------------------------------
     dead = rng.choice(n, int(n * DELETE_FRAC), replace=False)
     t0 = time.perf_counter()
-    idx.delete(dead)
+    with span("updates.delete", rows=int(dead.size)):
+        idx.delete(dead)
     del_s = time.perf_counter() - t0
     deletes_per_s = dead.size / del_s
     csv.add("updates/delete", del_s * 1e6,
@@ -87,7 +100,8 @@ def run(csv: Csv, n: int | None = None, churn_rounds: int = 3,
     # ---- consolidation (A/B: snapshot re-link vs one-hop local repair) --
     snap = (idx.graph, idx.mut)
     t0 = time.perf_counter()
-    stats_local = idx.consolidate(refine=False)
+    with span("updates.consolidate", refine=False):
+        stats_local = idx.consolidate(refine=False)
     cons_local_s = time.perf_counter() - t0
     r_cons_local = _recall(idx, queries)
     csv.add("updates/consolidate_local", cons_local_s * 1e6,
@@ -95,7 +109,8 @@ def run(csv: Csv, n: int | None = None, churn_rounds: int = 3,
 
     idx.graph, idx.mut = snap                      # restore tombstoned state
     t0 = time.perf_counter()
-    stats = idx.consolidate()                      # refine=True default
+    with span("updates.consolidate", refine=True):
+        stats = idx.consolidate()                  # refine=True default
     cons_s = time.perf_counter() - t0
     r_cons = _recall(idx, queries)
     r_cons_q = _recall(idx, queries, quantized=True, use_kernels=True)
@@ -123,18 +138,22 @@ def run(csv: Csv, n: int | None = None, churn_rounds: int = 3,
         dead_r = rng.choice(live, batch, replace=False)
         live = sorted(set(live) - set(dead_r.tolist()))
         t0 = time.perf_counter()
-        idx.delete(dead_r)
+        with span("updates.delete", rows=int(batch), round=rnd):
+            idx.delete(dead_r)
         d_s = time.perf_counter() - t0
         hw_before = int(idx.graph.n_valid)   # fresh ids start here
         t0 = time.perf_counter()
-        got = idx.insert(rng.normal(size=(batch, DIMS)).astype(np.float32))
+        with span("updates.insert", rows=int(batch), round=rnd):
+            got = idx.insert(rng.normal(size=(batch, DIMS))
+                             .astype(np.float32))
         i_s = time.perf_counter() - t0
         live += got.tolist()
         reused = int((got < hw_before).sum())
         cons = None
         if idx.deleted_fraction >= 0.1:
             t0 = time.perf_counter()
-            idx.consolidate()
+            with span("updates.consolidate", round=rnd):
+                idx.consolidate()
             cons = time.perf_counter() - t0
         r = _recall(idx, queries)
         churn.append({
@@ -170,6 +189,13 @@ def run(csv: Csv, n: int | None = None, churn_rounds: int = 3,
         "recall_fresh_rebuild": round(r_fresh, 4),
         "recall_delta_vs_fresh": round(r_cons - r_fresh, 4),
         "churn_rounds": churn,
+        # per-phase wall times from the span tracer: bench-level mutation
+        # spans plus the index.build spans the drivers emit themselves
+        "phase_timings": {
+            name: {k_: round(v, 1) if isinstance(v, float) else v
+                   for k_, v in agg.items()}
+            for name, agg in tracer.summary().items()
+        },
     }
     if out_json:
         with open(out_json, "w") as f:

@@ -19,6 +19,7 @@ IndexCore unification, so the serve loop is unchanged:
 """
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -80,10 +81,16 @@ def _make_sharded_index(dims: int, capacity: int, params) -> object:
 
 
 def run_churn(n0: int, rounds: int, batch: int, dims: int,
-              quick: bool, sharded: bool = False) -> None:
+              quick: bool, sharded: bool = False,
+              telemetry: bool = False) -> dict | None:
     """Interleaved insert/delete/consolidate with live recall: the online
     update/serve loop over one index driver — single-device or sharded,
-    the service code path is identical."""
+    the service code path is identical.
+
+    With telemetry=True the service serves `SERVE_SPEC.with_(telemetry="on")`
+    (per-search kernel counters flow back through the ticket) and the
+    unified metrics snapshot is returned for the --trace export.
+    """
     from repro.serving.anns_service import AnnsService
 
     rng = np.random.default_rng(2)
@@ -100,8 +107,11 @@ def run_churn(n0: int, rounds: int, batch: int, dims: int,
     data0 = rng.normal(size=(n0, dims)).astype(np.float32)
     idx.build(data0)
     queries = rng.normal(size=(100, dims)).astype(np.float32)
-    svc = AnnsService(idx, spec=SERVE_SPEC,
+    serve_spec = SERVE_SPEC.with_(telemetry="on") if telemetry else SERVE_SPEC
+    svc = AnnsService(idx, spec=serve_spec,
                       consolidate_threshold=0.15, verify=True)
+    if telemetry:
+        svc.metrics()                 # enable latency/hops/occupancy hists
 
     if sharded:
         per = n0 // idx.n_shards
@@ -159,6 +169,7 @@ def run_churn(n0: int, rounds: int, batch: int, dims: int,
           f"{s['mean_hops']:.1f}; recall held with zero tombstoned ids "
           f"returned — the index absorbed the churn without a rebuild. "
           f"Plan cache: {after.as_dict()} (reused session, zero retraces).")
+    return svc.metrics_snapshot() if telemetry else None
 
 
 def run_reshard(n0: int, dims: int, quick: bool) -> None:
@@ -247,22 +258,48 @@ def main() -> None:
                     help="churn over ShardedJasperIndex on all devices")
     ap.add_argument("--reshard", action="store_true",
                     help="save at 4 shards, restore at 2, churn, verify")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export a Chrome trace (open in Perfetto / "
+                         "chrome://tracing) of every service phase, plus "
+                         "the unified metrics snapshot under a top-level "
+                         "'metrics' key; churn runs also serve with "
+                         "telemetry='on' so per-search kernel counters "
+                         "feed the snapshot")
     args = ap.parse_args()
 
+    tracer = None
+    if args.trace:
+        from repro.obs.tracing import SpanTracer, set_tracer
+        tracer = SpanTracer()
+        set_tracer(tracer)
+
+    snap = None
     if args.reshard:
         run_reshard(n0=600 if args.quick else 4000, dims=64,
                     quick=args.quick)
     elif args.churn:
         if args.quick:
-            run_churn(n0=600, rounds=3, batch=60, dims=64, quick=True,
-                      sharded=args.sharded)
+            snap = run_churn(n0=600, rounds=3, batch=60, dims=64, quick=True,
+                             sharded=args.sharded,
+                             telemetry=args.trace is not None)
         else:
-            run_churn(n0=6000, rounds=6, batch=500, dims=64, quick=False,
-                      sharded=args.sharded)
+            snap = run_churn(n0=6000, rounds=6, batch=500, dims=64,
+                             quick=False, sharded=args.sharded,
+                             telemetry=args.trace is not None)
     elif args.quick:
         run_streaming(total=3000, batch=750)
     else:
         run_streaming(total=12000, batch=1500)
+
+    if tracer is not None:
+        doc = tracer.to_chrome_trace()
+        if snap is not None:
+            doc["metrics"] = snap     # trace viewers ignore extra keys
+        with open(args.trace, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"\nwrote {args.trace}: {len(doc['traceEvents'])} trace "
+              f"events" + ("" if snap is None
+                           else f" + metrics snapshot ({len(snap)} series)"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,136 @@
+"""Pretty-print an observability export: the unified metrics snapshot and
+a per-span summary of a Chrome trace, from JSON files on disk.
+
+Accepts either (or both, in one file) of the two artifacts the telemetry
+plane emits:
+
+  * a metrics snapshot — the plain dict from
+    `AnnsService.metrics_snapshot()` / `MetricsRegistry.snapshot()`;
+  * a Chrome trace — `{"traceEvents": [...]}` as written by
+    `SpanTracer.export()` or `examples/streaming_updates.py --trace`
+    (which embeds the snapshot under a top-level "metrics" key).
+
+Usage:
+    PYTHONPATH=src python scripts/obs_report.py out.json
+    PYTHONPATH=src python scripts/obs_report.py trace.json snapshot.json
+
+Exit status is non-zero on unparseable JSON or a trace/snapshot that
+fails the schema sanity checks — `scripts/tier1.sh` leans on this as the
+validator for the telemetry smoke lane.
+"""
+
+import argparse
+import json
+import sys
+
+
+def split_doc(doc: dict) -> tuple[list | None, dict | None]:
+    """(trace_events, metrics_snapshot) — either may be absent."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"expected a JSON object, got {type(doc).__name__}")
+    events = doc.get("traceEvents")
+    if events is not None and not isinstance(events, list):
+        raise ValueError("traceEvents must be a list")
+    metrics = doc.get("metrics")
+    if events is None and metrics is None:
+        # a bare snapshot file: flat dict of name -> scalar/dict
+        metrics = doc
+    return events, metrics
+
+
+def check_trace(events: list) -> dict:
+    """Schema-check complete ("X") events; aggregate per-name stats."""
+    stats: dict = {}
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        for field in ("name", "ts", "dur", "pid", "tid"):
+            if field not in e:
+                raise ValueError(f"trace event missing {field!r}: {e}")
+        if e["dur"] < 0:
+            raise ValueError(f"negative span duration: {e}")
+        s = stats.setdefault(e["name"],
+                             {"count": 0, "total_us": 0.0, "max_us": 0.0})
+        s["count"] += 1
+        s["total_us"] += e["dur"]
+        s["max_us"] = max(s["max_us"], e["dur"])
+    return stats
+
+
+def check_snapshot(snap: dict) -> None:
+    """Every value must be a JSON scalar, list, or a histogram/collector
+    dict — i.e. what `plain_json` produces. Histograms must be internally
+    consistent (count == sum of bucket counts)."""
+    for name, val in snap.items():
+        if isinstance(val, dict) and "bounds" in val:
+            if len(val["counts"]) != len(val["bounds"]) + 1:
+                raise ValueError(
+                    f"{name}: {len(val['counts'])} bucket counts for "
+                    f"{len(val['bounds'])} bounds (want bounds+1)")
+            n_bucketed = sum(val["counts"])
+            if n_bucketed != val["count"]:
+                raise ValueError(
+                    f"{name}: bucket counts sum to {n_bucketed}, "
+                    f"histogram count is {val['count']}")
+        elif not isinstance(val, (int, float, str, bool, list, dict,
+                                  type(None))):
+            raise ValueError(f"{name}: non-JSON value {type(val).__name__}")
+
+
+def print_trace_summary(stats: dict) -> None:
+    print(f"{'span':<24s} {'count':>6s} {'total_ms':>10s} "
+          f"{'mean_ms':>9s} {'max_ms':>9s}")
+    for name in sorted(stats, key=lambda n: -stats[n]["total_us"]):
+        s = stats[name]
+        print(f"{name:<24s} {s['count']:6d} {s['total_us'] / 1e3:10.2f} "
+              f"{s['total_us'] / s['count'] / 1e3:9.2f} "
+              f"{s['max_us'] / 1e3:9.2f}")
+
+
+def print_snapshot(snap: dict) -> None:
+    for name in sorted(snap):
+        val = snap[name]
+        if isinstance(val, dict) and "bounds" in val:
+            mean = val.get("mean")
+            mean = "-" if mean is None else f"{mean:.1f}"
+            print(f"{name:<28s} hist  count={val['count']} mean={mean} "
+                  f"min={val.get('min')} max={val.get('max')}")
+        elif isinstance(val, float):
+            print(f"{name:<28s} {val:.4f}")
+        else:
+            print(f"{name:<28s} {val}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="+",
+                    help="JSON file(s): Chrome trace and/or metrics "
+                         "snapshot")
+    args = ap.parse_args()
+
+    any_trace = any_snap = False
+    for path in args.paths:
+        with open(path) as f:
+            doc = json.load(f)
+        events, snap = split_doc(doc)
+        if events is not None:
+            stats = check_trace(events)
+            any_trace = True
+            print(f"== trace: {path} ({len(events)} events, "
+                  f"{len(stats)} span names) ==")
+            print_trace_summary(stats)
+            print()
+        if snap:
+            check_snapshot(snap)
+            any_snap = True
+            print(f"== metrics snapshot: {path} ({len(snap)} series) ==")
+            print_snapshot(snap)
+            print()
+    if not (any_trace or any_snap):
+        print("no trace events or metrics found", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,15 @@ case "$mode" in
     # full tier-1 under the multidevice marker)
     python -m pytest -q -k "fused or schedule" \
       tests/test_kernels.py tests/test_properties.py
+    # telemetry lane (ISSUE 7): the SAME quick churn with the telemetry
+    # plane on — spans around every service phase, per-search kernel
+    # counters, one unified metrics snapshot — exported as Chrome-trace
+    # JSON and schema-validated by the report tool (non-zero exit on a
+    # malformed trace or an inconsistent histogram)
+    obs_out="$(mktemp -t obs_trace.XXXXXX.json)"
+    python examples/streaming_updates.py --churn --quick --trace "$obs_out"
+    python scripts/obs_report.py "$obs_out"
+    rm -f "$obs_out"
     ;;
   *)
     echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2

@@ -36,6 +36,7 @@ from repro.core.vamana import VamanaGraph, init_graph, graph_degree_stats
 from repro.core.beam_search import (
     MERGE_STRATEGIES,
     BeamSearchResult,
+    SearchTelemetry,
     beam_search,
     beam_search_quantized,
     make_exact_scorer,
@@ -85,7 +86,7 @@ __all__ = [
     "MutationState", "init_mutation_state", "delete_rows",
     "bitmap_gather", "pack_bitmap", "unpack_bitmap",
     "VamanaGraph", "init_graph", "graph_degree_stats",
-    "MERGE_STRATEGIES", "BeamSearchResult",
+    "MERGE_STRATEGIES", "BeamSearchResult", "SearchTelemetry",
     "beam_search", "beam_search_quantized",
     "make_exact_scorer", "make_rabitq_scorer",
     "merge_frontier_sort", "merge_frontier_topk", "merge_frontier_kernel",

@@ -36,12 +36,36 @@ ScoreFn = Callable[[Array], Array]  # (Q, K) int32 ids -> (Q, K) f32 dists
 _INF = float("inf")
 
 
+class SearchTelemetry(NamedTuple):
+    """Per-search counters, identical semantics across the unfused loop,
+    the ref oracle, and both fused kernels (the ref oracle's values are
+    the bit-exact contract — see tests/test_obs.py).
+
+    Per hop, over the expanded nodes' neighbor candidates:
+      scored     — in-range, not already in the frontier, not masked
+      masked     — in-range, not duplicate, but tombstone/filter-masked
+                   (exclude-mode only; always 0 when traversing deleted)
+      duplicates — in-range but already present in the frontier
+      occupancy  — live frontier slots (id >= 0) AFTER the hop's merge +
+                   schedule-narrow, recorded only for hops the row
+                   actually expanded (0 otherwise — converged rows stop
+                   logging, so values are independent of how long the
+                   rest of the batch keeps iterating)
+    """
+
+    scored: Array      # (Q,) int32, summed over hops
+    masked: Array      # (Q,) int32, summed over hops
+    duplicates: Array  # (Q,) int32, summed over hops
+    occupancy: Array   # (Q, max_iters) int32, per hop
+
+
 class BeamSearchResult(NamedTuple):
     frontier_ids: Array     # (Q, L) int32, sorted by distance, -1 padded
     frontier_dists: Array   # (Q, L) f32, +inf padded
     visited_ids: Array      # (Q, max_iters) int32 expansion log, -1 padded
     visited_dists: Array    # (Q, max_iters) f32 distances of expanded nodes
     n_hops: Array           # (Q,) int32 number of expansions performed
+    telemetry: SearchTelemetry | None = None  # iff requested
 
 
 def make_exact_scorer(vectors: Array, queries: Array, n_valid: Array,
@@ -185,7 +209,8 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 merge_strategy: str = "topk",
                 tombstone_bits: Array | None = None,
                 traverse_deleted: bool = True,
-                beam_schedule: tuple | None = None) -> BeamSearchResult:
+                beam_schedule: tuple | None = None,
+                telemetry: bool = False) -> BeamSearchResult:
     """Run greedy beam search for a batch of queries.
 
     graph:      VamanaGraph (read-only snapshot — purity gives ParlayANN's
@@ -220,6 +245,9 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 `schedule[min(t, len-1)]` slots (see expand_schedule /
                 apply_beam_width). None = constant beam_width, and a
                 constant schedule (B,...,B) is bitwise identical to None.
+    telemetry:  True additionally returns a `SearchTelemetry` (counters +
+                per-hop occupancy). False (default) keeps the loop state
+                and the result bit-identical to a build without the flag.
     """
     if merge_strategy not in MERGE_STRATEGIES:
         raise ValueError(
@@ -261,11 +289,22 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
     visited_dlog = jnp.full((q, max_iters), _INF, dtype=jnp.float32)
     n_hops = jnp.zeros((q,), dtype=jnp.int32)
 
+    # exclude-mode masked-candidate counting needs its own bitmap gather:
+    # a self-masking kernel scorer hides the tombstone test in-kernel, so
+    # the counter cannot ride on `exclude_in_body`
+    count_masked = (telemetry and tombstone_bits is not None
+                    and not traverse_deleted)
+
     state = (jnp.int32(0), init_ids, init_dists, init_vis,
              visited_log, visited_dlog, n_hops)
+    if telemetry:
+        state = state + (jnp.zeros((q,), jnp.int32),        # scored
+                         jnp.zeros((q,), jnp.int32),        # masked
+                         jnp.zeros((q,), jnp.int32),        # duplicates
+                         jnp.zeros((q, max_iters), jnp.int32))  # occupancy
 
     def has_work(st):
-        _, f_ids, _, f_vis, _, _, _ = st
+        f_ids, f_vis = st[1], st[3]
         return jnp.any((f_ids >= 0) & ~f_vis)
 
     def cond(st):
@@ -273,7 +312,7 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
         return (it < max_iters) & has_work(st)
 
     def body(st):
-        it, f_ids, f_dists, f_vis, vlog, vdlog, hops = st
+        it, f_ids, f_dists, f_vis, vlog, vdlog, hops = st[:7]
         l_width = f_ids.shape[1]
         unvis = (f_ids >= 0) & ~f_vis                      # (Q, L)
         # frontier is distance-sorted => first unvisited are the closest;
@@ -313,9 +352,21 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
         in_range = (nbrs >= 0) & (nbrs < n_valid)
         dup = jnp.any(nbrs[:, :, None] == f_ids[:, None, :], axis=2)
         valid = in_range & ~dup
+        if count_masked or exclude_in_body:
+            dead = bitmap_gather(tombstone_bits, nbrs) & valid
         if exclude_in_body:
-            valid &= ~bitmap_gather(tombstone_bits, nbrs)
+            valid &= ~dead
         nbrs = jnp.where(valid, nbrs, -1)
+        if telemetry:
+            scored, masked, dups, occ_log = st[7:]
+            dead_n = (jnp.sum(dead, axis=1).astype(jnp.int32)
+                      if count_masked else jnp.int32(0))
+            # counters naturally stay 0 on converged rows: cur = -1 there,
+            # so every neighbor is -1 and in_range is all-False
+            scored = scored + (jnp.sum(valid, axis=1).astype(jnp.int32)
+                               - (0 if exclude_in_body else dead_n))
+            masked = masked + dead_n
+            dups = dups + jnp.sum(in_range & dup, axis=1).astype(jnp.int32)
 
         d = score_fn(nbrs)                                 # (Q, E*R)
         if not self_masking:
@@ -335,7 +386,14 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
             f_ids = jnp.where(act, ni, f_ids)
             f_dists = jnp.where(act, nd, f_dists)
             f_vis = jnp.where(act, nv, f_vis)
-        return (it + 1, f_ids, f_dists, f_vis, vlog, vdlog, hops)
+        out = (it + 1, f_ids, f_dists, f_vis, vlog, vdlog, hops)
+        if telemetry:
+            # post-merge/narrow live slots, logged only for rows that
+            # expanded this hop (see SearchTelemetry docstring)
+            occ = jnp.sum(f_ids >= 0, axis=1).astype(jnp.int32)
+            occ_log = occ_log.at[:, it].set(jnp.where(active, occ, 0))
+            out = out + (scored, masked, dups, occ_log)
+        return out
 
     if fixed_trip:
         # convergence guard: a converged frontier skips the body, so the
@@ -348,13 +406,15 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
     else:
         state = jax.lax.while_loop(cond, body, state)
 
-    _, f_ids, f_dists, f_vis, vlog, vdlog, hops = state
+    _, f_ids, f_dists, f_vis, vlog, vdlog, hops = state[:7]
+    tel = SearchTelemetry(*state[7:]) if telemetry else None
     # returnability filter: tombstoned frontier entries drop to the tail as
     # (+inf, -1) — searches NEVER return deleted ids, whatever the
     # traversal mode was
     f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
     return BeamSearchResult(frontier_ids=f_ids, frontier_dists=f_dists,
-                            visited_ids=vlog, visited_dists=vdlog, n_hops=hops)
+                            visited_ids=vlog, visited_dists=vdlog,
+                            n_hops=hops, telemetry=tel)
 
 
 def rerank_frontier(vectors: Array, vec_sqnorm: Array, queries: Array,
@@ -411,6 +471,7 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                           tombstone_bits: Array | None = None,
                           traverse_deleted: bool = True,
                           beam_schedule: tuple | None = None,
+                          telemetry: bool = False,
                           interpret: bool | None = None) -> BeamSearchResult:
     """Beam search on RaBitQ estimated distances (Jasper RaBitQ).
 
@@ -442,7 +503,8 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                       merge_strategy=merge_strategy,
                       tombstone_bits=tombstone_bits,
                       traverse_deleted=traverse_deleted,
-                      beam_schedule=beam_schedule)
+                      beam_schedule=beam_schedule,
+                      telemetry=telemetry)
     if rerank_score_fn is None:
         return res
     exact_d = rerank_score_fn(res.frontier_ids)
@@ -451,4 +513,5 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                           is_stable=True, num_keys=1)
     return BeamSearchResult(frontier_ids=si, frontier_dists=sd,
                             visited_ids=res.visited_ids,
-                            visited_dists=res.visited_dists, n_hops=res.n_hops)
+                            visited_dists=res.visited_dists,
+                            n_hops=res.n_hops, telemetry=res.telemetry)

@@ -47,6 +47,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core.beam_search import SearchTelemetry
 from repro.core.construction import ConstructionParams
 from repro.core.index_core import (
     IndexCore,
@@ -65,6 +66,7 @@ from repro.core.mutations import MutationState
 from repro.core.rabitq import RaBitQCodes, RaBitQParams, rabitq_train
 from repro.core.resharding import pow2_rung
 from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
+from repro.obs.tracing import span as obs_span
 
 Array = jax.Array
 
@@ -194,31 +196,46 @@ def sharded_search_fn(mesh: Mesh, shard_spec: ShardSpec,
     object, shared verbatim with the single-device plan builder (defaults
     and validation live in `SearchSpec.resolve`, never here).
     n_hops is the max over shards: the slowest shard's walk is the hop
-    cost the query actually paid.
+    cost the query actually paid. With spec.telemetry == "on" a fourth
+    `SearchTelemetry` output is the SUM over shards (total work the query
+    caused across the fleet — each shard walks its own graph, so counts
+    add; occupancy sums per hop the same way), and it equals the sum of
+    the shards' own single-device counters exactly (conformance lane).
     trace_counter: optional zero-arg hook bumped at trace time (the plan
     cache's retrace counter).
     """
     row_axes = shard_spec.row_axes
+    tel_on = spec.telemetry == "on"
 
     def local_search(core_stacked, queries):
         if trace_counter is not None:
             trace_counter()
         core = _local_core(core_stacked)
-        ids, dists, n_hops = core_search(
+        out = core_search(
             core, queries, spec=spec, filter_tombstones=filter_tombstones)
+        ids, dists, n_hops = out[:3]
         row0 = _shard_index(row_axes, dict(mesh.shape)) * id_stride
         gids = jnp.where(ids >= 0, ids + row0, -1)
         gids, dists = merge_topk(gids, dists, row_axes, spec.k)
         for ax in row_axes:
             n_hops = jax.lax.pmax(n_hops, ax)
+        if tel_on:
+            tel = out[3]
+            tel = type(tel)(*(jax.lax.psum(t, row_axes) for t in tel))
+            return gids, dists, n_hops, tel
         return gids, dists, n_hops
 
     q_spec = P(shard_spec.query_axis, None)
     h_spec = P(shard_spec.query_axis)
+    out_specs = (q_spec, q_spec, h_spec)
+    if tel_on:
+        # SearchTelemetry: three (Q,) counters + one (Q, max_iters) log
+        out_specs = out_specs + (
+            SearchTelemetry(h_spec, h_spec, h_spec, q_spec),)
     fn = shard_map(
         local_search, mesh=mesh,
         in_specs=(core_partition_specs(template, shard_spec), q_spec),
-        out_specs=(q_spec, q_spec, h_spec), check_vma=False)
+        out_specs=out_specs, check_vma=False)
     return jax.jit(fn,
                    in_shardings=(core_shardings(mesh, template, shard_spec),
                                  NamedSharding(mesh, q_spec)))
@@ -550,6 +567,11 @@ class ShardedJasperIndex(SearchSurface):
     def build(self, data) -> "ShardedJasperIndex":
         """Bulk build. data: (N, D) with N divisible by n_shards — rows are
         dealt contiguously to shards (shard s owns data[s*per:(s+1)*per])."""
+        with obs_span("index.build", n=int(np.asarray(data).shape[0]),
+                      sharded=True):
+            return self._build_impl(data)
+
+    def _build_impl(self, data) -> "ShardedJasperIndex":
         data = self._prep_data(data)
         n = data.shape[0]
         if n % self.n_shards:

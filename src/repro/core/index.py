@@ -64,6 +64,7 @@ from repro.core.index_core import (
 from repro.core.mutations import MutationState
 from repro.core.pq import make_pq_scorer, pq_encode, pq_train
 from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
+from repro.obs.tracing import span as obs_span
 from repro.core.rabitq import (
     RaBitQCodes,
     RaBitQParams,
@@ -305,11 +306,13 @@ class JasperIndex(SearchSurface):
               progress_fn=None) -> "JasperIndex":
         """Bulk construction over `data` (rows 0..N). Resets the graph and
         all mutation state (the generation counter keeps advancing)."""
-        x = self._prep_data(data)
-        self._ensure_quantizer(x)
-        self.core = core_build(self.core, x, params=self.params,
-                               refine=refine, progress_fn=progress_fn)
-        self._pq_write(jnp.arange(x.shape[0], dtype=jnp.int32), x)
+        with obs_span("index.build", n=int(np.asarray(data).shape[0]),
+                      sharded=False):
+            x = self._prep_data(data)
+            self._ensure_quantizer(x)
+            self.core = core_build(self.core, x, params=self.params,
+                                   refine=refine, progress_fn=progress_fn)
+            self._pq_write(jnp.arange(x.shape[0], dtype=jnp.int32), x)
         return self
 
     def _grow_to_fit(self, n_rows: int) -> None:

@@ -223,8 +223,7 @@ def core_build(core: IndexCore, data: Array, *, params: ConstructionParams,
 
 @partial(jax.jit, static_argnames=("spec", "filter_tombstones"))
 def core_search(core: IndexCore, queries: Array, *, spec,
-                filter_tombstones: bool = True
-                ) -> tuple[Array, Array, Array]:
+                filter_tombstones: bool = True) -> tuple:
     """THE search path — exact and quantized, kernel and jnp, 1..N shards.
 
     spec: a `ResolvedSearchSpec` (frozen/hashable, so it is ONE static jit
@@ -232,7 +231,10 @@ def core_search(core: IndexCore, queries: Array, *, spec,
       `SearchSpec(...).resolve()` — all default formulas and validation
       live there, never here.
     queries are already metric-prepped (the drivers handle MIPS
-    augmentation). Returns (ids (Q,k), dists (Q,k), n_hops (Q,)).
+    augmentation). Returns (ids (Q,k), dists (Q,k), n_hops (Q,)) — and
+    with spec.telemetry == "on", a fourth `SearchTelemetry` element (the
+    static branch keeps "off" bit-identical to a pre-telemetry build:
+    same tuple arity, zero extra kernel outputs).
 
     spec.quantized: beam-search on RaBitQ estimated distances over the
       packed codes; spec.use_kernels routes scoring through the fused
@@ -249,6 +251,13 @@ def core_search(core: IndexCore, queries: Array, *, spec,
     k = spec.k
     tomb = core.mut.tombstone_bits if filter_tombstones else None
     graph = core.graph
+    tel_on = spec.telemetry == "on"
+
+    def _out(ids, dists, res):
+        if tel_on:
+            return ids, dists, res.n_hops, res.telemetry
+        return ids, dists, res.n_hops
+
     if spec.fusion != "none":
         # fused execution: ONE Pallas launch per hop ("hop") or per search
         # ("megakernel") — gather + score + liveness + top-L merge fused,
@@ -263,7 +272,8 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                 graph, mode=spec.fusion, beam_width=spec.beam_width,
                 max_iters=spec.max_iters, beam_schedule=spec.beam_schedule,
                 codes=core.codes, rq_query=rq, tombstone_bits=tomb,
-                traverse_deleted=spec.traverse_deleted)
+                traverse_deleted=spec.traverse_deleted,
+                telemetry=tel_on)
             if spec.rerank:
                 exact_d = rerank_frontier(
                     core.vectors, core.vec_sqnorm, queries,
@@ -273,15 +283,16 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                                       dimension=1, is_stable=True,
                                       num_keys=1)
                 si = jnp.where(jnp.isfinite(sd), si, -1)
-                return si[:, :k], sd[:, :k], res.n_hops
+                return _out(si[:, :k], sd[:, :k], res)
         else:
             res = fused_beam_search(
                 graph, mode=spec.fusion, beam_width=spec.beam_width,
                 max_iters=spec.max_iters, beam_schedule=spec.beam_schedule,
                 queries=queries, vectors=core.vectors,
                 vec_sqnorm=core.vec_sqnorm, tombstone_bits=tomb,
-                traverse_deleted=spec.traverse_deleted)
-        return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
+                traverse_deleted=spec.traverse_deleted,
+                telemetry=tel_on)
+        return _out(res.frontier_ids[:, :k], res.frontier_dists[:, :k], res)
     if spec.quantized:
         if core.codes is None:
             raise ValueError("core has no quantized codes")
@@ -291,7 +302,7 @@ def core_search(core: IndexCore, queries: Array, *, spec,
             max_iters=spec.max_iters, expand_per_iter=spec.expand,
             use_kernels=spec.use_kernels, merge_strategy=spec.merge,
             tombstone_bits=tomb, traverse_deleted=spec.traverse_deleted,
-            beam_schedule=spec.beam_schedule)
+            beam_schedule=spec.beam_schedule, telemetry=tel_on)
         if spec.rerank:
             exact_d = rerank_frontier(
                 core.vectors, core.vec_sqnorm, queries, res.frontier_ids,
@@ -299,7 +310,7 @@ def core_search(core: IndexCore, queries: Array, *, spec,
             sd, si = jax.lax.sort((exact_d, res.frontier_ids), dimension=1,
                                   is_stable=True, num_keys=1)
             si = jnp.where(jnp.isfinite(sd), si, -1)
-            return si[:, :k], sd[:, :k], res.n_hops
+            return _out(si[:, :k], sd[:, :k], res)
     else:
         if spec.use_kernels:
             from repro.kernels.distance.ops import make_kernel_scorer
@@ -316,8 +327,9 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                           merge_strategy=spec.merge,
                           tombstone_bits=tomb,
                           traverse_deleted=spec.traverse_deleted,
-                          beam_schedule=spec.beam_schedule)
-    return res.frontier_ids[:, :k], res.frontier_dists[:, :k], res.n_hops
+                          beam_schedule=spec.beam_schedule,
+                          telemetry=tel_on)
+    return _out(res.frontier_ids[:, :k], res.frontier_dists[:, :k], res)
 
 
 @partial(jax.jit, static_argnames=("k",))

@@ -179,6 +179,21 @@ def reshard_cores(cores: list[IndexCore], *, old_id_stride: int,
     "all" re-links every live row; "none" is the pure mechanical remap.
     params is required unless relink="none".
     """
+    from repro.obs.tracing import span as obs_span
+    with obs_span("reshard.cores", s_old=len(cores), s_new=n_shards,
+                  relink=relink):
+        return _reshard_cores_impl(
+            cores, old_id_stride=old_id_stride, n_shards=n_shards,
+            new_id_stride=new_id_stride,
+            capacity_per_shard=capacity_per_shard, params=params,
+            relink=relink)
+
+
+def _reshard_cores_impl(cores: list[IndexCore], *, old_id_stride: int,
+                        n_shards: int, new_id_stride: int | None = None,
+                        capacity_per_shard: int | None = None,
+                        params: ConstructionParams | None = None,
+                        relink: str = "auto") -> ReshardResult:
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     if relink not in ("auto", "all", "none"):

@@ -34,7 +34,8 @@ cf. the real-time adaptive multi-stream GPU ANNS system, arXiv:2408.02937):
 Driver contract (both `JasperIndex` and `ShardedJasperIndex` satisfy it):
 `_prep_query`, `_filter_tombstones`, `generation`, `brute_force`, a
 `plans: PlanCache`, and `_search_plan(resolved, q_shape, filt)` returning
-a callable `queries -> (ids, dists, n_hops)`.
+a callable `queries -> (ids, dists, n_hops)` — with a fourth
+`SearchTelemetry` element iff the resolved spec has `telemetry="on"`.
 """
 
 from __future__ import annotations
@@ -48,10 +49,13 @@ from typing import Any, NamedTuple
 import numpy as np
 
 from repro.core.beam_search import MERGE_STRATEGIES
+from repro.obs.tracing import span as obs_span
 
 SPEC_VERSION = 1
 
 FUSION_MODES = ("none", "hop", "megakernel")
+
+TELEMETRY_MODES = ("off", "on")
 
 
 def check_quantized_backend(index, *, need_codes: bool = True) -> None:
@@ -114,6 +118,13 @@ class SearchSpec:
     beam_schedule: optional per-hop frontier widths (wide early, narrow
                   late). Hop t uses schedule[min(t, len-1)]; beam_width
                   defaults to max(schedule). None = constant beam_width.
+    telemetry:    per-search kernel telemetry: "off" (default — a TRUE
+                  zero: no extra outputs, unchanged plan-cache keys,
+                  bit-identical results) or "on" (the search additionally
+                  returns a `SearchTelemetry`: candidates scored,
+                  tombstone/filter-masked count, duplicate-visit count,
+                  per-hop beam occupancy). Part of the resolved spec, so
+                  the plan cache keys it — on/off are separate plans.
     """
 
     k: int = 10
@@ -128,6 +139,7 @@ class SearchSpec:
     traverse_deleted: bool = True
     fusion: str = "none"
     beam_schedule: tuple | None = None
+    telemetry: str = "off"
 
     # ------------------------------------------------------------- resolve
     def resolve(self, index: Any = None) -> "ResolvedSearchSpec":
@@ -148,6 +160,10 @@ class SearchSpec:
         if self.fusion not in FUSION_MODES:
             raise ValueError(
                 f"fusion must be one of {FUSION_MODES}, got {self.fusion!r}")
+        if self.telemetry not in TELEMETRY_MODES:
+            raise ValueError(
+                f"telemetry must be one of {TELEMETRY_MODES}, "
+                f"got {self.telemetry!r}")
         schedule = self.beam_schedule
         if schedule is not None:
             try:
@@ -207,7 +223,8 @@ class SearchSpec:
             quantized=bool(self.quantized), rerank=rerank,
             rerank_tile=rerank_tile, use_kernels=bool(self.use_kernels),
             merge=merge, traverse_deleted=bool(self.traverse_deleted),
-            fusion=self.fusion, beam_schedule=schedule)
+            fusion=self.fusion, beam_schedule=schedule,
+            telemetry=self.telemetry)
 
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:
@@ -263,6 +280,7 @@ class ResolvedSearchSpec:
     traverse_deleted: bool
     fusion: str
     beam_schedule: tuple | None
+    telemetry: str
 
     def to_spec(self) -> SearchSpec:
         return SearchSpec(**asdict(self))
@@ -280,6 +298,8 @@ class SearchResult(NamedTuple):
     n_hops: Any     # (Q,) int32 — greedy-walk hops per query (the paper's
                     # per-query work metric; max over shards when sharded)
     generation: int  # index generation this batch was served at
+    telemetry: Any = None  # SearchTelemetry iff spec.telemetry == "on"
+                           # (summed over shards when sharded); else None
 
 
 # ---------------------------------------------------------------------------
@@ -294,8 +314,17 @@ class CacheStats:
     misses: int = 0
     traces: int = 0
 
+    @property
+    def hit_rate(self) -> float:
+        """Hits per lookup; 0.0 on a never-used cache (no ZeroDivision)."""
+        lookups = self.hits + self.misses
+        return self.hits / lookups if lookups else 0.0
+
     def as_dict(self) -> dict:
-        return dict(self.__dict__)
+        # hit_rate is a property, not in __dict__ — add it explicitly so
+        # snapshots carry it, while delta()/snapshot() (which iterate
+        # __dict__) keep seeing raw counters only
+        return dict(self.__dict__, hit_rate=self.hit_rate)
 
     def delta(self, since: "CacheStats") -> dict:
         return {k: v - getattr(since, k) for k, v in self.__dict__.items()}
@@ -373,9 +402,13 @@ class Searcher:
         generation = idx.generation
         plan = idx._search_plan(self.resolved, q.shape,
                                 idx._filter_tombstones)
-        ids, dists, n_hops = plan(q)
+        out = plan(q)
+        # plans return (ids, dists, n_hops) — plus a SearchTelemetry
+        # fourth element iff the resolved spec has telemetry on
+        ids, dists, n_hops = out[:3]
+        tel = out[3] if len(out) > 3 else None
         return SearchResult(ids=ids, dists=dists, n_hops=n_hops,
-                            generation=generation)
+                            generation=generation, telemetry=tel)
 
     def search(self, queries) -> SearchResult:
         """Synchronous search at the current snapshot generation."""
@@ -383,18 +416,24 @@ class Searcher:
 
     def submit(self, queries) -> int:
         """Enqueue a batch (async dispatch); returns the in-flight depth."""
-        self._inflight.append(self._dispatch(queries))
+        with obs_span("searcher.submit", pending=len(self._inflight)):
+            self._inflight.append(self._dispatch(queries))
         return len(self._inflight)
 
     def drain(self, limit: int | None = None) -> list[SearchResult]:
         """Block on the oldest `limit` in-flight batches (None = all);
         results in submission order, host-resident (np arrays)."""
         out = []
-        while self._inflight and (limit is None or len(out) < limit):
-            r = self._inflight.popleft()
-            out.append(SearchResult(
-                ids=np.asarray(r.ids), dists=np.asarray(r.dists),
-                n_hops=np.asarray(r.n_hops), generation=r.generation))
+        with obs_span("searcher.drain", pending=len(self._inflight)):
+            while self._inflight and (limit is None or len(out) < limit):
+                r = self._inflight.popleft()
+                tel = r.telemetry
+                if tel is not None:
+                    tel = type(tel)(*(np.asarray(t) for t in tel))
+                out.append(SearchResult(
+                    ids=np.asarray(r.ids), dists=np.asarray(r.dists),
+                    n_hops=np.asarray(r.n_hops), generation=r.generation,
+                    telemetry=tel))
         return out
 
     @property

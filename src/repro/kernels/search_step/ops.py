@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.beam_search import (
     BeamSearchResult,
+    SearchTelemetry,
     expand_schedule,
     finalize_frontier,
     make_exact_scorer,
@@ -57,6 +58,7 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
                       tombstone_bits: Array | None = None,
                       traverse_deleted: bool = True,
                       block_q: int = 8,
+                      telemetry: bool = False,
                       interpret: bool | None = None) -> BeamSearchResult:
     """Fused greedy beam search — exact (vectors) or quantized (codes).
 
@@ -64,6 +66,9 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
     "megakernel" (one persistent launch, frontier on-chip throughout).
     Returns the standard `BeamSearchResult` (visited logs are not
     maintained by the fused paths and come back as empty -1/+inf fills).
+    telemetry=True fills `result.telemetry` with the in-kernel counters
+    (SearchTelemetry; the ref oracle's exact values) — off, the kernels
+    are launched with zero extra outputs.
     """
     if interpret is None:
         interpret = _auto_interpret()
@@ -120,34 +125,62 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
     sched = jnp.asarray(
         expand_schedule(beam_schedule, beam_width, max_iters), jnp.int32)
     kern = dict(quantized=quantized, bits=bits, block_q=block_q,
-                interpret=interpret)
+                telemetry=telemetry, interpret=interpret)
 
+    tel = None
     if mode == "megakernel":
-        f_ids, f_dists, hops = fused_search_pallas(
+        out = fused_search_pallas(
             f_ids, f_dists, f_vis, sched, q, qa, qb, graph.adjacency,
             data, meta, tomb, graph.n_valid, max_iters=max_iters, **kern)
+        f_ids, f_dists, hops = out[:3]
         hops = hops[:, 0]
+        if telemetry:
+            counters, occ_log = out[3:]
+            tel = (counters[:, 0], counters[:, 1], counters[:, 2], occ_log)
     else:
-        hops = jnp.zeros((f_ids.shape[0],), jnp.int32)
+        qn = f_ids.shape[0]
+        hops = jnp.zeros((qn,), jnp.int32)
+
+        state = (jnp.int32(0), f_ids, f_dists, f_vis, hops)
+        if telemetry:
+            zc = jnp.zeros((qn,), jnp.int32)
+            state = state + (zc, zc, zc,
+                             jnp.zeros((qn, max_iters), jnp.int32))
 
         def cond(st):
-            it, fi, _, fv, _ = st
+            it, fi, _, fv = st[:4]
             return (it < max_iters) & jnp.any((fi >= 0) & (fv == 0))
 
         def body(st):
-            it, fi, fd, fv, hops = st
-            nfi, nfd, nfv, inc = fused_hop_pallas(
+            it, fi, fd, fv, hops = st[:5]
+            hop = fused_hop_pallas(
                 fi, fd, fv, sched[it], q, qa, qb, graph.adjacency,
                 data, meta, tomb, graph.n_valid, **kern)
-            return (it + 1, nfi, nfd, nfv, hops + inc[:, 0])
+            nfi, nfd, nfv, inc = hop[:4]
+            out = (it + 1, nfi, nfd, nfv, hops + inc[:, 0])
+            if telemetry:
+                scored, masked, dups, occ_log = st[5:]
+                ht = hop[4]
+                # the hop kernel's occupancy column lands at the (traced)
+                # hop index — the log mirrors the megakernel's scratch
+                occ_log = jax.lax.dynamic_update_slice(
+                    occ_log, ht[:, 3:4], (0, it))
+                out = out + (scored + ht[:, 0], masked + ht[:, 1],
+                             dups + ht[:, 2], occ_log)
+            return out
 
-        _, f_ids, f_dists, _, hops = jax.lax.while_loop(
-            cond, body, (jnp.int32(0), f_ids, f_dists, f_vis, hops))
+        state = jax.lax.while_loop(cond, body, state)
+        _, f_ids, f_dists, _, hops = state[:5]
+        if telemetry:
+            tel = state[5:]
 
     f_ids, f_dists = f_ids[:num_q], f_dists[:num_q]
     f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
+    if tel is not None:
+        tel = SearchTelemetry(tel[0][:num_q], tel[1][:num_q],
+                              tel[2][:num_q], tel[3][:num_q])
     return BeamSearchResult(
         frontier_ids=f_ids, frontier_dists=f_dists,
         visited_ids=jnp.full((num_q, max_iters), -1, jnp.int32),
         visited_dists=jnp.full((num_q, max_iters), _INF, jnp.float32),
-        n_hops=hops[:num_q])
+        n_hops=hops[:num_q], telemetry=tel)

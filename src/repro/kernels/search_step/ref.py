@@ -45,14 +45,17 @@ def init_frontier(medoid: Array, d0: Array, num_queries: int,
 
 
 def fused_hop_ref(f_ids, f_dists, f_vis, *, score_fn, adjacency, n_valid,
-                  width, tombstone_bits=None):
+                  width, tombstone_bits=None, telemetry: bool = False):
     """ONE hop of the fused dataflow, pure jnp.
 
     Mirrors `beam_search`'s body at expand=1 exactly: pick the first
     unvisited frontier slot, expand its adjacency row, drop out-of-range /
     duplicate / (exclude-mode) tombstoned candidates to id -1, score,
     top-L merge, then narrow rows that expanded work to `width` slots.
-    Returns (f_ids, f_dists, f_vis, pick_valid).
+    Returns (f_ids, f_dists, f_vis, pick_valid) — with `telemetry` a
+    fifth element `(scored, masked, dups, occ)` of this hop's counters,
+    each (Q,) int32 (semantics: core.beam_search.SearchTelemetry; these
+    are THE values the Pallas kernels must reproduce exactly).
     """
     l_width = f_ids.shape[1]
     unvis = (f_ids >= 0) & ~f_vis
@@ -71,10 +74,17 @@ def fused_hop_ref(f_ids, f_dists, f_vis, *, score_fn, adjacency, n_valid,
     in_range = (nbrs >= 0) & (nbrs < n_valid)
     dup = jnp.any(nbrs[:, :, None] == f_ids[:, None, :], axis=2)
     valid = in_range & ~dup
+    dead = None
     if tombstone_bits is not None:
         from repro.core.mutations import bitmap_gather
-        valid &= ~bitmap_gather(tombstone_bits, nbrs)
+        dead = bitmap_gather(tombstone_bits, nbrs) & valid
+        valid &= ~dead
     nbrs = jnp.where(valid, nbrs, -1)
+    if telemetry:
+        scored = jnp.sum(valid, axis=1).astype(jnp.int32)
+        masked = (jnp.sum(dead, axis=1).astype(jnp.int32)
+                  if dead is not None else jnp.zeros_like(scored))
+        dups = jnp.sum(in_range & dup, axis=1).astype(jnp.int32)
 
     d = score_fn(nbrs)                                  # (Q, R)
     d = jnp.where(valid, d, _INF)
@@ -89,19 +99,26 @@ def fused_hop_ref(f_ids, f_dists, f_vis, *, score_fn, adjacency, n_valid,
     f_ids = jnp.where(act, ni, f_ids)
     f_dists = jnp.where(act, nd, f_dists)
     f_vis = jnp.where(act, nv, f_vis)
+    if telemetry:
+        occ = jnp.where(pick_valid,
+                        jnp.sum(f_ids >= 0, axis=1).astype(jnp.int32), 0)
+        return f_ids, f_dists, f_vis, pick_valid, (scored, masked, dups, occ)
     return f_ids, f_dists, f_vis, pick_valid
 
 
 def fused_search_ref(adjacency, n_valid, medoid, score_fn, num_queries, *,
                      beam_width: int, max_iters: int,
                      beam_schedule: tuple | None = None,
-                     tombstone_bits=None, traverse_deleted: bool = True
-                     ) -> tuple[Array, Array, Array]:
+                     tombstone_bits=None, traverse_deleted: bool = True,
+                     telemetry: bool = False):
     """Whole-search oracle: the megakernel's semantics in pure jnp.
 
     Returns (frontier_ids (Q, L), frontier_dists (Q, L), n_hops (Q,)),
     finalized (tombstone returnability filter + -1 masking applied) — the
-    same contract `fused_beam_search` and `beam_search` ship.
+    same contract `fused_beam_search` and `beam_search` ship. With
+    `telemetry`, a fourth element `(scored, masked, dups, occ_log)`:
+    counters (Q,) int32 summed over hops plus the (Q, max_iters) per-hop
+    occupancy log — the exact-equality contract for the fused kernels.
     """
     sched = jnp.asarray(
         expand_schedule(beam_schedule, beam_width, max_iters), jnp.int32)
@@ -113,19 +130,34 @@ def fused_search_ref(adjacency, n_valid, medoid, score_fn, num_queries, *,
                                           beam_width)
     hops = jnp.zeros((num_queries,), jnp.int32)
 
+    state = (jnp.int32(0), f_ids, f_dists, f_vis, hops)
+    if telemetry:
+        zc = jnp.zeros((num_queries,), jnp.int32)
+        state = state + (zc, zc, zc,
+                         jnp.zeros((num_queries, max_iters), jnp.int32))
+
     def cond(st):
-        it, f_ids, _, f_vis, _ = st
+        it, f_ids, _, f_vis = st[:4]
         return (it < max_iters) & jnp.any((f_ids >= 0) & ~f_vis)
 
     def body(st):
-        it, f_ids, f_dists, f_vis, hops = st
-        f_ids, f_dists, f_vis, pv = fused_hop_ref(
+        it, f_ids, f_dists, f_vis, hops = st[:5]
+        hop = fused_hop_ref(
             f_ids, f_dists, f_vis, score_fn=score_fn, adjacency=adjacency,
-            n_valid=n_valid, width=sched[it], tombstone_bits=body_tomb)
-        return (it + 1, f_ids, f_dists, f_vis,
-                hops + pv.astype(jnp.int32))
+            n_valid=n_valid, width=sched[it], tombstone_bits=body_tomb,
+            telemetry=telemetry)
+        f_ids, f_dists, f_vis, pv = hop[:4]
+        out = (it + 1, f_ids, f_dists, f_vis, hops + pv.astype(jnp.int32))
+        if telemetry:
+            scored, masked, dups, occ_log = st[5:]
+            hs, hm, hd, ho = hop[4]
+            out = out + (scored + hs, masked + hm, dups + hd,
+                         occ_log.at[:, it].set(ho))
+        return out
 
-    _, f_ids, f_dists, _, hops = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), f_ids, f_dists, f_vis, hops))
+    state = jax.lax.while_loop(cond, body, state)
+    _, f_ids, f_dists, _, hops = state[:5]
     f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
+    if telemetry:
+        return f_ids, f_dists, hops, tuple(state[5:])
     return f_ids, f_dists, hops

@@ -99,13 +99,17 @@ def _merge_topl(all_i: Array, all_d: Array, all_v: Array, l_width: int):
 
 def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
                 adj_ref, data_ref, meta_ref, tomb_ref, *,
-                quantized: bool, bits: int, use_tomb: bool):
+                quantized: bool, bits: int, use_tomb: bool,
+                telemetry: bool = False):
     """One fused hop over a (TQ, L) frontier block — pure values in/out,
     ANY-memory refs for the gathers. Shared by both kernels.
 
     q/qa/qb: quantized -> (q_rot, query_add, query_sumq);
              exact     -> (queries, |q|^2, unused).
-    Returns (f_ids, f_dists, f_vis, pick_valid)."""
+    Returns (f_ids, f_dists, f_vis, pick_valid) — plus, with `telemetry`,
+    a fifth element (scored, masked, dups, occ) of (TQ,) i32 hop counters
+    (semantics: core.beam_search.SearchTelemetry; contract: the ref
+    oracle's values, exactly)."""
     tq, l_width = f_ids.shape
     degree = adj_ref.shape[1]
     col = jax.lax.broadcasted_iota(jnp.int32, (tq, l_width), 1)
@@ -134,6 +138,7 @@ def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
         byte = _gather_rows(tomb_ref, flat >> 3, jnp.int32)
         bit = (byte.reshape(tq, degree)
                >> (jnp.maximum(nbrs, 0) & 7)) & 1
+        dead = valid & (bit == 1)
         valid &= bit == 0
 
     # ---- score: candidate rows gathered once, MXU batch dot
@@ -169,42 +174,71 @@ def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
     nfi = jnp.where(keep, nfi, -1)
     nfd = jnp.where(keep, nfd, _INF)
     nfv = jnp.where(keep, nfv, 0)
+    if telemetry:
+        scored = jnp.sum(valid, axis=1).astype(jnp.int32)
+        masked = (jnp.sum(dead, axis=1).astype(jnp.int32) if use_tomb
+                  else jnp.zeros((tq,), jnp.int32))
+        dups = jnp.sum(in_range & dup, axis=1).astype(jnp.int32)
+        occ = jnp.where(pick_valid,
+                        jnp.sum(nfi >= 0, axis=1), 0).astype(jnp.int32)
+        return nfi, nfd, nfv, pick_valid, (scored, masked, dups, occ)
     return nfi, nfd, nfv, pick_valid
 
 
 def _hop_kernel(w_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref, fd_ref,
                 fv_ref, adj_ref, data_ref, meta_ref, tomb_ref,
-                ofi_ref, ofd_ref, ofv_ref, oh_ref, *,
-                quantized: bool, bits: int, use_tomb: bool):
+                ofi_ref, ofd_ref, ofv_ref, oh_ref, *rest,
+                quantized: bool, bits: int, use_tomb: bool,
+                telemetry: bool = False):
     """Stage 1: ONE launch per hop — frontier in/out through VMEM blocks,
-    all gathers + scoring + merge fused inside."""
-    nfi, nfd, nfv, pv = _hop_update(
+    all gathers + scoring + merge fused inside. With telemetry, one extra
+    (TQ, 4) i32 output of [scored, masked, dups, occupancy] hop counters;
+    without, the signature (and the compiled plan) is unchanged."""
+    up = _hop_update(
         fi_ref[...], fd_ref[...], fv_ref[...], w_ref[0],
         q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0],
         adj_ref, data_ref, meta_ref, tomb_ref,
-        quantized=quantized, bits=bits, use_tomb=use_tomb)
+        quantized=quantized, bits=bits, use_tomb=use_tomb,
+        telemetry=telemetry)
+    nfi, nfd, nfv, pv = up[:4]
     ofi_ref[...] = nfi
     ofd_ref[...] = nfd
     ofv_ref[...] = nfv
     oh_ref[...] = pv[:, None].astype(jnp.int32)
+    if telemetry:
+        (otel_ref,) = rest
+        otel_ref[...] = jnp.stack(up[4], axis=1)
 
 
 def _mega_kernel(sched_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref,
                  fd_ref, fv_ref, adj_ref, data_ref, meta_ref, tomb_ref,
-                 ofi_ref, ofd_ref, oh_ref, fi_s, fd_s, fv_s, h_s, *,
-                 quantized: bool, bits: int, use_tomb: bool,
-                 max_iters: int):
+                 *rest, quantized: bool, bits: int, use_tomb: bool,
+                 max_iters: int, telemetry: bool = False):
     """Stage 2: the whole beam loop in ONE persistent launch.
 
     Frontier ids/dists/visited and hop counters live in VMEM scratch
     across hops; the fori_loop body is guarded by `pl.when(has_work)` so a
     converged block retires into no-op trips (fixed-trip lowering, early
     convergence — the same accounting contract as the unfused loop: hops
-    count expansions performed, never loop trips)."""
+    count expansions performed, never loop trips).
+
+    With telemetry, two extra outputs — (TQ, 3) summed counters and a
+    (TQ, max_iters) per-hop occupancy log — accumulate in extra VMEM
+    scratch; a retired block stops writing, leaving the log's tail at its
+    zero init (exactly the unfused loop's untouched entries). `rest` is
+    outputs-then-scratch, with both lists telemetry-dependent."""
+    if telemetry:
+        (ofi_ref, ofd_ref, oh_ref, oc_ref, oocc_ref,
+         fi_s, fd_s, fv_s, h_s, c_s, occ_s) = rest
+    else:
+        ofi_ref, ofd_ref, oh_ref, fi_s, fd_s, fv_s, h_s = rest
     fi_s[...] = fi_ref[...]
     fd_s[...] = fd_ref[...]
     fv_s[...] = fv_ref[...]
     h_s[...] = jnp.zeros_like(h_s)
+    if telemetry:
+        c_s[...] = jnp.zeros_like(c_s)
+        occ_s[...] = jnp.zeros_like(occ_s)
 
     def step(t, carry):
         f_ids = fi_s[...]
@@ -213,15 +247,22 @@ def _mega_kernel(sched_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref,
 
         @pl.when(has)
         def _():
-            nfi, nfd, nfv, pv = _hop_update(
+            up = _hop_update(
                 f_ids, fd_s[...], f_vis, sched_ref[t],
                 q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0],
                 adj_ref, data_ref, meta_ref, tomb_ref,
-                quantized=quantized, bits=bits, use_tomb=use_tomb)
+                quantized=quantized, bits=bits, use_tomb=use_tomb,
+                telemetry=telemetry)
+            nfi, nfd, nfv, pv = up[:4]
             fi_s[...] = nfi
             fd_s[...] = nfd
             fv_s[...] = nfv
             h_s[...] = h_s[...] + pv[:, None].astype(jnp.int32)
+            if telemetry:
+                scored, masked, dups, occ = up[4]
+                c_s[...] = c_s[...] + jnp.stack([scored, masked, dups],
+                                                axis=1)
+                occ_s[:, pl.ds(t, 1)] = occ[:, None]
 
         return carry
 
@@ -229,6 +270,9 @@ def _mega_kernel(sched_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref,
     ofi_ref[...] = fi_s[...]
     ofd_ref[...] = fd_s[...]
     oh_ref[...] = h_s[...]
+    if telemetry:
+        oc_ref[...] = c_s[...]
+        oocc_ref[...] = occ_s[...]
 
 
 def _common_specs(block_q: int, d: int, l_width: int):
@@ -248,24 +292,32 @@ def _common_specs(block_q: int, d: int, l_width: int):
 def fused_hop_pallas(f_ids, f_dists, f_vis, width, q, qa, qb, adjacency,
                      data, meta, tomb, n_valid, *, quantized: bool,
                      bits: int, block_q: int = 8,
+                     telemetry: bool = False,
                      interpret: bool = False):
     """One fused hop. All (Q, ·) arrays pre-padded to block_q rows.
-    Returns (f_ids, f_dists, f_vis, hop_inc (Q, 1))."""
+    Returns (f_ids, f_dists, f_vis, hop_inc (Q, 1)) — plus a (Q, 4) i32
+    [scored, masked, dups, occupancy] counter block with telemetry on
+    (off: zero extra outputs, the pallas_call is identical)."""
     qn, l_width = f_ids.shape
     d = q.shape[1]
     in_specs, blk = _common_specs(block_q, d, l_width)
+    out_specs = [blk(l_width), blk(l_width), blk(l_width), blk(1)]
+    out_shape = [
+        jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
+        jax.ShapeDtypeStruct((qn, l_width), jnp.float32),
+        jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
+        jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+    ]
+    if telemetry:
+        out_specs.append(blk(4))
+        out_shape.append(jax.ShapeDtypeStruct((qn, 4), jnp.int32))
     return pl.pallas_call(
         functools.partial(_hop_kernel, quantized=quantized, bits=bits,
-                          use_tomb=tomb is not None),
+                          use_tomb=tomb is not None, telemetry=telemetry),
         grid=(qn // block_q,),
         in_specs=in_specs,
-        out_specs=[blk(l_width), blk(l_width), blk(l_width), blk(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
-            jax.ShapeDtypeStruct((qn, l_width), jnp.float32),
-            jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
-            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(jnp.asarray(width, jnp.int32).reshape(1),
@@ -277,30 +329,46 @@ def fused_hop_pallas(f_ids, f_dists, f_vis, width, q, qa, qb, adjacency,
 def fused_search_pallas(f_ids, f_dists, f_vis, schedule, q, qa, qb,
                         adjacency, data, meta, tomb, n_valid, *,
                         quantized: bool, bits: int, max_iters: int,
-                        block_q: int = 8, interpret: bool = False):
+                        block_q: int = 8, telemetry: bool = False,
+                        interpret: bool = False):
     """The megakernel: whole search, one launch. schedule: (max_iters,)
-    i32 per-hop widths. Returns (f_ids, f_dists, n_hops (Q, 1))."""
+    i32 per-hop widths. Returns (f_ids, f_dists, n_hops (Q, 1)) — plus
+    (counters (Q, 3) i32 [scored, masked, dups], occupancy
+    (Q, max_iters) i32) with telemetry on, accumulated in VMEM scratch
+    across hops (off: zero extra outputs/scratch, identical launch)."""
     qn, l_width = f_ids.shape
     d = q.shape[1]
     degree = adjacency.shape[1]
     in_specs, blk = _common_specs(block_q, d, l_width)
+    out_specs = [blk(l_width), blk(l_width), blk(1)]
+    out_shape = [
+        jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
+        jax.ShapeDtypeStruct((qn, l_width), jnp.float32),
+        jax.ShapeDtypeStruct((qn, 1), jnp.int32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((block_q, l_width), jnp.int32),    # frontier ids
+        pltpu.VMEM((block_q, l_width), jnp.float32),  # frontier dists
+        pltpu.VMEM((block_q, l_width), jnp.int32),    # visited flags
+        pltpu.VMEM((block_q, 1), jnp.int32),          # hop counters
+    ]
+    if telemetry:
+        out_specs += [blk(3), blk(max_iters)]
+        out_shape += [jax.ShapeDtypeStruct((qn, 3), jnp.int32),
+                      jax.ShapeDtypeStruct((qn, max_iters), jnp.int32)]
+        scratch_shapes += [
+            pltpu.VMEM((block_q, 3), jnp.int32),          # counter sums
+            pltpu.VMEM((block_q, max_iters), jnp.int32),  # occupancy log
+        ]
     return pl.pallas_call(
         functools.partial(_mega_kernel, quantized=quantized, bits=bits,
-                          use_tomb=tomb is not None, max_iters=max_iters),
+                          use_tomb=tomb is not None, max_iters=max_iters,
+                          telemetry=telemetry),
         grid=(qn // block_q,),
         in_specs=in_specs,
-        out_specs=[blk(l_width), blk(l_width), blk(1)],
-        out_shape=[
-            jax.ShapeDtypeStruct((qn, l_width), jnp.int32),
-            jax.ShapeDtypeStruct((qn, l_width), jnp.float32),
-            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, l_width), jnp.int32),    # frontier ids
-            pltpu.VMEM((block_q, l_width), jnp.float32),  # frontier dists
-            pltpu.VMEM((block_q, l_width), jnp.int32),    # visited flags
-            pltpu.VMEM((block_q, 1), jnp.int32),          # hop counters
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(jnp.asarray(schedule, jnp.int32).reshape(-1),

@@ -47,6 +47,7 @@ for outstanding tickets in `StepResult.rebalanced` (docs/resharding.md).
 
 from __future__ import annotations
 
+import time
 import warnings
 from dataclasses import dataclass
 from typing import Any, Iterable, NamedTuple
@@ -58,6 +59,7 @@ from repro.core.search_spec import (
     SearchSpec,
     check_quantized_backend,
 )
+from repro.obs.tracing import span as obs_span
 
 # One stamped-result type across the stack: the service's ticket IS the
 # core's search result (ids, dists, n_hops, generation).
@@ -108,6 +110,13 @@ class ServiceStats:
 
     def as_dict(self) -> dict:
         return dict(self.__dict__, mean_hops=self.mean_hops)
+
+    def to_dict(self) -> dict:
+        """Plain-JSON snapshot: guarded derived rates included, every
+        value a native scalar (numpy leaks coerced) — `json.dumps`-able
+        as-is, asserted by the round-trip test in tests/test_obs.py."""
+        from repro.obs.metrics import plain_json
+        return plain_json(self.as_dict())
 
 
 class AnnsService:
@@ -169,6 +178,10 @@ class AnnsService:
         self.verify = verify
         self.stats = ServiceStats()
         self._searcher = None             # lazy compiled session
+        self._metrics = None              # lazy MetricsRegistry
+        self._hops_hist = None
+        self._occ_hist = None
+        self._lat_hist = None
 
     # ------------------------------------------------------------------ ops
     @property
@@ -191,22 +204,59 @@ class AnnsService:
             self._searcher = self.index.searcher(self.spec)
         return self._searcher
 
+    def metrics(self):
+        """The service's unified metrics plane (lazily created).
+
+        One `MetricsRegistry` folding ServiceStats (`service.*`), the
+        index's plan-cache counters (`plan_cache.*`), and per-shard
+        live/imbalance gauges (`shards.*`) as snapshot-time collectors,
+        plus the search histograms (`search.latency_us`, `search.hops`,
+        `search.beam_occupancy` — occupancy fills only when the served
+        spec has telemetry="on"). Never touching this method keeps the
+        serve loop metrics-free: histograms observe only once the
+        registry exists.
+        """
+        if self._metrics is None:
+            from repro.obs import metrics as obs_metrics
+            reg = obs_metrics.MetricsRegistry()
+            reg.register_collector(
+                "service", obs_metrics.service_stats_collector(self))
+            reg.register_collector(
+                "plan_cache", obs_metrics.plan_cache_collector(self.index))
+            reg.register_collector(
+                "shards", obs_metrics.shard_gauge_collector(self.index))
+            self._lat_hist = reg.histogram(
+                "search.latency_us", obs_metrics.SEARCH_LATENCY_BUCKETS_US)
+            self._hops_hist = reg.histogram(
+                "search.hops", obs_metrics.HOPS_BUCKETS)
+            self._occ_hist = reg.histogram(
+                "search.beam_occupancy", obs_metrics.BEAM_OCCUPANCY_BUCKETS)
+            self._metrics = reg
+        return self._metrics
+
+    def metrics_snapshot(self) -> dict:
+        """ONE plain-JSON dict over service, plan-cache, per-shard gauges,
+        and the search histograms — the telemetry plane's export."""
+        return self.metrics().snapshot()
+
     def insert(self, vectors) -> np.ndarray:
         """Batch insert; returns assigned row ids (freed slots reused)."""
-        cap_before = self.index.capacity
-        ids = self.index.insert(vectors)
-        self.stats.n_inserts += 1
-        self.stats.n_insert_rows += int(ids.size)
-        self.stats.n_grows += int(self.index.capacity != cap_before)
-        self._stamp()
+        with obs_span("service.insert"):
+            cap_before = self.index.capacity
+            ids = self.index.insert(vectors)
+            self.stats.n_inserts += 1
+            self.stats.n_insert_rows += int(ids.size)
+            self.stats.n_grows += int(self.index.capacity != cap_before)
+            self._stamp()
         return ids
 
     def delete(self, ids) -> int:
         """Batch tombstone delete; graph repair is deferred/amortized."""
-        n = self.index.delete(ids)
-        self.stats.n_deletes += 1
-        self.stats.n_delete_rows += n
-        self._stamp()
+        with obs_span("service.delete"):
+            n = self.index.delete(ids)
+            self.stats.n_deletes += 1
+            self.stats.n_delete_rows += n
+            self._stamp()
         return n
 
     def _finish(self, res: SearchResult) -> SearchTicket:
@@ -231,8 +281,19 @@ class AnnsService:
         self.stats.last_mean_hops = float(n_hops.mean()) if n_hops.size \
             else 0.0
         self._stamp()
+        tel = res.telemetry
+        if tel is not None:
+            tel = type(tel)(*(np.asarray(t) for t in tel))
+        if self._metrics is not None:
+            self._hops_hist.observe_many(n_hops.tolist())
+            if tel is not None:
+                occ = tel.occupancy
+                # hops a row never ran stay 0 in the log — only real
+                # per-hop occupancies feed the histogram
+                self._occ_hist.observe_many(occ[occ > 0].tolist())
         return SearchTicket(ids=ids, dists=np.asarray(res.dists),
-                            n_hops=n_hops, generation=res.generation)
+                            n_hops=n_hops, generation=res.generation,
+                            telemetry=tel)
 
     def search(self, queries, k: int | None = None, **kw) -> SearchTicket:
         """Serve one search batch at the current snapshot generation.
@@ -248,7 +309,12 @@ class AnnsService:
                 "spec=SearchSpec(...) configuration instead "
                 "(see docs/search_api.md)",
                 DeprecationWarning, stacklevel=2)
-        return self._finish(self.searcher(k, **kw).search(queries))
+        with obs_span("service.search"):
+            t0 = time.perf_counter()
+            ticket = self._finish(self.searcher(k, **kw).search(queries))
+            if self._metrics is not None:
+                self._lat_hist.observe((time.perf_counter() - t0) * 1e6)
+        return ticket
 
     MAX_INFLIGHT = 2        # double buffer: bound queued device work
     _FLUSH_EVERY = 16       # run(): bound the buffered search-op payloads
@@ -276,9 +342,11 @@ class AnnsService:
                             and self.index.n_deleted > 0)
         if not trigger:
             return None
-        stats = self.index.consolidate()
-        self.stats.n_consolidations += 1
-        self._stamp()
+        with obs_span("service.consolidate",
+                      deleted_fraction=float(self.index.deleted_fraction)):
+            stats = self.index.consolidate()
+            self.stats.n_consolidations += 1
+            self._stamp()
         return stats
 
     def maybe_rebalance(self, force: bool = False) -> dict | None:
@@ -299,7 +367,9 @@ class AnnsService:
         trigger = force or (thresh > 0 and idx.shard_imbalance >= thresh)
         if not trigger:
             return None
-        stats = idx.rebalance()
+        with obs_span("service.rebalance",
+                      imbalance=float(idx.shard_imbalance)):
+            stats = idx.rebalance()
         if stats.get("n_moved"):
             self.stats.n_rebalances += 1
             self.stats.n_rebalance_rows += stats["n_moved"]
@@ -320,11 +390,12 @@ class AnnsService:
         searches run last and observe every mutation of the tick, stamped
         with the post-mutation generation.
         """
-        n_del = self.delete(deletes) if deletes is not None else 0
-        cons = self.maybe_consolidate()
-        reb = self.maybe_rebalance()
-        ins = self.insert(inserts) if inserts is not None else None
-        ticket = self.search(queries, k) if queries is not None else None
+        with obs_span("service.step"):
+            n_del = self.delete(deletes) if deletes is not None else 0
+            cons = self.maybe_consolidate()
+            reb = self.maybe_rebalance()
+            ins = self.insert(inserts) if inserts is not None else None
+            ticket = self.search(queries, k) if queries is not None else None
         return StepResult(inserted_ids=ins, n_deleted=n_del,
                           consolidated=cons, search=ticket, rebalanced=reb)
 

@@ -143,6 +143,15 @@ def single_results():
                     queries)
                 out[(quantized, lane, tombstones)] = (
                     np.asarray(res.ids), np.asarray(res.dists))
+            # telemetry lane (ISSUE 7): the same megakernel search with
+            # counters on — the off/on bit-identity cell of the matrix
+            spec_on = _lane_spec("megakernel", quantized).with_(
+                telemetry="on")
+            res_on = idx.searcher(spec_on).search(queries)
+            out[("tel", quantized, tombstones)] = (
+                np.asarray(res_on.ids), np.asarray(res_on.dists),
+                tuple(np.asarray(t) for t in res_on.telemetry),
+                np.asarray(res_on.n_hops))
     return out
 
 
@@ -184,6 +193,35 @@ def test_single_shard_fused_cell(single_results, quantized, lane,
     np.testing.assert_allclose(dists, dists_ref,
                                rtol=KERNEL_DIST_RTOL,
                                atol=KERNEL_DIST_ATOL)
+
+
+TEL_CELLS = [
+    pytest.param(quantized, tombstones,
+                 id=f"{'rabitq' if quantized else 'exact'}-"
+                    f"{'tomb' if tombstones else 'clean'}")
+    for quantized in (False, True)
+    for tombstones in (False, True)
+]
+
+
+@pytest.mark.parametrize("quantized,tombstones", TEL_CELLS)
+def test_single_shard_telemetry_lane(single_results, quantized, tombstones):
+    """Telemetry on is observation only: ids/dists BIT-identical to the
+    off cell of the same config, with sane counters riding along."""
+    ids_on, dists_on, tel, hops = single_results[
+        ("tel", quantized, tombstones)]
+    ids_off, dists_off = single_results[(quantized, "megakernel",
+                                         tombstones)]
+    assert np.array_equal(ids_on, ids_off)
+    assert np.array_equal(dists_on, dists_off)
+    scored, masked, dups, occ = tel
+    assert scored.shape == (Q,) and (scored > 0).all()
+    # default traverse-mode tombstones never mask a candidate
+    assert (masked == 0).all()
+    # occupancy is logged for exactly the hops each row took
+    for r in range(Q):
+        assert (occ[r, :hops[r]] > 0).all()
+        assert (occ[r, hops[r]:] == 0).all()
 
 
 # -------------------------------------------------------------- 4 shards
@@ -246,6 +284,26 @@ for tombstones in (False, True):
                 recall=rec,
                 leaks=int(np.isin(ids, dead_set).sum()),
                 ids=ids.tolist(), dists=np.asarray(res.dists).tolist())
+    # telemetry lane (ISSUE 7): counters psum'd across the row shards
+    # must equal the integer sum of each shard's own single-core search
+    # (shard_core -> core_search), and ids/dists must bit-match the off
+    # megakernel lane
+    from repro.core.index_core import core_search
+    spec_on = lane_spec("megakernel", True, K=K, BEAM=BEAM).with_(
+        telemetry="on")
+    res_on = idx.searcher(spec_on).search(queries)
+    rspec = spec_on.resolve()
+    tot = None
+    for s in range(4):
+        out4 = core_search(idx.shard_core(s), queries, spec=rspec)
+        t = tuple(np.asarray(x).astype(np.int64) for x in out4[3])
+        tot = t if tot is None else tuple(a + b for a, b in zip(tot, t))
+    cells["telemetry"] = dict(
+        ids=np.asarray(res_on.ids).tolist(),
+        dists=np.asarray(res_on.dists).tolist(),
+        tel=[np.asarray(t).astype(np.int64).tolist()
+             for t in res_on.telemetry],
+        shard_sum=[t.tolist() for t in tot])
     report[str(tombstones)] = cells
 print("CONFORMANCE_JSON=" + json.dumps(report))
 """
@@ -319,3 +377,24 @@ def test_four_shard_fused_cell(sharded_results, single_results,
     rec_single = _recall(ids_single, single_results[("gt", tombstones)])
     assert cell["recall"] >= rec_single - SHARD_RECALL_SLACK, (
         cell["recall"], rec_single)
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+@pytest.mark.parametrize("tombstones", [False, True],
+                         ids=["clean", "tomb"])
+def test_four_shard_telemetry_lane(sharded_results, tombstones):
+    """Sharded telemetry: (a) observation only — ids/dists bit-match the
+    off megakernel lane; (b) the psum'd counters equal the integer sum
+    of every shard's own single-core search, exactly — the sharded
+    reduction adds nothing and loses nothing."""
+    cells = sharded_results[str(tombstones)]
+    cell = cells["telemetry"]
+    ref = cells["True-megakernel"]
+    assert cell["ids"] == ref["ids"]
+    assert cell["dists"] == ref["dists"]
+    names = ("scored", "masked", "duplicates", "occupancy")
+    for name, a, b in zip(names, cell["tel"], cell["shard_sum"]):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (
+            f"{name}: sharded psum != sum over shard cores")
+    assert (np.asarray(cell["tel"][0]) > 0).all()
