@@ -18,6 +18,7 @@ from benchmarks import (
     quantization,
     queries,
     roofline_anns,
+    serving,
     tiles,
     updates,
 )
@@ -50,6 +51,11 @@ SECTIONS = {
     # paper Fig 9 / §6.5
     "roofline_anns": lambda csv, fast: roofline_anns.run(
         csv, n=3000 if fast else None),
+    # standing-query scheduler: coalescing A/B at saturation + open-loop
+    # Poisson/bursty latency sweeps (emits BENCH_serving.json)
+    "serving": lambda csv, fast: serving.run(
+        csv, n=2000 if fast else None,
+        n_arrivals=400 if fast else 2000),
     # sharded search: QPS vs shard count + merge-collective bytes.
     # Subprocess: the multi-device XLA flag must precede jax init, and by
     # the time run.py gets here jax is already initialized single-device.

@@ -77,6 +77,36 @@ def check_snapshot(snap: dict) -> None:
             raise ValueError(f"{name}: non-JSON value {type(val).__name__}")
 
 
+def check_scheduler(snap: dict) -> dict | None:
+    """Cross-field consistency for the `scheduler.*` namespace (the
+    standing-query scheduler's counters), when present in a snapshot:
+    every dispatched batch must have exactly one flush reason, the
+    submitted >= dispatched >= completed funnel must hold, and batch
+    occupancy is a fraction. Returns the stripped-namespace dict (None
+    when the snapshot has no scheduler series)."""
+    s = {k[len("scheduler."):]: v for k, v in snap.items()
+         if k.startswith("scheduler.") and not isinstance(v, dict)}
+    if not s:
+        return None
+    reasons = ("full", "deadline", "idle", "drain")
+    flushes = sum(s.get(f"flush_{r}", 0) for r in reasons)
+    if flushes != s.get("batches", 0):
+        raise ValueError(f"scheduler: flush reasons sum to {flushes}, "
+                         f"batches is {s.get('batches')}")
+    funnel = (s.get("completed", 0), s.get("dispatched", 0),
+              s.get("submitted", 0))
+    if not funnel[0] <= funnel[1] <= funnel[2]:
+        raise ValueError("scheduler: completed <= dispatched <= submitted "
+                         f"violated: {funnel}")
+    occ = s.get("mean_batch_occupancy")
+    if occ is not None and not 0.0 <= occ <= 1.0:
+        raise ValueError(f"scheduler: mean_batch_occupancy {occ} not in "
+                         "[0, 1]")
+    if s.get("queue_depth", 0) < 0 or s.get("inflight", 0) < 0:
+        raise ValueError("scheduler: negative depth gauge")
+    return s
+
+
 def print_trace_summary(stats: dict) -> None:
     print(f"{'span':<24s} {'count':>6s} {'total_ms':>10s} "
           f"{'mean_ms':>9s} {'max_ms':>9s}")
@@ -101,6 +131,35 @@ def print_snapshot(snap: dict) -> None:
             print(f"{name:<28s} {val}")
 
 
+def print_scheduler_summary(s: dict, snap: dict) -> None:
+    """Human-oriented digest of the scheduler series: queue/in-flight
+    depth, batch occupancy, and the flush-reason breakdown."""
+    batches = s.get("batches", 0)
+    print(f"queue_depth={s.get('queue_depth', 0)} "
+          f"inflight={s.get('inflight', 0)} lanes={s.get('lanes', 0)}")
+    print(f"submitted={s.get('submitted', 0)} "
+          f"dispatched={s.get('dispatched', 0)} "
+          f"completed={s.get('completed', 0)} "
+          f"rejected={s.get('rejected', 0)} "
+          f"slo_misses={s.get('slo_misses', 0)}")
+    occ = s.get("mean_batch_occupancy")
+    occ = "-" if occ is None else f"{occ:.3f}"
+    print(f"batches={batches} mean_occupancy={occ} "
+          f"padded_rows={s.get('padded_rows', 0)}")
+    if batches:
+        parts = []
+        for r in ("full", "deadline", "idle", "drain"):
+            n = s.get(f"flush_{r}", 0)
+            if n:
+                parts.append(f"{r}={n} ({100.0 * n / batches:.0f}%)")
+        print("flush reasons: " + (" ".join(parts) or "none"))
+    hist = snap.get("scheduler.batch_occupancy")
+    if isinstance(hist, dict) and hist.get("count"):
+        print(f"occupancy hist: count={hist['count']} "
+              f"mean={hist['mean']:.3f} min={hist['min']:.3f} "
+              f"max={hist['max']:.3f}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("paths", nargs="+",
@@ -122,10 +181,15 @@ def main() -> int:
             print()
         if snap:
             check_snapshot(snap)
+            sched = check_scheduler(snap)
             any_snap = True
             print(f"== metrics snapshot: {path} ({len(snap)} series) ==")
             print_snapshot(snap)
             print()
+            if sched is not None:
+                print(f"== scheduler: {path} ==")
+                print_scheduler_summary(sched, snap)
+                print()
     if not (any_trace or any_snap):
         print("no trace events or metrics found", file=sys.stderr)
         return 1

@@ -26,7 +26,7 @@ case "$mode" in
     python -m pytest -q -m "not slow and not multidevice" \
       tests/test_core_anns.py tests/test_kernels.py \
       tests/test_conformance.py tests/test_search_spec.py \
-      tests/test_service.py "$@"
+      tests/test_service.py tests/test_scheduler.py "$@"
     # spec-API churn lane: mutation-engine scenario end-to-end through the
     # spec-driven serving loop, asserting Searcher-session reuse (zero
     # plan-cache retraces across ticks)
@@ -56,6 +56,14 @@ case "$mode" in
     python examples/streaming_updates.py --churn --quick --trace "$obs_out"
     python scripts/obs_report.py "$obs_out"
     rm -f "$obs_out"
+    # serving lane (ISSUE 8): seeded open-loop Poisson/bursty traces
+    # through the standing-query scheduler — two priority lanes,
+    # shape-bucketed coalescing, zero steady-state retraces — with the
+    # scheduler metrics section schema-checked by the report tool
+    serve_out="$(mktemp -t serve_trace.XXXXXX.json)"
+    python examples/streaming_updates.py --serve --quick --trace "$serve_out"
+    python scripts/obs_report.py "$serve_out"
+    rm -f "$serve_out"
     ;;
   *)
     echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2

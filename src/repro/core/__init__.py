@@ -60,6 +60,7 @@ from repro.core.index_core import (
     init_core,
 )
 from repro.core.search_spec import (
+    BUCKET_LADDER,
     CacheStats,
     PlanCache,
     ResolvedSearchSpec,
@@ -67,13 +68,16 @@ from repro.core.search_spec import (
     SearchResult,
     SearchSpec,
     SearchSurface,
+    bucket_for,
     measure_recall,
+    pad_to_bucket,
 )
 from repro.core.index import JasperIndex
 
 __all__ = [
     "SearchSpec", "ResolvedSearchSpec", "SearchResult", "Searcher",
     "PlanCache", "CacheStats", "SearchSurface", "measure_recall",
+    "BUCKET_LADDER", "bucket_for", "pad_to_bucket",
     "l2_squared", "inner_product", "pairwise_l2_squared",
     "pairwise_inner_product", "pairwise_distance",
     "mips_augment_data", "mips_augment_query",

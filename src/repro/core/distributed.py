@@ -302,7 +302,8 @@ class ShardedJasperIndex(SearchSurface):
                  spec: ShardSpec | None = None, metric: str = "l2",
                  construction: ConstructionParams | None = None,
                  quantization: str | None = None, bits: int = 4,
-                 seed: int = 0, id_stride: int | None = None):
+                 seed: int = 0, id_stride: int | None = None,
+                 plan_cache_capacity: int | None = None):
         """id_stride: global ids are shard*id_stride + local, fixed for the
         index lifetime (default 4x capacity_per_shard) — capacity can grow
         up to the stride without invalidating outstanding ids."""
@@ -350,8 +351,9 @@ class ShardedJasperIndex(SearchSurface):
         self.core = self._device_put(self._empty_stacked_core())
         # compiled-executable cache (search plans + insert/boot/delete
         # steps) with hit/miss/trace counters — the same PlanCache the
-        # single-device driver owns; Searcher sessions share it
-        self.plans = PlanCache()
+        # single-device driver owns; Searcher sessions share it.
+        # plan_cache_capacity bounds it LRU-style (None = unbounded)
+        self.plans = PlanCache(capacity=plan_cache_capacity)
         # old->new IdTranslation of the last shard-count-changing load
         # (None after a same-count restore or a fresh construction)
         self.reshard_translation = None

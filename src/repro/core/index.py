@@ -106,7 +106,7 @@ class JasperIndex(SearchSurface):
     def __init__(self, dims: int, capacity: int, *, metric: str = "l2",
                  quantization: str | None = None, bits: int = 4,
                  construction: ConstructionParams | None = None,
-                 seed: int = 0):
+                 seed: int = 0, plan_cache_capacity: int | None = None):
         if metric not in ("l2", "mips"):
             raise ValueError(f"metric must be l2|mips, got {metric!r}")
         if quantization not in (None, "rabitq", "pq"):
@@ -133,8 +133,10 @@ class JasperIndex(SearchSurface):
                                          self.params.degree_bound)
         # compiled search plans keyed on (resolved spec, query shape,
         # liveness mode) — the single-device twin of the sharded driver's
-        # plan cache; Searcher sessions and the legacy shims share it
-        self.plans = PlanCache()
+        # plan cache; Searcher sessions and the legacy shims share it.
+        # plan_cache_capacity bounds it LRU-style (None = unbounded) —
+        # serving traffic with many (spec, shape) pairs should set it
+        self.plans = PlanCache(capacity=plan_cache_capacity)
         # PQ is the deprecated comparison baseline — it rides as driver-side
         # side arrays, deliberately OUTSIDE the core (the sharded backend
         # and the kernel stack only ever see RaBitQ)

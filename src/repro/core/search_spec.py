@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import json
 import numbers
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import asdict, dataclass, fields, replace
 from typing import Any, NamedTuple
 
@@ -56,6 +56,44 @@ SPEC_VERSION = 1
 FUSION_MODES = ("none", "hop", "megakernel")
 
 TELEMETRY_MODES = ("off", "on")
+
+# The default shape ladder for coalesced serving (serving/scheduler.py):
+# standing queries are padded up to the next rung so EVERY dispatched
+# batch has one of these shapes — the plan cache then holds at most
+# len(ladder) search plans per (spec, liveness) pair and steady-state
+# open-loop traffic retraces nothing, whatever the arrival pattern.
+BUCKET_LADDER = (1, 8, 32, 128)
+
+
+def bucket_for(n: int, ladder: tuple = BUCKET_LADDER) -> int:
+    """The smallest ladder rung >= n — the padded batch shape a coalesced
+    dispatch of n queries uses. n above the top rung returns the top rung
+    (callers split oversized batches; the scheduler never dispatches more
+    than `ladder[-1]` queries in one launch)."""
+    if n < 1:
+        raise ValueError(f"bucket_for needs n >= 1, got {n}")
+    for b in sorted(ladder):
+        if n <= b:
+            return int(b)
+    return int(max(ladder))
+
+
+def pad_to_bucket(queries: np.ndarray, ladder: tuple = BUCKET_LADDER
+                  ) -> tuple[np.ndarray, int]:
+    """Pad a (n, D) query batch up to its ladder rung: returns
+    `(padded (bucket, D), n)`. Padding rows repeat the last real query —
+    in-distribution values, so the padded rows walk the same graph and
+    never poison batchmates (searches are row-independent) — and the
+    caller slices results back to the first n rows, so padding never
+    leaks into returned tickets (asserted in tests/test_scheduler.py).
+    """
+    q = np.asarray(queries)
+    n = int(q.shape[0])
+    bucket = bucket_for(n, ladder)
+    if bucket == n:
+        return q, n
+    pad = np.repeat(q[-1:], bucket - n, axis=0)
+    return np.concatenate([q, pad], axis=0), n
 
 
 def check_quantized_backend(index, *, need_codes: bool = True) -> None:
@@ -313,6 +351,7 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     traces: int = 0
+    evictions: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -334,27 +373,59 @@ class CacheStats:
 
 
 class PlanCache:
-    """Executable cache keyed on (kind, resolved spec, shapes, liveness).
+    """Executable cache keyed on (kind, resolved spec, shapes, liveness),
+    LRU-bounded when given a capacity.
 
     Both index drivers own one. `get` returns the cached plan or builds
     it; builders bump `stats.traces` from INSIDE the traced function, so
     the counter reflects actual retraces (jit re-entry on a changed core
     structure counts; a cache hit on an unchanged key does not).
+
+    `capacity=None` (the default) keeps every plan forever — fine for a
+    benchmark sweep, unbounded growth under mixed-spec serving traffic
+    (every (spec, bucket shape) pair is a new executable). With a
+    capacity, `get` is LRU: a hit refreshes the key, an insert past
+    capacity drops the least-recently-used plan and bumps
+    `stats.evictions` (surfaced as `plan_cache.evictions` in the unified
+    metrics snapshot). An evicted plan that comes back is a fresh
+    miss + retrace — size the capacity above the working set (lanes x
+    bucket ladder) so steady state stays at zero retraces.
     """
 
-    def __init__(self) -> None:
-        self._plans: dict = {}
+    def __init__(self, capacity: int | None = None) -> None:
+        self._plans: OrderedDict = OrderedDict()
         self.stats = CacheStats()
+        self.capacity = capacity
+
+    @property
+    def capacity(self) -> int | None:
+        return self._capacity
+
+    @capacity.setter
+    def capacity(self, capacity: int | None) -> None:
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"PlanCache capacity must be >= 1 or None, "
+                             f"got {capacity}")
+        self._capacity = capacity
+        self._evict()
 
     def get(self, key, build):
         try:
             plan = self._plans[key]
+            self._plans.move_to_end(key)      # LRU refresh
             self.stats.hits += 1
             return plan
         except KeyError:
             self.stats.misses += 1
             plan = self._plans[key] = build()
+            self._evict()
             return plan
+
+    def _evict(self) -> None:
+        while (self._capacity is not None
+               and len(self._plans) > self._capacity):
+            self._plans.popitem(last=False)   # least recently used
+            self.stats.evictions += 1
 
     def count_trace(self) -> None:
         """Call from inside a traced function body: runs once per trace."""

@@ -15,6 +15,7 @@ Three layers, one import:
 """
 
 from repro.obs.metrics import (
+    BATCH_OCCUPANCY_BUCKETS,
     BEAM_OCCUPANCY_BUCKETS,
     HOPS_BUCKETS,
     SEARCH_LATENCY_BUCKETS_US,
@@ -24,6 +25,7 @@ from repro.obs.metrics import (
     MetricsRegistry,
     plain_json,
     plan_cache_collector,
+    scheduler_stats_collector,
     service_stats_collector,
     shard_gauge_collector,
 )
@@ -36,6 +38,7 @@ from repro.obs.tracing import (
 )
 
 __all__ = [
+    "BATCH_OCCUPANCY_BUCKETS",
     "BEAM_OCCUPANCY_BUCKETS",
     "HOPS_BUCKETS",
     "SEARCH_LATENCY_BUCKETS_US",
@@ -47,6 +50,7 @@ __all__ = [
     "get_tracer",
     "plain_json",
     "plan_cache_collector",
+    "scheduler_stats_collector",
     "service_stats_collector",
     "set_tracer",
     "shard_gauge_collector",

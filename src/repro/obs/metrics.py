@@ -26,7 +26,9 @@ from typing import Any, Callable, Iterable, Mapping
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "SEARCH_LATENCY_BUCKETS_US", "HOPS_BUCKETS", "BEAM_OCCUPANCY_BUCKETS",
+    "BATCH_OCCUPANCY_BUCKETS",
     "service_stats_collector", "plan_cache_collector", "shard_gauge_collector",
+    "scheduler_stats_collector",
 ]
 
 # Fixed bucket sets for the three paper-relevant distributions. Upper
@@ -36,6 +38,9 @@ SEARCH_LATENCY_BUCKETS_US = (
     50_000.0, 100_000.0, 250_000.0, 1_000_000.0)
 HOPS_BUCKETS = (1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0)
 BEAM_OCCUPANCY_BUCKETS = (4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
+# coalesced-batch fill fraction (valid rows / padded bucket size) per
+# dispatched batch — 1.0 means no padding waste at all
+BATCH_OCCUPANCY_BUCKETS = (0.125, 0.25, 0.5, 0.75, 0.9, 1.0)
 
 
 def _plain(v: Any):
@@ -228,12 +233,27 @@ def service_stats_collector(service) -> Callable[[], Mapping]:
 
 
 def plan_cache_collector(index) -> Callable[[], Mapping]:
-    """`plan_cache.*` from an index's PlanCache: raw counters + entry
-    count + guarded hit_rate."""
+    """`plan_cache.*` from an index's PlanCache: raw counters (including
+    LRU `evictions`) + entry count + configured capacity + guarded
+    hit_rate."""
     def collect() -> Mapping:
         d = dict(index.plans.stats.as_dict())
         d["entries"] = len(index.plans)
+        d["capacity"] = index.plans.capacity
         return d
+    return collect
+
+
+def scheduler_stats_collector(get_scheduler) -> Callable[[], Mapping]:
+    """`scheduler.*` from a StandingQueryScheduler's `stats_view()` —
+    flush-reason counters, queue-depth/in-flight gauges, mean batch
+    occupancy. `get_scheduler` is the scheduler itself or a zero-arg
+    callable returning it (the service registers the callable form so
+    the snapshot always reads the CURRENT scheduler; no scheduler yet
+    means no scheduler.* keys, not stale zeros)."""
+    def collect() -> Mapping:
+        sched = get_scheduler() if callable(get_scheduler) else get_scheduler
+        return sched.stats_view() if sched is not None else {}
     return collect
 
 

@@ -1,6 +1,8 @@
 """Serving: batched KV-cache decode, retrieval-augmented serving (RAG),
-and the online ANNS update/serve loop (insert/delete/search over one
-JasperIndex with generation-stamped results)."""
+the online ANNS update/serve loop (insert/delete/search over one
+JasperIndex with generation-stamped results), and the standing-query
+scheduler front-end (shape-bucketed coalescing + deadline-aware dispatch
+over open-loop traffic, with seeded Poisson/bursty load generation)."""
 
 from repro.serving.serve_loop import generate, make_serve_step
 from repro.serving.rag import RagPipeline
@@ -10,6 +12,17 @@ from repro.serving.anns_service import (
     ServiceStats,
     StepResult,
 )
+from repro.serving.loadgen import Arrival, bursty_trace, poisson_trace
+from repro.serving.scheduler import (
+    QueryHandle,
+    SchedulerConfig,
+    SchedulerStats,
+    StandingQueryScheduler,
+    summarize_handles,
+)
 
 __all__ = ["generate", "make_serve_step", "RagPipeline",
-           "AnnsService", "SearchTicket", "ServiceStats", "StepResult"]
+           "AnnsService", "SearchTicket", "ServiceStats", "StepResult",
+           "Arrival", "poisson_trace", "bursty_trace",
+           "QueryHandle", "SchedulerConfig", "SchedulerStats",
+           "StandingQueryScheduler", "summarize_handles"]

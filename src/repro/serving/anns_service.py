@@ -182,6 +182,8 @@ class AnnsService:
         self._hops_hist = None
         self._occ_hist = None
         self._lat_hist = None
+        self._scheduler = None            # last standing-query scheduler
+        self._batch_occ_hist = None
 
     # ------------------------------------------------------------------ ops
     @property
@@ -225,12 +227,22 @@ class AnnsService:
                 "plan_cache", obs_metrics.plan_cache_collector(self.index))
             reg.register_collector(
                 "shards", obs_metrics.shard_gauge_collector(self.index))
+            # the CURRENT standing-query scheduler (no scheduler yet ->
+            # no scheduler.* keys, not stale zeros)
+            reg.register_collector(
+                "scheduler", obs_metrics.scheduler_stats_collector(
+                    lambda: self._scheduler))
             self._lat_hist = reg.histogram(
                 "search.latency_us", obs_metrics.SEARCH_LATENCY_BUCKETS_US)
             self._hops_hist = reg.histogram(
                 "search.hops", obs_metrics.HOPS_BUCKETS)
             self._occ_hist = reg.histogram(
                 "search.beam_occupancy", obs_metrics.BEAM_OCCUPANCY_BUCKETS)
+            self._batch_occ_hist = reg.histogram(
+                "scheduler.batch_occupancy",
+                obs_metrics.BATCH_OCCUPANCY_BUCKETS)
+            if self._scheduler is not None:
+                self._scheduler.occupancy_hist = self._batch_occ_hist
             self._metrics = reg
         return self._metrics
 
@@ -333,6 +345,106 @@ class AnnsService:
             if ses.submit(q) >= self.MAX_INFLIGHT:
                 tickets += [self._finish(r) for r in ses.drain(1)]
         return tickets + [self._finish(r) for r in ses.drain()]
+
+    # ----------------------------------------- standing-query serving front
+    def scheduler(self, *, lanes: dict | None = None, clock=None,
+                  **config):
+        """Open a standing-query scheduler over this service's index
+        (serving/scheduler.py): shape-bucketed coalescing into the plan
+        cache's padded batch shapes, deadline-aware flushes, overlapped
+        double-buffered dispatch, bounded-queue backpressure.
+
+        The `"default"` lane serves the service's spec; `lanes` adds
+        workload classes as {name: spec} or {name: (spec, priority)}
+        (lower priority value = dispatched first). `config` kwargs are
+        `SchedulerConfig` fields (buckets, slo_budget_s, flush_fraction,
+        max_queue, max_inflight). Each call opens a FRESH scheduler
+        (fresh queues and counters) — compiled plans persist in the
+        index's shared `PlanCache`, so a re-opened scheduler retraces
+        nothing. The metrics plane always reads the newest one.
+        """
+        from repro.serving.scheduler import StandingQueryScheduler
+        kw = {"clock": clock} if clock is not None else {}
+        sched = StandingQueryScheduler(self.index, self.spec,
+                                       **config, **kw)
+        for name, entry in (lanes or {}).items():
+            spec, priority = entry if isinstance(entry, tuple) \
+                else (entry, 0)
+            sched.add_lane(name, spec, priority=priority)
+        if self._batch_occ_hist is not None:
+            sched.occupancy_hist = self._batch_occ_hist
+        self._scheduler = sched
+        return sched
+
+    def serve(self, trace, queries, *, lanes: dict | None = None,
+              scheduler=None, realtime: bool = True, clock=None,
+              **config) -> tuple[dict, list]:
+        """Replay an open-loop arrival trace (serving/loadgen.py) through
+        the standing-query scheduler; THE serving front-end loop.
+
+        trace:    iterable of `Arrival(at, query_id, lane, slo_budget_s)`.
+        queries:  (N, D) pool the trace's query_ids index into.
+        realtime: honor arrival times (open loop: submission never waits
+                  for completions — while the next arrival is in the
+                  future the loop keeps polling, so harvest/dispatch
+                  overlap admission). False = saturation replay: every
+                  arrival is admitted as fast as the queue bound allows
+                  (the offered-load -> infinity limit).
+
+        Returns `(report, handles)`: an open-loop serving report (QPS,
+        p50/p99 latency, SLO hit rate, flush-reason breakdown, batch
+        occupancy — the BENCH_serving.json record shape) and the
+        per-query handles. Completed queries fold into `ServiceStats`
+        and the serving contract (no tombstoned ids, ever) is verified
+        over every returned ticket when `verify=True`.
+        """
+        import time as _time
+
+        from repro.serving.scheduler import summarize_handles
+        clk = clock or _time.monotonic
+        sched = scheduler if scheduler is not None else \
+            self.scheduler(lanes=lanes, clock=clk, **config)
+        queries = np.asarray(queries, dtype=np.float32)
+        handles = []
+        t0 = clk()
+        with obs_span("service.serve", realtime=realtime):
+            for a in trace:
+                if realtime:
+                    while clk() - t0 < a.at:
+                        sched.poll()       # overlap: harvest + dispatch
+                handles.append(sched.submit(
+                    queries[a.query_id], lane=a.lane,
+                    slo_budget_s=a.slo_budget_s))
+                sched.poll()
+            sched.drain()
+        wall = clk() - t0
+        done = [h for h in handles if h.status == "done"]
+        if done:
+            ids = np.concatenate([h.ids for h in done])
+            if self.verify:
+                returned = ids[ids >= 0]
+                dead = returned[self.index.tombstoned(returned)]
+                if dead.size:
+                    raise AssertionError(
+                        "serving contract violated: tombstoned ids "
+                        f"returned by the scheduler: {dead[:8].tolist()}")
+            self.stats.n_searches += sched.stats.batches
+            self.stats.n_search_queries += len(done)
+            hops = np.asarray([h.n_hops for h in done], dtype=np.float64)
+            self.stats.hops_sum += float(hops.sum())
+            self.stats.last_mean_hops = float(hops.mean())
+            self._stamp()
+            if self._metrics is not None:
+                self._hops_hist.observe_many(hops.tolist())
+                self._lat_hist.observe_many(
+                    [h.latency_s * 1e6 for h in done])
+        report = summarize_handles(handles, wall)
+        report["flush_reasons"] = sched.stats.flush_reasons()
+        report["batches"] = sched.stats.batches
+        report["mean_batch_occupancy"] = round(
+            sched.stats.mean_batch_occupancy, 4)
+        report["padded_rows"] = sched.stats.padded_rows
+        return report, handles
 
     def maybe_consolidate(self, force: bool = False) -> dict | None:
         """Repair the graph if the tombstone load factor warrants it."""
