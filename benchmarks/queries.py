@@ -133,6 +133,63 @@ def run(csv: Csv, datasets=("bigann", "deep", "gist"), k: int = 10,
                 "plan_cache": cache,
             })
 
+        # filtered sweep (ISSUE 9): label a fraction `s` of the rows and
+        # search with filter=(bit,) — recall is measured against the
+        # brute-force top-k OVER THE MATCHING SUBSET, and every returned
+        # id must be in-filter (leaks is a hard zero). One label bit per
+        # selectivity, so the cells share one index and (per mode) ONE
+        # compiled plan — filter values are runtime operands.
+        if quant is not None:
+            frng = np.random.default_rng(77)
+            beam = max(b for b in BEAMS if b >= k)
+            sels = (0.1, 0.5, 0.9)
+            # ONE uniform draw -> nested masks, labeled in one call:
+            # set_labels replaces whole label rows, so each row must
+            # carry every bit it belongs to
+            u = frng.random(data.shape[0])
+            masks = [u < s for s in sels]
+            idx.set_labels(
+                np.arange(u.size),
+                [tuple(b for b, s in enumerate(sels) if u[i] < s)
+                 for i in range(u.size)])
+            for (bit, mask), s in zip(enumerate(masks), sels):
+                sub = np.flatnonzero(mask)
+                x = data[sub]
+                if ds.metric == "mips":
+                    dm = -(queries @ x.T)
+                else:
+                    dm = ((x ** 2).sum(1)[None, :]
+                          - 2.0 * queries @ x.T)
+                fgt = sub[np.argsort(dm, axis=1)[:, :k]]
+                for mode in ("traverse", "exclude"):
+                    spec = SearchSpec(k=k, beam_width=beam, quantized=True,
+                                      fusion="megakernel", filter=(bit,),
+                                      filter_mode=mode)
+                    ses = idx.searcher(spec)
+                    res = ses.search(queries)
+                    us = time_call(lambda: ses.search(queries))
+                    ids = np.asarray(res.ids)
+                    leaks = int((~np.isin(ids[ids >= 0], sub)).sum())
+                    frec = float(np.mean(
+                        [len(set(ids[i]) & set(fgt[i])) / k
+                         for i in range(ids.shape[0])]))
+                    qps = queries.shape[0] / (us / 1e6)
+                    label = f"rabitq_mega_filt{s}/{mode}"
+                    csv.add(f"queries/{name}/{label}", us,
+                            f"recall@{k}={frec:.3f} {qps:.0f} q/s "
+                            f"leaks={leaks}")
+                    records.append({
+                        "dataset": name, "path": "rabitq_mega_filtered",
+                        "beam": beam, "k": k, "dims": d, "bits": BITS,
+                        "fusion": "megakernel",
+                        "selectivity": s, "filter_mode": mode,
+                        "spec": spec.to_dict(),
+                        "us_per_batch": round(us, 1),
+                        "qps": round(qps, 1),
+                        "recall": round(frec, 4),
+                        "filter_leaks": leaks,
+                    })
+
     if out_json:
         with open(out_json, "w") as f:
             json.dump({"note": ("CPU interpret-mode timings — relative "

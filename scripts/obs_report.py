@@ -107,6 +107,36 @@ def check_scheduler(snap: dict) -> dict | None:
     return s
 
 
+def check_tenants(snap: dict) -> dict | None:
+    """Group and sanity-check the `tenants.<name>.<counter>` namespace:
+    live must equal inserted - deleted and never be negative, quotas (if
+    set) must not be exceeded. Returns {tenant: {counter: value}} or
+    None when the snapshot has no tenant series."""
+    tenants: dict = {}
+    for k, v in snap.items():
+        if not k.startswith("tenants.") or isinstance(v, dict):
+            continue
+        name, _, counter = k[len("tenants."):].partition(".")
+        if not counter:
+            raise ValueError(f"malformed tenant series name: {k}")
+        tenants.setdefault(name, {})[counter] = v
+    if not tenants:
+        return None
+    for name, t in tenants.items():
+        live = t.get("live", 0)
+        if live != t.get("n_inserted", 0) - t.get("n_deleted", 0):
+            raise ValueError(
+                f"tenant {name}: live={live} != inserted-deleted "
+                f"({t.get('n_inserted', 0)}-{t.get('n_deleted', 0)})")
+        if live < 0:
+            raise ValueError(f"tenant {name}: negative live rows")
+        quota = t.get("quota_rows")
+        if quota is not None and live > quota:
+            raise ValueError(f"tenant {name}: live={live} exceeds "
+                             f"quota_rows={quota}")
+    return tenants
+
+
 def print_trace_summary(stats: dict) -> None:
     print(f"{'span':<24s} {'count':>6s} {'total_ms':>10s} "
           f"{'mean_ms':>9s} {'max_ms':>9s}")
@@ -160,6 +190,22 @@ def print_scheduler_summary(s: dict, snap: dict) -> None:
               f"max={hist['max']:.3f}")
 
 
+def print_tenants_summary(tenants: dict) -> None:
+    """Per-tenant digest: one row per namespace, quota utilization when
+    a quota is set."""
+    print(f"{'tenant':<12s} {'bit':>3s} {'live':>7s} {'ins':>7s} "
+          f"{'del':>7s} {'searches':>8s} {'queries':>8s} {'quota':>10s}")
+    for name in sorted(tenants):
+        t = tenants[name]
+        quota = t.get("quota_rows")
+        quota_s = ("-" if quota is None
+                   else f"{t.get('live', 0)}/{quota}")
+        print(f"{name:<12s} {t.get('label', '?'):>3} "
+              f"{t.get('live', 0):>7} {t.get('n_inserted', 0):>7} "
+              f"{t.get('n_deleted', 0):>7} {t.get('n_searches', 0):>8} "
+              f"{t.get('n_search_queries', 0):>8} {quota_s:>10s}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("paths", nargs="+",
@@ -182,6 +228,7 @@ def main() -> int:
         if snap:
             check_snapshot(snap)
             sched = check_scheduler(snap)
+            tenants = check_tenants(snap)
             any_snap = True
             print(f"== metrics snapshot: {path} ({len(snap)} series) ==")
             print_snapshot(snap)
@@ -189,6 +236,10 @@ def main() -> int:
             if sched is not None:
                 print(f"== scheduler: {path} ==")
                 print_scheduler_summary(sched, snap)
+                print()
+            if tenants is not None:
+                print(f"== tenants: {path} ==")
+                print_tenants_summary(tenants)
                 print()
     if not (any_trace or any_snap):
         print("no trace events or metrics found", file=sys.stderr)

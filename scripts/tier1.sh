@@ -56,6 +56,11 @@ case "$mode" in
     python examples/streaming_updates.py --churn --quick --trace "$obs_out"
     python scripts/obs_report.py "$obs_out"
     rm -f "$obs_out"
+    # filter lane (ISSUE 9): multi-tenant churn over the label-filter
+    # plane — per-tick cross-tenant isolation in both filter modes,
+    # quota enforced before mutation, and one shared plan per lane
+    # (tenant filter values are runtime operands, never plan keys)
+    python examples/streaming_updates.py --tenants --quick
     # serving lane (ISSUE 8): seeded open-loop Poisson/bursty traces
     # through the standing-query scheduler — two priority lanes,
     # shape-bucketed coalescing, zero steady-state retraces — with the

@@ -187,15 +187,24 @@ def apply_beam_width(f_ids, f_dists, f_vis, w):
             jnp.where(keep, f_vis, False))
 
 
-def finalize_frontier(f_ids, f_dists, tombstone_bits):
-    """Shared search epilogue: drop tombstoned entries to the (+inf, -1)
-    tail and mask unconverged +inf padding back to -1 ids. Every search
-    path — fused or not — finishes through this one function, so the
-    'never return a deleted id' invariant has a single definition."""
+def finalize_frontier(f_ids, f_dists, tombstone_bits, labels=None,
+                      filter_bytes=None):
+    """Shared search epilogue: drop tombstoned and out-of-filter entries
+    to the (+inf, -1) tail and mask unconverged +inf padding back to -1
+    ids. Every search path — fused or not — finishes through this one
+    function, so the 'never return a deleted id' invariant (and its label
+    twin: 'never return an out-of-filter id', in BOTH filter modes) has a
+    single definition."""
+    drop = None
     if tombstone_bits is not None:
         from repro.core.mutations import bitmap_gather  # lazy: no cycle
-        dead = bitmap_gather(tombstone_bits, f_ids)
-        f_dists = jnp.where(dead, _INF, f_dists)
+        drop = bitmap_gather(tombstone_bits, f_ids)
+    if labels is not None:
+        from repro.core.mutations import label_match_gather
+        miss = ~label_match_gather(labels, filter_bytes, f_ids) & (f_ids >= 0)
+        drop = miss if drop is None else (drop | miss)
+    if drop is not None:
+        f_dists = jnp.where(drop, _INF, f_dists)
         f_dists, f_ids = jax.lax.sort((f_dists, f_ids), dimension=1,
                                       is_stable=True, num_keys=1)
     f_ids = jnp.where(jnp.isfinite(f_dists), f_ids, -1)
@@ -209,6 +218,9 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 merge_strategy: str = "topk",
                 tombstone_bits: Array | None = None,
                 traverse_deleted: bool = True,
+                labels: Array | None = None,
+                filter_bytes: Array | None = None,
+                filter_exclude: bool = False,
                 beam_schedule: tuple | None = None,
                 telemetry: bool = False) -> BeamSearchResult:
     """Run greedy beam search for a batch of queries.
@@ -240,6 +252,16 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
                 masks them during scoring as well (fused into self-masking
                 kernel epilogues), the cheaper mode once `consolidate` has
                 repaired the graph around them.
+    labels / filter_bytes: optional per-row label plane (uint8[cap, NB],
+                core.mutations) and query byte mask (uint8[NB]). A row
+                matches when its bitset intersects the mask. The FINAL
+                frontier is always filtered to matching rows — searches
+                never return an out-of-filter id, whatever the walk mode.
+    filter_exclude: False (default, mode "traverse") walks through
+                non-matching rows for connectivity; True (mode "exclude")
+                additionally masks them during scoring, mirroring
+                `traverse_deleted=False` (self-masking kernel scorers fold
+                the label gather into their epilogues).
     beam_schedule: optional static per-hop frontier widths (wide early,
                 narrow late) — hop t merges at full width then narrows to
                 `schedule[min(t, len-1)]` slots (see expand_schedule /
@@ -261,8 +283,13 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
     # own masking pass; self-masking scorers fold the bitmap in-kernel
     exclude_in_body = (tombstone_bits is not None and not traverse_deleted
                        and not self_masking)
-    if tombstone_bits is not None:
-        from repro.core.mutations import bitmap_gather  # lazy: no cycle
+    # exclude-mode label filtering for jnp scorers mirrors the tombstone
+    # path; self-masking scorers fold the label gather in-kernel
+    filter_in_body = (labels is not None and filter_exclude
+                      and not self_masking)
+    if tombstone_bits is not None or labels is not None:
+        from repro.core.mutations import (  # lazy: no cycle
+            bitmap_gather, label_match_gather)
     adj = graph.adjacency
     n_valid = graph.n_valid
     degree = adj.shape[1]
@@ -294,6 +321,7 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
     # the counter cannot ride on `exclude_in_body`
     count_masked = (telemetry and tombstone_bits is not None
                     and not traverse_deleted)
+    count_fmasked = telemetry and labels is not None and filter_exclude
 
     state = (jnp.int32(0), init_ids, init_dists, init_vis,
              visited_log, visited_dlog, n_hops)
@@ -356,16 +384,27 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
             dead = bitmap_gather(tombstone_bits, nbrs) & valid
         if exclude_in_body:
             valid &= ~dead
+        if count_fmasked or filter_in_body:
+            # tombstone test FIRST: a dead candidate counts once in
+            # `masked`, whatever the filter says about it
+            fmiss = ~label_match_gather(labels, filter_bytes, nbrs) & valid
+            if (count_masked or exclude_in_body) and not exclude_in_body:
+                fmiss &= ~dead
+        if filter_in_body:
+            valid &= ~fmiss
         nbrs = jnp.where(valid, nbrs, -1)
         if telemetry:
             scored, masked, dups, occ_log = st[7:]
             dead_n = (jnp.sum(dead, axis=1).astype(jnp.int32)
                       if count_masked else jnp.int32(0))
+            fmiss_n = (jnp.sum(fmiss, axis=1).astype(jnp.int32)
+                       if count_fmasked else jnp.int32(0))
             # counters naturally stay 0 on converged rows: cur = -1 there,
             # so every neighbor is -1 and in_range is all-False
             scored = scored + (jnp.sum(valid, axis=1).astype(jnp.int32)
-                               - (0 if exclude_in_body else dead_n))
-            masked = masked + dead_n
+                               - (0 if exclude_in_body else dead_n)
+                               - (0 if filter_in_body else fmiss_n))
+            masked = masked + dead_n + fmiss_n
             dups = dups + jnp.sum(in_range & dup, axis=1).astype(jnp.int32)
 
         d = score_fn(nbrs)                                 # (Q, E*R)
@@ -408,10 +447,12 @@ def beam_search(graph: VamanaGraph, score_fn: ScoreFn, num_queries: int | None =
 
     _, f_ids, f_dists, f_vis, vlog, vdlog, hops = state[:7]
     tel = SearchTelemetry(*state[7:]) if telemetry else None
-    # returnability filter: tombstoned frontier entries drop to the tail as
-    # (+inf, -1) — searches NEVER return deleted ids, whatever the
-    # traversal mode was
-    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
+    # returnability filter: tombstoned and out-of-filter frontier entries
+    # drop to the tail as (+inf, -1) — searches NEVER return deleted or
+    # out-of-filter ids, whatever the traversal/filter mode was
+    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits,
+                                       labels=labels,
+                                       filter_bytes=filter_bytes)
     return BeamSearchResult(frontier_ids=f_ids, frontier_dists=f_dists,
                             visited_ids=vlog, visited_dists=vdlog,
                             n_hops=hops, telemetry=tel)
@@ -470,6 +511,9 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                           merge_strategy: str = "topk",
                           tombstone_bits: Array | None = None,
                           traverse_deleted: bool = True,
+                          labels: Array | None = None,
+                          filter_bytes: Array | None = None,
+                          filter_exclude: bool = False,
                           beam_schedule: tuple | None = None,
                           telemetry: bool = False,
                           interpret: bool | None = None) -> BeamSearchResult:
@@ -484,6 +528,9 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
     tombstone_bits/traverse_deleted mirror `beam_search`; in exclude mode
     the kernel path folds the bitmap into the search-step epilogue (one
     byte-gather per candidate rides along with the packed-code gather).
+    labels/filter_bytes/filter_exclude mirror `beam_search` the same way:
+    exclude-mode label masking rides the identical kernel epilogue, and
+    the final frontier (and its exact rerank) is always label-filtered.
 
     Optionally reranks the final frontier with exact distances — the standard
     RaBitQ recipe for recovering recall lost to the estimator.
@@ -494,6 +541,8 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
         score = make_rabitq_kernel_scorer(
             codes, query, n_valid=graph.n_valid,
             tombstone_bits=(None if traverse_deleted else tombstone_bits),
+            labels=(labels if filter_exclude else None),
+            filter_bytes=(filter_bytes if filter_exclude else None),
             interpret=interpret)
     else:
         score = make_rabitq_scorer(codes, query)
@@ -503,6 +552,8 @@ def beam_search_quantized(graph: VamanaGraph, codes: RaBitQCodes,
                       merge_strategy=merge_strategy,
                       tombstone_bits=tombstone_bits,
                       traverse_deleted=traverse_deleted,
+                      labels=labels, filter_bytes=filter_bytes,
+                      filter_exclude=filter_exclude,
                       beam_schedule=beam_schedule,
                       telemetry=telemetry)
     if rerank_score_fn is None:

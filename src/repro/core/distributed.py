@@ -59,10 +59,11 @@ from repro.core.index_core import (
     core_from_arrays,
     core_insert_at,
     core_search,
+    core_set_labels,
     core_to_arrays,
     init_core,
 )
-from repro.core.mutations import MutationState
+from repro.core.mutations import MutationState, pack_label_rows
 from repro.core.rabitq import RaBitQCodes, RaBitQParams, rabitq_train
 from repro.core.resharding import pow2_rung
 from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
@@ -104,8 +105,8 @@ def _core_layout(template: IndexCore, row_axes, wrap):
     row2 = wrap(P(row_axes, None))
     row1 = wrap(P(row_axes))
     repl = wrap(P())
-    mut = MutationState(tombstone_bits=row1, free_ids=row1, n_free=row1,
-                        n_deleted=row1, generation=row1)
+    mut = MutationState(tombstone_bits=row1, labels=row2, free_ids=row1,
+                        n_free=row1, n_deleted=row1, generation=row1)
     codes = None
     if template.codes is not None:
         codes = RaBitQCodes(packed=row2, data_add=row1, data_rescale=row1,
@@ -203,16 +204,24 @@ def sharded_search_fn(mesh: Mesh, shard_spec: ShardSpec,
     the shards' own single-device counters exactly (conformance lane).
     trace_counter: optional zero-arg hook bumped at trace time (the plan
     cache's retrace counter).
+
+    With spec.filtered the step takes a third operand — the uint8[NB]
+    filter byte mask, REPLICATED (P()) so every shard evaluates the same
+    label predicate in its own kernel epilogue. Filter-off plans keep
+    their exact two-operand signature (bit-identical plan, same cache
+    entry as pre-filter builds).
     """
     row_axes = shard_spec.row_axes
     tel_on = spec.telemetry == "on"
+    filtered = spec.filtered
 
-    def local_search(core_stacked, queries):
+    def local_search(core_stacked, queries, *maybe_fb):
         if trace_counter is not None:
             trace_counter()
         core = _local_core(core_stacked)
         out = core_search(
-            core, queries, spec=spec, filter_tombstones=filter_tombstones)
+            core, queries, spec=spec, filter_tombstones=filter_tombstones,
+            filter_bytes=maybe_fb[0] if filtered else None)
         ids, dists, n_hops = out[:3]
         row0 = _shard_index(row_axes, dict(mesh.shape)) * id_stride
         gids = jnp.where(ids >= 0, ids + row0, -1)
@@ -232,13 +241,16 @@ def sharded_search_fn(mesh: Mesh, shard_spec: ShardSpec,
         # SearchTelemetry: three (Q,) counters + one (Q, max_iters) log
         out_specs = out_specs + (
             SearchTelemetry(h_spec, h_spec, h_spec, q_spec),)
+    in_specs = (core_partition_specs(template, shard_spec), q_spec)
+    in_shardings = (core_shardings(mesh, template, shard_spec),
+                    NamedSharding(mesh, q_spec))
+    if filtered:
+        in_specs = in_specs + (P(),)
+        in_shardings = in_shardings + (NamedSharding(mesh, P()),)
     fn = shard_map(
         local_search, mesh=mesh,
-        in_specs=(core_partition_specs(template, shard_spec), q_spec),
-        out_specs=out_specs, check_vma=False)
-    return jax.jit(fn,
-                   in_shardings=(core_shardings(mesh, template, shard_spec),
-                                 NamedSharding(mesh, q_spec)))
+        in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    return jax.jit(fn, in_shardings=in_shardings)
 
 
 def sharded_insert_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore, *,
@@ -393,6 +405,7 @@ class ShardedJasperIndex(SearchSurface):
             adjacency=c.adjacency[rows], n_valid=c.n_valid[s],
             medoid=c.medoid[s],
             mut=MutationState(tombstone_bits=c.mut.tombstone_bits[bits],
+                              labels=c.mut.labels[rows],
                               free_ids=c.mut.free_ids[rows],
                               n_free=c.mut.n_free[s],
                               n_deleted=c.mut.n_deleted[s],
@@ -426,6 +439,7 @@ class ShardedJasperIndex(SearchSurface):
             medoid=vec(lambda c: c.medoid),
             mut=MutationState(
                 tombstone_bits=cat(lambda c: c.mut.tombstone_bits),
+                labels=cat(lambda c: c.mut.labels),
                 free_ids=cat(lambda c: c.mut.free_ids),
                 n_free=vec(lambda c: c.mut.n_free),
                 n_deleted=vec(lambda c: c.mut.n_deleted),
@@ -566,12 +580,21 @@ class ShardedJasperIndex(SearchSurface):
             self.core = self._device_put(attach_quantizer(self.core, params))
             self.plans.clear()          # core structure changed
 
-    def build(self, data) -> "ShardedJasperIndex":
+    def build(self, data, *, labels=None) -> "ShardedJasperIndex":
         """Bulk build. data: (N, D) with N divisible by n_shards — rows are
-        dealt contiguously to shards (shard s owns data[s*per:(s+1)*per])."""
+        dealt contiguously to shards (shard s owns data[s*per:(s+1)*per]).
+        labels: optional per-row label sets (see `set_labels`), in the
+        same dealt order as data."""
         with obs_span("index.build", n=int(np.asarray(data).shape[0]),
                       sharded=True):
-            return self._build_impl(data)
+            self._build_impl(data)
+            if labels is not None:
+                n = int(np.asarray(data).shape[0])
+                per = n // self.n_shards
+                gids = (np.arange(self.n_shards)[:, None] * self.id_stride
+                        + np.arange(per)[None, :]).astype(np.int64)
+                self.set_labels(gids.reshape(-1), labels)
+            return self
 
     def _build_impl(self, data) -> "ShardedJasperIndex":
         data = self._prep_data(data)
@@ -611,7 +634,7 @@ class ShardedJasperIndex(SearchSurface):
         jax.block_until_ready(self.core.adjacency)
         return self
 
-    def insert(self, data) -> np.ndarray:
+    def insert(self, data, *, labels=None) -> np.ndarray:
         """Streaming insert of (S, b, D) — b rows per shard — or (N, D)
         with N divisible by n_shards (dealt contiguously).
 
@@ -619,6 +642,10 @@ class ShardedJasperIndex(SearchSurface):
         high-water mark, so uneven shards (after deletes on some shards
         only) allocate correctly. Returns the GLOBAL row ids, shaped like
         the input batch ((S, b) or (N,)).
+
+        labels: optional label sets for the batch (one label id, one
+        sequence per row, or one shared set — see `set_labels`), in the
+        flat dealt order.
         """
         data = jnp.asarray(data, jnp.float32)
         flat_in = data.ndim == 2
@@ -637,7 +664,7 @@ class ShardedJasperIndex(SearchSurface):
             # empty index: a clean per-shard build beats stitching onto a
             # dead graph (mirrors the single-device driver)
             s, b = data.shape[0], data.shape[1]
-            self.build(data.reshape(s * b, -1))
+            self.build(data.reshape(s * b, -1), labels=labels)
             ids = (np.arange(s)[:, None] * self.id_stride
                    + np.arange(b)[None, :]).astype(np.int32)
             return ids.reshape(-1) if flat_in else ids
@@ -645,8 +672,23 @@ class ShardedJasperIndex(SearchSurface):
         local_ids, global_ids = self._allocate_slots_per_shard(data.shape[1])
         self.core = self._fn("insert", b=data.shape[1])(
             self.core, jnp.asarray(local_ids), data)
+        if labels is not None:
+            self.set_labels(global_ids.reshape(-1), labels)
         jax.block_until_ready(self.core.adjacency)
         return global_ids.reshape(-1) if flat_in else global_ids
+
+    def set_labels(self, ids, labels) -> None:
+        """Assign label bitsets to GLOBAL ids: one label id, one sequence
+        of label ids per row, or one shared set for the whole batch
+        (`core.mutations.pack_label_rows` semantics). Rows keep their
+        labels through consolidate/grow/rebalance/reshard."""
+        ids = np.atleast_1d(np.asarray(ids)).astype(np.int64).ravel()
+        rows = pack_label_rows(labels, ids.size)
+        pos = (ids // self.id_stride) * self.cap + ids % self.id_stride
+        lab = self.core.mut.labels.at[jnp.asarray(pos, jnp.int32)].set(
+            jnp.asarray(rows))
+        self.core = self._device_put(replace(
+            self.core, mut=replace(self.core.mut, labels=lab)))
 
     def _allocate_slots_per_shard(self, b: int
                                   ) -> tuple[np.ndarray, np.ndarray]:
@@ -667,6 +709,7 @@ class ShardedJasperIndex(SearchSurface):
             cap = self.cap
         free_ids = np.asarray(self.core.mut.free_ids).reshape(s, cap).copy()
         bits = np.asarray(self.core.mut.tombstone_bits).copy()
+        labels = np.asarray(self.core.mut.labels).copy()
         local = np.empty((s, b), np.int32)
         for i in range(s):
             t = int(take[i])
@@ -674,13 +717,16 @@ class ShardedJasperIndex(SearchSurface):
             local[i, :t] = reused
             local[i, t:] = n_valid[i] + np.arange(b - t, dtype=np.int32)
             # pop: shift the pool, clear the popped slots' tombstone bits
+            # and their stale label rows (slots recycle label-clean)
             free_ids[i] = np.concatenate(
                 [free_ids[i, t:], np.full((t,), -1, np.int32)])
             g = reused.astype(np.int64) + i * cap
             clear = (~(np.int64(1) << (g & 7)) & 0xFF).astype(np.uint8)
             np.bitwise_and.at(bits, g >> 3, clear)
+            labels[g] = 0
         mut = replace(self.core.mut,
                       tombstone_bits=jnp.asarray(bits),
+                      labels=jnp.asarray(labels),
                       free_ids=jnp.asarray(free_ids.reshape(-1)),
                       n_free=jnp.asarray((n_free - take).astype(np.int32)))
         self.core = self._device_put(replace(self.core, mut=mut))
@@ -785,6 +831,7 @@ class ShardedJasperIndex(SearchSurface):
             adjacency=per_shard_pad(c.adjacency, -1),
             mut=replace(c.mut,
                         tombstone_bits=per_shard_pad(c.mut.tombstone_bits, 0),
+                        labels=per_shard_pad(c.mut.labels, 0),
                         free_ids=per_shard_pad(c.mut.free_ids, -1),
                         generation=c.mut.generation + 1),
             codes=codes))
@@ -828,11 +875,14 @@ class ShardedJasperIndex(SearchSurface):
 
         vecs = np.asarray(self.core.vectors).reshape(
             self.n_shards, self.cap, -1)
+        labs = np.asarray(self.core.mut.labels).reshape(
+            self.n_shards, self.cap, -1)
         locals_ = [self.shard_core(s) for s in range(self.n_shards)]
         old_gids, new_gids = [], []
         # 1. receivers first (rows must exist somewhere at every point)
         for dst, pairs in plan.moves.items():
             rows = np.stack([vecs[s, l] for s, l in pairs])
+            lab_rows = np.stack([labs[s, l] for s, l in pairs])
             core = locals_[dst]
             core, reused = core_take_free_slots(core, len(pairs))
             hw = int(core.n_valid)
@@ -843,6 +893,9 @@ class ShardedJasperIndex(SearchSurface):
             locals_[dst] = core_insert_at(
                 core, jnp.asarray(pad[0]), jnp.asarray(pad[1]),
                 params=self.params)
+            # moved rows keep their label rows bit-identically
+            locals_[dst] = core_set_labels(locals_[dst], jnp.asarray(ids),
+                                           jnp.asarray(lab_rows))
             old_gids += [s * self.id_stride + l for s, l in pairs]
             new_gids += (dst * self.id_stride + ids.astype(np.int64)).tolist()
         # 2. tombstone the moved-out rows on their donors, then repair
@@ -866,8 +919,11 @@ class ShardedJasperIndex(SearchSurface):
     # ------------------------------------------------------------------ search
     # searcher()/recall() come from SearchSurface — the one shared copy
     def _search_plan(self, rspec, q_shape, filt: bool):
-        """Plan-cache lookup/build: `queries -> (GLOBAL ids, dists,
-        n_hops)` — the shard_map'd search step + all_gather merge."""
+        """Plan-cache lookup/build: `(queries, filter_bytes) -> (GLOBAL
+        ids, dists, n_hops)` — the shard_map'd search step + all_gather
+        merge. Filter VALUES ride as a replicated runtime operand; only
+        `rspec.filtered` (presence) is part of the key, so tenant
+        switches never split the plan cache."""
         key = ("search", self.cap, rspec, tuple(q_shape), filt)
 
         def build():
@@ -878,7 +934,10 @@ class ShardedJasperIndex(SearchSurface):
                 trace_counter=self.plans.count_trace)
 
         fn = self.plans.get(key, build)
-        return lambda queries: fn(self.core, queries)
+        if rspec.filtered:
+            return lambda queries, fb=None: fn(self.core, queries,
+                                               jnp.asarray(fb, jnp.uint8))
+        return lambda queries, fb=None: fn(self.core, queries)
 
     def search(self, queries, k: int = 10, *, beam_width: int | None = None,
                max_iters: int | None = None, expand: int = 1,

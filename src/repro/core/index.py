@@ -54,6 +54,7 @@ from repro.core.index_core import (
     core_insert_at,
     core_live_mask,
     core_search,
+    core_set_labels,
     core_size,
     bitmap_test_np,
     core_take_free_slots,
@@ -61,7 +62,7 @@ from repro.core.index_core import (
     init_core,
     tombstoned_lookup,
 )
-from repro.core.mutations import MutationState
+from repro.core.mutations import MutationState, pack_label_rows
 from repro.core.pq import make_pq_scorer, pq_encode, pq_train
 from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
 from repro.obs.tracing import span as obs_span
@@ -304,16 +305,21 @@ class JasperIndex(SearchSurface):
                 pq_encode(self.pq_params, rows))
 
     # ------------------------------------------------------------- build/insert
-    def build(self, data: np.ndarray | Array, *, refine: bool = False,
-              progress_fn=None) -> "JasperIndex":
+    def build(self, data: np.ndarray | Array, *, labels=None,
+              refine: bool = False, progress_fn=None) -> "JasperIndex":
         """Bulk construction over `data` (rows 0..N). Resets the graph and
-        all mutation state (the generation counter keeps advancing)."""
+        all mutation state (the generation counter keeps advancing).
+        `labels`: optional per-row label ids (scalar or per-row sets) for
+        filtered search — see docs/filtered_search.md."""
         with obs_span("index.build", n=int(np.asarray(data).shape[0]),
                       sharded=False):
             x = self._prep_data(data)
             self._ensure_quantizer(x)
             self.core = core_build(self.core, x, params=self.params,
                                    refine=refine, progress_fn=progress_fn)
+            if labels is not None:
+                self.set_labels(np.arange(x.shape[0], dtype=np.int32),
+                                labels)
             self._pq_write(jnp.arange(x.shape[0], dtype=jnp.int32), x)
         return self
 
@@ -337,12 +343,16 @@ class JasperIndex(SearchSurface):
         fresh = np.arange(hw, hw + fresh_needed, dtype=np.int32)
         return np.concatenate([reused, fresh])
 
-    def insert(self, data: np.ndarray | Array) -> np.ndarray:
+    def insert(self, data: np.ndarray | Array, *,
+               labels=None) -> np.ndarray:
         """Streaming batch insertion ("built for change").
 
         Freed slots are reused before the tail advances; the index grows by
         buffer doubling if the batch would overflow capacity. Returns the
         assigned row ids, int32[B] (the ids searches will report).
+        `labels`: optional label ids for the batch (scalar = every row, or
+        one entry/set per row) — set atomically with the rows, so a
+        filtered search never sees an unlabeled live row.
         """
         if np.shape(data)[0] == 0:       # empty tick from a stream: no-op
             return np.empty((0,), np.int32)
@@ -354,14 +364,28 @@ class JasperIndex(SearchSurface):
             self._grow_to_fit(b)
             self._ensure_quantizer(x)
             self.core = core_build(self.core, x, params=self.params)
+            ids = np.arange(b, dtype=np.int32)
+            if labels is not None:
+                self.set_labels(ids, labels)
             self._pq_write(jnp.arange(b, dtype=jnp.int32), x)
-            return np.arange(b, dtype=np.int32)
+            return ids
         ids = self._allocate_slots(b)
         ids_dev = jnp.asarray(ids, jnp.int32)
         self.core = core_insert_at(self.core, ids_dev, x, params=self.params)
+        if labels is not None:
+            self.set_labels(ids, labels)
         self._pq_write(ids_dev, x)
         jax.block_until_ready(self.core.adjacency)   # storage semantics
         return ids
+
+    def set_labels(self, ids, labels) -> None:
+        """Assign per-row label bitsets (filtered search / tenant
+        namespaces). `labels` is a scalar label id (applied to every row),
+        one label id per row, or one label-id set per row; ids must
+        address rows of this index."""
+        ids = np.atleast_1d(np.asarray(ids)).astype(np.int32).ravel()
+        rows = pack_label_rows(labels, ids.size)
+        self.core = core_set_labels(self.core, ids, rows)
 
     # ------------------------------------------------------------- delete/repair
     def delete(self, ids) -> int:
@@ -431,20 +455,33 @@ class JasperIndex(SearchSurface):
     # ------------------------------------------------------------------ search
     # searcher()/recall() come from SearchSurface — the one shared copy
     def _search_plan(self, rspec, q_shape, filt: bool):
-        """Plan-cache lookup/build: `queries -> (ids, dists, n_hops)`."""
+        """Plan-cache lookup/build: `(queries, filter_bytes) ->
+        (ids, dists, n_hops)`. The filter VALUE is a runtime operand of
+        the filtered plan — the key carries only its presence (inside
+        `rspec.filtered`), so every filter value shares one executable."""
         key = ("search", rspec, tuple(q_shape), filt)
 
         def build():
             plans = self.plans
 
-            def run(core, queries):
-                plans.count_trace()       # runs at trace time only
-                return core_search(core, queries, spec=rspec,
-                                   filter_tombstones=filt)
+            if rspec.filtered:
+                def run(core, queries, fb):
+                    plans.count_trace()   # runs at trace time only
+                    return core_search(core, queries, spec=rspec,
+                                       filter_tombstones=filt,
+                                       filter_bytes=fb)
+            else:
+                def run(core, queries):
+                    plans.count_trace()   # runs at trace time only
+                    return core_search(core, queries, spec=rspec,
+                                       filter_tombstones=filt)
             return jax.jit(run)
 
         fn = self.plans.get(key, build)
-        return lambda queries: fn(self.core, queries)
+        if rspec.filtered:
+            return lambda queries, fb=None: fn(
+                self.core, queries, jnp.asarray(fb, jnp.uint8))
+        return lambda queries, fb=None: fn(self.core, queries)
 
     def search(self, queries: np.ndarray | Array, k: int = 10, *,
                beam_width: int | None = None, max_iters: int | None = None,

@@ -49,6 +49,7 @@ from repro.core.construction import (
     build_graph,
 )
 from repro.core.mutations import (
+    N_LABEL_BYTES,
     MutationState,
     consolidate as consolidate_graph,
     delete_rows,
@@ -175,6 +176,18 @@ def core_write_rows(core: IndexCore, ids: Array, rows: Array) -> IndexCore:
     return replace(core, vectors=vectors, vec_sqnorm=sqnorm, codes=codes)
 
 
+def core_set_labels(core: IndexCore, ids, label_rows) -> IndexCore:
+    """Write per-row label bitsets (uint8[B, N_LABEL_BYTES]) for `ids`.
+
+    Labels are row metadata like vec_sqnorm — set at insert, cleared when
+    a slot is reused, moved with the row through rebalance/reshard. Does
+    not bump the generation: the caller's insert already did.
+    """
+    labels = core.mut.labels.at[jnp.asarray(ids, jnp.int32)].set(
+        jnp.asarray(label_rows, jnp.uint8))
+    return replace(core, mut=replace(core.mut, labels=labels))
+
+
 @partial(jax.jit, static_argnames=("params",))
 def core_insert_at(core: IndexCore, ids: Array, rows: Array, *,
                    params: ConstructionParams) -> IndexCore:
@@ -223,7 +236,8 @@ def core_build(core: IndexCore, data: Array, *, params: ConstructionParams,
 
 @partial(jax.jit, static_argnames=("spec", "filter_tombstones"))
 def core_search(core: IndexCore, queries: Array, *, spec,
-                filter_tombstones: bool = True) -> tuple:
+                filter_tombstones: bool = True,
+                filter_bytes: Array | None = None) -> tuple:
     """THE search path — exact and quantized, kernel and jnp, 1..N shards.
 
     spec: a `ResolvedSearchSpec` (frozen/hashable, so it is ONE static jit
@@ -247,11 +261,27 @@ def core_search(core: IndexCore, queries: Array, *, spec,
       configuration: deliberately NOT a spec field.)
     spec.traverse_deleted: False additionally folds the bitmap into the
       scoring epilogues (kernel paths fuse the per-candidate byte gather).
+    filter_bytes: uint8[N_LABEL_BYTES] label filter (runtime operand —
+      the plan never splits on filter VALUES). Must be present iff the
+      spec was resolved from one with a `filter` (spec.filtered is the
+      static presence bit). Rows whose label bitset does not intersect it
+      are never returned; spec.filter_mode == "exclude" additionally
+      masks them during the walk (the traverse/exclude split mirrors
+      traverse_deleted).
     """
     k = spec.k
     tomb = core.mut.tombstone_bits if filter_tombstones else None
     graph = core.graph
     tel_on = spec.telemetry == "on"
+    filtered = spec.filtered
+    if filtered != (filter_bytes is not None):
+        raise ValueError(
+            "spec.filtered and the filter_bytes operand must agree: "
+            f"filtered={filtered}, filter_bytes "
+            f"{'present' if filter_bytes is not None else 'absent'}")
+    labels = core.mut.labels if filtered else None
+    fb = jnp.asarray(filter_bytes, jnp.uint8) if filtered else None
+    filter_exclude = filtered and spec.filter_mode == "exclude"
 
     def _out(ids, dists, res):
         if tel_on:
@@ -273,6 +303,8 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                 max_iters=spec.max_iters, beam_schedule=spec.beam_schedule,
                 codes=core.codes, rq_query=rq, tombstone_bits=tomb,
                 traverse_deleted=spec.traverse_deleted,
+                labels=labels, filter_bytes=fb,
+                filter_exclude=filter_exclude,
                 telemetry=tel_on)
             if spec.rerank:
                 exact_d = rerank_frontier(
@@ -291,6 +323,8 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                 queries=queries, vectors=core.vectors,
                 vec_sqnorm=core.vec_sqnorm, tombstone_bits=tomb,
                 traverse_deleted=spec.traverse_deleted,
+                labels=labels, filter_bytes=fb,
+                filter_exclude=filter_exclude,
                 telemetry=tel_on)
         return _out(res.frontier_ids[:, :k], res.frontier_dists[:, :k], res)
     if spec.quantized:
@@ -302,6 +336,7 @@ def core_search(core: IndexCore, queries: Array, *, spec,
             max_iters=spec.max_iters, expand_per_iter=spec.expand,
             use_kernels=spec.use_kernels, merge_strategy=spec.merge,
             tombstone_bits=tomb, traverse_deleted=spec.traverse_deleted,
+            labels=labels, filter_bytes=fb, filter_exclude=filter_exclude,
             beam_schedule=spec.beam_schedule, telemetry=tel_on)
         if spec.rerank:
             exact_d = rerank_frontier(
@@ -316,7 +351,9 @@ def core_search(core: IndexCore, queries: Array, *, spec,
             from repro.kernels.distance.ops import make_kernel_scorer
             score = make_kernel_scorer(
                 core.vectors, queries, graph.n_valid, core.vec_sqnorm,
-                tombstone_bits=(None if spec.traverse_deleted else tomb))
+                tombstone_bits=(None if spec.traverse_deleted else tomb),
+                labels=(labels if filter_exclude else None),
+                filter_bytes=(fb if filter_exclude else None))
         else:
             score = make_exact_scorer(core.vectors, queries, graph.n_valid,
                                       core.vec_sqnorm)
@@ -327,6 +364,8 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                           merge_strategy=spec.merge,
                           tombstone_bits=tomb,
                           traverse_deleted=spec.traverse_deleted,
+                          labels=labels, filter_bytes=fb,
+                          filter_exclude=filter_exclude,
                           beam_schedule=spec.beam_schedule,
                           telemetry=tel_on)
     return _out(res.frontier_ids[:, :k], res.frontier_dists[:, :k], res)
@@ -419,18 +458,30 @@ def bitmap_test_np(tombstone_bits: np.ndarray, ids: np.ndarray) -> np.ndarray:
     """Host-side per-id bit test over the PACKED bytes (one byte gather +
     shift/mask per id) — the single definition of the bitmap encoding on
     the host; every delete-validation / serving-contract check goes
-    through here so the encoding can never silently diverge."""
+    through here so the encoding can never silently diverge.
+
+    Out-of-domain ids read as NOT SET: the `-1` dead-id sentinel (used by
+    `IdTranslation`, masked frontiers, and padded merges) used to wrap via
+    numpy's arithmetic shift (`-1 >> 3 == -1`) into the LAST byte and
+    return that row's bit — garbage liveness. Ids past the bitmap (e.g. a
+    global id against a smaller shard bitmap) were an index error waiting
+    to happen; both are now clamped and masked to a defined False.
+    """
     ids = np.asarray(ids)
-    return ((tombstone_bits[ids >> 3] >> (ids & 7)) & 1) == 1
+    bits = np.asarray(tombstone_bits)
+    n_bits = bits.size * 8
+    in_domain = (ids >= 0) & (ids < n_bits)
+    safe = np.clip(ids, 0, max(n_bits - 1, 0))
+    return (((bits[safe >> 3] >> (safe & 7)) & 1) == 1) & in_domain
 
 
 def tombstoned_lookup(tombstone_bits: np.ndarray, n_valid: int,
                       ids: np.ndarray) -> np.ndarray:
-    """Host-side per-id deadness test: True where an id is tombstoned/freed
-    or past the high-water mark. The serving layer's contract check — the
-    bitmap never unpacks densely."""
+    """Host-side per-id deadness test: True where an id is tombstoned/freed,
+    past the high-water mark, or not a real row at all (negative sentinel).
+    The serving layer's contract check — the bitmap never unpacks densely."""
     ids = np.asarray(ids)
-    return bitmap_test_np(tombstone_bits, ids) | (ids >= n_valid)
+    return bitmap_test_np(tombstone_bits, ids) | (ids >= n_valid) | (ids < 0)
 
 
 # ---------------------------------------------------------------------------
@@ -446,6 +497,7 @@ def core_to_arrays(core: IndexCore) -> dict[str, np.ndarray]:
         "n_valid": np.asarray(core.n_valid),
         "medoid": np.asarray(core.medoid),
         "tombstone_bits": np.asarray(core.mut.tombstone_bits),
+        "labels": np.asarray(core.mut.labels),
         "free_ids": np.asarray(core.mut.free_ids),
         "n_free": np.asarray(core.mut.n_free),
         "n_deleted": np.asarray(core.mut.n_deleted),
@@ -470,6 +522,10 @@ def core_from_arrays(data: Mapping, *, bits: int, store_dims: int,
     if "tombstone_bits" in data:
         mut_kwargs = dict(
             tombstone_bits=jnp.asarray(data["tombstone_bits"]),
+            # pre-label-plane checkpoints: all-zero rows (match no filter)
+            labels=(jnp.asarray(data["labels"]) if "labels" in data
+                    else jnp.zeros((vectors.shape[0], N_LABEL_BYTES),
+                                   jnp.uint8)),
             free_ids=jnp.asarray(data["free_ids"]),
             n_free=jnp.asarray(data["n_free"]),
             n_deleted=jnp.asarray(data["n_deleted"]),

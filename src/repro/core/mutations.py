@@ -32,6 +32,15 @@ frontier through the bitmap); whether deleted nodes remain *traversable*
 during the walk is the caller's choice (`traverse_deleted`) — keeping them
 walkable preserves graph connectivity between consolidations, masking them
 in the scoring epilogue is cheaper once the graph has been repaired.
+
+The same machinery generalizes from one liveness bit to a per-row LABEL
+BITSET (``labels``: uint8[capacity, N_LABEL_BYTES], 32 label bits): a row
+matches a filter when its bitset intersects the filter's byte mask, which
+is one extra byte-row gather + AND per candidate in the exact epilogues
+where liveness already tests its bit (`label_match_gather` mirrors
+`bitmap_gather`). Labels are set at insert, cleared on slot reuse, and
+preserved bit-identically through delete/consolidate/grow — filtered and
+multi-tenant search (docs/filtered_search.md) ride entirely on this plane.
 """
 
 from __future__ import annotations
@@ -91,18 +100,87 @@ def bitmap_gather(bits: Array, ids: Array) -> Array:
 
 
 # ---------------------------------------------------------------------------
+# Per-row label bitsets (filtered / multi-tenant search)
+# ---------------------------------------------------------------------------
+
+# Width of the label plane: 8 * N_LABEL_BYTES label bits per row. 32 bits
+# covers tenant namespaces and coarse predicates; widening is a single
+# constant change (the plane is capacity-major, so it grows like any row).
+N_LABEL_BYTES = 4
+N_LABELS = 8 * N_LABEL_BYTES
+
+
+def _check_label(label: int) -> int:
+    label = int(label)
+    if not 0 <= label < N_LABELS:
+        raise ValueError(f"label id {label} out of range [0, {N_LABELS})")
+    return label
+
+
+def filter_to_bytes(label_ids) -> np.ndarray:
+    """Label-id set -> uint8[N_LABEL_BYTES] byte mask (the runtime search
+    operand: a row matches when its label row ANDs nonzero against it)."""
+    fb = np.zeros((N_LABEL_BYTES,), np.uint8)
+    for label in label_ids:
+        label = _check_label(label)
+        fb[label >> 3] |= np.uint8(1 << (label & 7))
+    return fb
+
+
+def pack_label_rows(labels, n_rows: int) -> np.ndarray:
+    """Per-row label sets -> uint8[n_rows, N_LABEL_BYTES] bitset rows.
+
+    `labels` may be None (all-zero rows: the row matches no filter), a
+    scalar label id (broadcast to every row), a 1-D int sequence (one
+    label per row), or a sequence of per-row label-id iterables.
+    """
+    out = np.zeros((n_rows, N_LABEL_BYTES), np.uint8)
+    if labels is None:
+        return out
+    if np.isscalar(labels) or getattr(labels, "ndim", None) == 0:
+        labels = [labels] * n_rows
+    rows = list(labels)
+    if len(rows) != n_rows:
+        raise ValueError(f"labels: got {len(rows)} rows, want {n_rows}")
+    for i, row in enumerate(rows):
+        ids = (row,) if np.isscalar(row) else tuple(row)
+        for label in ids:
+            label = _check_label(label)
+            out[i, label >> 3] |= np.uint8(1 << (label & 7))
+    return out
+
+
+def label_match_gather(labels: Array, filter_bytes: Array, ids: Array
+                       ) -> Array:
+    """Per-id filter test: int32[...] -> bool[...] — True iff the row's
+    label bitset intersects `filter_bytes` (negative ids -> False).
+
+    The label twin of `bitmap_gather`: one (N_LABEL_BYTES,)-row gather +
+    AND/any per id, fused into the same epilogues liveness uses — the
+    dense label plane never unpacks on the search path.
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = labels[safe].astype(jnp.uint8)
+    hit = jnp.any((rows & filter_bytes.astype(jnp.uint8)) != 0, axis=-1)
+    return hit & (ids >= 0)
+
+
+# ---------------------------------------------------------------------------
 # Mutation state
 # ---------------------------------------------------------------------------
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("tombstone_bits", "free_ids", "n_free", "n_deleted",
-                      "generation"),
+         data_fields=("tombstone_bits", "labels", "free_ids", "n_free",
+                      "n_deleted", "generation"),
          meta_fields=())
 @dataclass(frozen=True)
 class MutationState:
     """Delete/reuse bookkeeping for one capacity-allocated index.
 
     tombstone_bits: uint8[ceil(cap/8)]  1 = dead (DELETED or FREE)
+    labels:         uint8[cap, NB]      per-row label bitsets (filtered /
+                                        multi-tenant search; all-zero rows
+                                        match no filter)
     free_ids:       int32[cap]          reusable slots, ascending, -1 padded
     n_free:         int32 scalar        live prefix length of free_ids
     n_deleted:      int32 scalar        tombstoned-but-not-yet-consolidated
@@ -112,6 +190,7 @@ class MutationState:
     """
 
     tombstone_bits: Array
+    labels: Array
     free_ids: Array
     n_free: Array
     n_deleted: Array
@@ -125,6 +204,7 @@ class MutationState:
 def init_mutation_state(capacity: int) -> MutationState:
     return MutationState(
         tombstone_bits=jnp.zeros((bitmap_bytes(capacity),), jnp.uint8),
+        labels=jnp.zeros((capacity, N_LABEL_BYTES), jnp.uint8),
         free_ids=jnp.full((capacity,), -1, jnp.int32),
         n_free=jnp.int32(0),
         n_deleted=jnp.int32(0),
@@ -154,6 +234,7 @@ def delete_rows(state: MutationState, ids: Array, n_valid: Array
     n_new = jnp.sum(newly).astype(jnp.int32)
     return MutationState(
         tombstone_bits=pack_bitmap(dense | newly),
+        labels=state.labels,        # deletes keep label rows (cleared on reuse)
         free_ids=state.free_ids,
         n_free=state.n_free,
         n_deleted=state.n_deleted + n_new,
@@ -283,6 +364,7 @@ def consolidate(vectors: Array, graph: VamanaGraph, state: MutationState, *,
     free_ids[:new_free.size] = new_free
     state = MutationState(
         tombstone_bits=state.tombstone_bits,   # bits stay set until reuse
+        labels=state.labels,                   # live rows' labels untouched
         free_ids=jnp.asarray(free_ids),
         n_free=jnp.int32(new_free.size),
         n_deleted=jnp.int32(0),
@@ -318,6 +400,9 @@ def take_free_slots(state: MutationState, want: int
     dense = dense.at[jnp.asarray(taken)].set(False)
     state = MutationState(
         tombstone_bits=pack_bitmap(dense),
+        # reused slots start label-free: the NEW row's labels are whatever
+        # the caller writes, never the dead predecessor's
+        labels=state.labels.at[jnp.asarray(taken)].set(0),
         free_ids=jnp.asarray(free_ids),
         n_free=jnp.int32(rest.size),
         n_deleted=state.n_deleted,
@@ -335,7 +420,9 @@ def grow_state(state: MutationState, new_capacity: int) -> MutationState:
     bits = bits.at[:state.tombstone_bits.shape[0]].set(state.tombstone_bits)
     free = jnp.full((new_capacity,), -1, jnp.int32)
     free = free.at[:old_cap].set(state.free_ids)
-    return MutationState(tombstone_bits=bits, free_ids=free,
+    return MutationState(tombstone_bits=bits,
+                         labels=grow_rows(state.labels, new_capacity, 0),
+                         free_ids=free,
                          n_free=state.n_free, n_deleted=state.n_deleted,
                          generation=state.generation + 1)
 

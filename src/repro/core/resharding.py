@@ -210,6 +210,7 @@ def _reshard_cores_impl(cores: list[IndexCore], *, old_id_stride: int,
     all_vecs = np.concatenate([np.asarray(c.vectors) for c in cores])
     all_sq = np.concatenate([np.asarray(c.vec_sqnorm) for c in cores])
     all_adj = np.concatenate([np.asarray(c.adjacency) for c in cores])
+    all_labels = np.concatenate([np.asarray(c.mut.labels) for c in cores])
     quantized = cores[0].codes is not None
     if quantized:
         all_packed = np.concatenate([np.asarray(c.codes.packed)
@@ -266,8 +267,10 @@ def _reshard_cores_impl(cores: list[IndexCore], *, old_id_stride: int,
         vecs = np.zeros((cap_new, store_dims), np.float32)
         sq = np.zeros((cap_new,), np.float32)
         adj = np.full((cap_new, degree), -1, np.int32)
+        labels = np.zeros((cap_new, all_labels.shape[1]), np.uint8)
         vecs[:size] = all_vecs[src]
         sq[:size] = all_sq[src]
+        labels[:size] = all_labels[src]      # bit-identical label rows
 
         old_edges = all_adj[src]                               # (size, R)
         flat_edges = np.where(
@@ -312,6 +315,7 @@ def _reshard_cores_impl(cores: list[IndexCore], *, old_id_stride: int,
             adjacency=jnp.asarray(adj), n_valid=jnp.int32(size),
             medoid=jnp.int32(medoid),
             mut=replace(init_mutation_state(cap_new),
+                        labels=jnp.asarray(labels),
                         generation=jnp.int32(gen_next)),
             codes=codes, rq_params=rq)
 

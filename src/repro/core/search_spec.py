@@ -34,8 +34,10 @@ cf. the real-time adaptive multi-stream GPU ANNS system, arXiv:2408.02937):
 Driver contract (both `JasperIndex` and `ShardedJasperIndex` satisfy it):
 `_prep_query`, `_filter_tombstones`, `generation`, `brute_force`, a
 `plans: PlanCache`, and `_search_plan(resolved, q_shape, filt)` returning
-a callable `queries -> (ids, dists, n_hops)` — with a fourth
-`SearchTelemetry` element iff the resolved spec has `telemetry="on"`.
+a callable `(queries, filter_bytes) -> (ids, dists, n_hops)` — with a
+fourth `SearchTelemetry` element iff the resolved spec has
+`telemetry="on"`. `filter_bytes` is the runtime label-filter operand
+(None unless the resolved spec has `filtered=True`).
 """
 
 from __future__ import annotations
@@ -49,6 +51,7 @@ from typing import Any, NamedTuple
 import numpy as np
 
 from repro.core.beam_search import MERGE_STRATEGIES
+from repro.core.mutations import N_LABELS, filter_to_bytes
 from repro.obs.tracing import span as obs_span
 
 SPEC_VERSION = 1
@@ -56,6 +59,11 @@ SPEC_VERSION = 1
 FUSION_MODES = ("none", "hop", "megakernel")
 
 TELEMETRY_MODES = ("off", "on")
+
+# Label-filter walk policy, mirroring `traverse_deleted`: "traverse" walks
+# through non-matching rows (connectivity) but never returns them;
+# "exclude" additionally masks them inside the scoring epilogues.
+FILTER_MODES = ("exclude", "traverse")
 
 # The default shape ladder for coalesced serving (serving/scheduler.py):
 # standing queries are padded up to the next rung so EVERY dispatched
@@ -163,6 +171,18 @@ class SearchSpec:
                   tombstone/filter-masked count, duplicate-visit count,
                   per-hop beam occupancy). Part of the resolved spec, so
                   the plan cache keys it — on/off are separate plans.
+    filter:       label filter — a label id (int) or set of label ids;
+                  only rows whose label bitset intersects it are returned.
+                  None (default) = unfiltered. The VALUE is a runtime
+                  operand (a uint8[N_LABEL_BYTES] byte mask fed to the
+                  compiled plan), so the plan cache splits only on filter
+                  PRESENCE: every filter value shares one executable.
+    filter_mode:  walk policy for non-matching rows, mirroring
+                  `traverse_deleted`: "traverse" (default) walks through
+                  them for connectivity but never returns them; "exclude"
+                  additionally masks them inside the scoring epilogues
+                  (tighter frontiers at low selectivity, at the cost of
+                  routing). Normalized to "traverse" when filter is None.
     """
 
     k: int = 10
@@ -178,6 +198,8 @@ class SearchSpec:
     fusion: str = "none"
     beam_schedule: tuple | None = None
     telemetry: str = "off"
+    filter: tuple | int | None = None
+    filter_mode: str = "traverse"
 
     # ------------------------------------------------------------- resolve
     def resolve(self, index: Any = None) -> "ResolvedSearchSpec":
@@ -202,6 +224,35 @@ class SearchSpec:
             raise ValueError(
                 f"telemetry must be one of {TELEMETRY_MODES}, "
                 f"got {self.telemetry!r}")
+        if self.filter_mode not in FILTER_MODES:
+            raise ValueError(
+                f"filter_mode must be one of {FILTER_MODES}, "
+                f"got {self.filter_mode!r}")
+        filt = self.filter
+        if filt is not None:
+            if isinstance(filt, bool) or (
+                    not isinstance(filt, numbers.Integral)
+                    and not hasattr(filt, "__iter__")):
+                raise ValueError(
+                    f"filter must be a label id, a sequence of label ids, "
+                    f"or None, got {filt!r}")
+            labels = ((filt,) if isinstance(filt, numbers.Integral)
+                      else tuple(filt))
+            if not labels:
+                raise ValueError(
+                    "filter must be a non-empty label set or None (an "
+                    "empty filter would match no rows; pass None to "
+                    "search unfiltered)")
+            for lab in labels:
+                lab = _as_int("filter labels", lab, floor=0)
+                if lab >= N_LABELS:
+                    raise ValueError(
+                        f"filter label {lab} out of range "
+                        f"[0, {N_LABELS})")
+        filtered = filt is not None
+        # filter_mode is dead without a filter — normalize so unfiltered
+        # specs that differ only in mode share one plan-cache entry
+        filter_mode = self.filter_mode if filtered else "traverse"
         schedule = self.beam_schedule
         if schedule is not None:
             try:
@@ -262,7 +313,8 @@ class SearchSpec:
             rerank_tile=rerank_tile, use_kernels=bool(self.use_kernels),
             merge=merge, traverse_deleted=bool(self.traverse_deleted),
             fusion=self.fusion, beam_schedule=schedule,
-            telemetry=self.telemetry)
+            telemetry=self.telemetry, filtered=filtered,
+            filter_mode=filter_mode)
 
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:
@@ -286,6 +338,9 @@ class SearchSpec:
             # JSON round-trips tuples as lists; the spec form is a tuple
             # (hashable — it is part of the plan-cache key)
             d["beam_schedule"] = tuple(d["beam_schedule"])
+        filt = d.get("filter")
+        if filt is not None and not isinstance(filt, numbers.Integral):
+            d["filter"] = tuple(filt)
         return cls(**d)
 
     @classmethod
@@ -296,6 +351,16 @@ class SearchSpec:
         """Functional update (specs are frozen)."""
         return replace(self, **kw)
 
+    def filter_bytes(self) -> np.ndarray | None:
+        """The runtime operand for `filter`: a uint8[N_LABEL_BYTES] byte
+        mask (or None when unfiltered). Fed to the compiled plan at call
+        time — never part of the plan-cache key."""
+        if self.filter is None:
+            return None
+        labels = (self.filter,) if isinstance(
+            self.filter, numbers.Integral) else tuple(self.filter)
+        return filter_to_bytes(labels)
+
 
 @dataclass(frozen=True)
 class ResolvedSearchSpec:
@@ -304,6 +369,11 @@ class ResolvedSearchSpec:
     Hashable and immutable: this is the static argument `core_search`
     jit-compiles against AND the plan-cache key — one object, one compiled
     executable per distinct configuration.
+
+    `filtered` records filter PRESENCE only: the filter VALUE is a runtime
+    operand (`SearchSpec.filter_bytes()`), deliberately stripped here so
+    the plan cache never splits on it — every tenant/label value with the
+    same presence + mode shares one compiled executable.
     """
 
     k: int
@@ -319,9 +389,18 @@ class ResolvedSearchSpec:
     fusion: str
     beam_schedule: tuple | None
     telemetry: str
+    filtered: bool
+    filter_mode: str
 
     def to_spec(self) -> SearchSpec:
-        return SearchSpec(**asdict(self))
+        """Back to declarative form. Lossy for filtered specs: the resolved
+        form carries filter presence, not the value, so the round-trip
+        spec is unfiltered."""
+        d = asdict(self)
+        d.pop("filtered")
+        d["filter"] = None
+        d["filter_mode"] = "traverse"
+        return SearchSpec(**d)
 
 
 class SearchResult(NamedTuple):
@@ -464,6 +543,9 @@ class Searcher:
         self.index = index
         self.spec = spec
         self.resolved = spec.resolve(index)
+        # the filter VALUE, lowered once to its runtime byte-mask operand;
+        # the resolved spec (and hence the plan) only knows filter PRESENCE
+        self._filter_bytes = spec.filter_bytes()
         self._inflight: deque = deque()
 
     # ----------------------------------------------------------- execution
@@ -473,7 +555,7 @@ class Searcher:
         generation = idx.generation
         plan = idx._search_plan(self.resolved, q.shape,
                                 idx._filter_tombstones)
-        out = plan(q)
+        out = plan(q, self._filter_bytes)
         # plans return (ids, dists, n_hops) — plus a SearchTelemetry
         # fourth element iff the resolved spec has telemetry on
         ids, dists, n_hops = out[:3]

@@ -98,6 +98,8 @@ def make_kernel_scorer(vectors: Array, queries: Array, n_valid: Array,
                        vec_sqnorm: Array | None = None, *,
                        strategy: str = "chunked",
                        tombstone_bits: Array | None = None,
+                       labels: Array | None = None,
+                       filter_bytes: Array | None = None,
                        interpret: bool | None = None):
     """Beam-search ScoreFn backed by the Pallas gather kernels.
 
@@ -106,6 +108,9 @@ def make_kernel_scorer(vectors: Array, queries: Array, n_valid: Array,
 
     tombstone_bits: optional packed row bitmap (core.mutations) for
     exclude-mode searches — tombstoned candidates score +inf.
+    labels/filter_bytes: optional label plane + query byte mask
+    (core.mutations) for exclude-mode filtered searches — non-matching
+    candidates score +inf, via the same one-gather-per-candidate pattern.
     """
     v = vectors
     if vec_sqnorm is None:
@@ -117,6 +122,9 @@ def make_kernel_scorer(vectors: Array, queries: Array, n_valid: Array,
         if tombstone_bits is not None:
             from repro.core.mutations import bitmap_gather
             in_range &= ~bitmap_gather(tombstone_bits, ids)
+        if labels is not None:
+            from repro.core.mutations import label_match_gather
+            in_range &= label_match_gather(labels, filter_bytes, ids)
         masked = jnp.where(in_range, ids, -1)
         return fn(queries, v, vec_sqnorm, masked, interpret=interpret)
 

@@ -129,6 +129,8 @@ def rabitq_search_step(cand_packed: Array, cand_add: Array,
 def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
                               n_valid: Array,
                               tombstone_bits: Array | None = None,
+                              labels: Array | None = None,
+                              filter_bytes: Array | None = None,
                               interpret: bool | None = None):
     """Beam-search ScoreFn over the canonical PACKED codes.
 
@@ -140,6 +142,10 @@ def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
     tombstone_bits: optional packed row bitmap (core.mutations) for
     exclude-mode searches — each candidate's bit is gathered alongside its
     code row (1 extra byte per candidate) and masked in the epilogue.
+    labels/filter_bytes: optional label plane + query byte mask for
+    exclude-mode filtered searches — each candidate's label row is
+    gathered the same way (N_LABEL_BYTES extra bytes per candidate, never
+    a dense unpack) and non-matching candidates go dead in the epilogue.
     """
     packed = codes.packed                            # (N, P) — canonical
 
@@ -152,6 +158,11 @@ def make_rabitq_kernel_scorer(codes: RaBitQCodes, query: RaBitQQuery, *,
         if tombstone_bits is not None:
             from repro.core.mutations import bitmap_gather
             live = (~bitmap_gather(tombstone_bits, safe)).astype(jnp.int32)
+        if labels is not None:
+            from repro.core.mutations import label_match_gather
+            hit = label_match_gather(labels, filter_bytes, safe)
+            live = (hit.astype(jnp.int32) if live is None
+                    else live * hit.astype(jnp.int32))
         return rabitq_search_step(cand, dadd, drs, ids, n_valid,
                                   query.q_rot, query.query_add,
                                   query.query_sumq, bits=codes.bits,

@@ -57,6 +57,9 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
                       rq_query: RaBitQQuery | None = None,
                       tombstone_bits: Array | None = None,
                       traverse_deleted: bool = True,
+                      labels: Array | None = None,
+                      filter_bytes: Array | None = None,
+                      filter_exclude: bool = False,
                       block_q: int = 8,
                       telemetry: bool = False,
                       interpret: bool | None = None) -> BeamSearchResult:
@@ -64,6 +67,10 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
 
     mode: "hop" (one fused launch per hop, host-side convergence loop) or
     "megakernel" (one persistent launch, frontier on-chip throughout).
+    labels/filter_bytes/filter_exclude: label filtering, mirroring the
+    tombstone plumbing — exclude mode gathers each candidate's label row
+    in the kernel epilogue; either mode label-filters the final frontier
+    through the shared `finalize_frontier`.
     Returns the standard `BeamSearchResult` (visited logs are not
     maintained by the fused paths and come back as empty -1/+inf fills).
     telemetry=True fills `result.telemetry` with the in-kernel counters
@@ -108,6 +115,12 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
     # walk alone and filters only the final frontier (shared epilogue)
     use_tomb = tombstone_bits is not None and not traverse_deleted
     tomb = tombstone_bits.reshape(-1, 1) if use_tomb else None
+    # same split for the label filter: exclude mode rides the kernel
+    # epilogue, traverse mode only label-filters the final frontier
+    use_filt = labels is not None and filter_exclude
+    lab = labels if use_filt else None
+    fb = (jnp.asarray(filter_bytes, jnp.int32).reshape(-1)
+          if use_filt else None)
 
     # ---- init frontier (medoid in slot 0), padded to the query block
     f_ids = jnp.full((num_q, beam_width), -1, jnp.int32)
@@ -131,7 +144,8 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
     if mode == "megakernel":
         out = fused_search_pallas(
             f_ids, f_dists, f_vis, sched, q, qa, qb, graph.adjacency,
-            data, meta, tomb, graph.n_valid, max_iters=max_iters, **kern)
+            data, meta, tomb, lab, fb, graph.n_valid,
+            max_iters=max_iters, **kern)
         f_ids, f_dists, hops = out[:3]
         hops = hops[:, 0]
         if telemetry:
@@ -155,7 +169,7 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
             it, fi, fd, fv, hops = st[:5]
             hop = fused_hop_pallas(
                 fi, fd, fv, sched[it], q, qa, qb, graph.adjacency,
-                data, meta, tomb, graph.n_valid, **kern)
+                data, meta, tomb, lab, fb, graph.n_valid, **kern)
             nfi, nfd, nfv, inc = hop[:4]
             out = (it + 1, nfi, nfd, nfv, hops + inc[:, 0])
             if telemetry:
@@ -175,7 +189,9 @@ def fused_beam_search(graph: VamanaGraph, *, mode: str, beam_width: int,
             tel = state[5:]
 
     f_ids, f_dists = f_ids[:num_q], f_dists[:num_q]
-    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
+    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits,
+                                       labels=labels,
+                                       filter_bytes=filter_bytes)
     if tel is not None:
         tel = SearchTelemetry(tel[0][:num_q], tel[1][:num_q],
                               tel[2][:num_q], tel[3][:num_q])

@@ -45,13 +45,15 @@ def init_frontier(medoid: Array, d0: Array, num_queries: int,
 
 
 def fused_hop_ref(f_ids, f_dists, f_vis, *, score_fn, adjacency, n_valid,
-                  width, tombstone_bits=None, telemetry: bool = False):
+                  width, tombstone_bits=None, labels=None,
+                  filter_bytes=None, telemetry: bool = False):
     """ONE hop of the fused dataflow, pure jnp.
 
     Mirrors `beam_search`'s body at expand=1 exactly: pick the first
     unvisited frontier slot, expand its adjacency row, drop out-of-range /
-    duplicate / (exclude-mode) tombstoned candidates to id -1, score,
-    top-L merge, then narrow rows that expanded work to `width` slots.
+    duplicate / (exclude-mode) tombstoned or out-of-filter candidates to
+    id -1, score, top-L merge, then narrow rows that expanded work to
+    `width` slots.
     Returns (f_ids, f_dists, f_vis, pick_valid) — with `telemetry` a
     fifth element `(scored, masked, dups, occ)` of this hop's counters,
     each (Q,) int32 (semantics: core.beam_search.SearchTelemetry; these
@@ -79,11 +81,20 @@ def fused_hop_ref(f_ids, f_dists, f_vis, *, score_fn, adjacency, n_valid,
         from repro.core.mutations import bitmap_gather
         dead = bitmap_gather(tombstone_bits, nbrs) & valid
         valid &= ~dead
+    fmiss = None
+    if labels is not None:
+        # tombstone test FIRST (above): a dead candidate counts once in
+        # the masked telemetry, whatever its labels say
+        from repro.core.mutations import label_match_gather
+        fmiss = ~label_match_gather(labels, filter_bytes, nbrs) & valid
+        valid &= ~fmiss
     nbrs = jnp.where(valid, nbrs, -1)
     if telemetry:
         scored = jnp.sum(valid, axis=1).astype(jnp.int32)
         masked = (jnp.sum(dead, axis=1).astype(jnp.int32)
                   if dead is not None else jnp.zeros_like(scored))
+        if fmiss is not None:
+            masked = masked + jnp.sum(fmiss, axis=1).astype(jnp.int32)
         dups = jnp.sum(in_range & dup, axis=1).astype(jnp.int32)
 
     d = score_fn(nbrs)                                  # (Q, R)
@@ -110,6 +121,8 @@ def fused_search_ref(adjacency, n_valid, medoid, score_fn, num_queries, *,
                      beam_width: int, max_iters: int,
                      beam_schedule: tuple | None = None,
                      tombstone_bits=None, traverse_deleted: bool = True,
+                     labels=None, filter_bytes=None,
+                     filter_exclude: bool = False,
                      telemetry: bool = False):
     """Whole-search oracle: the megakernel's semantics in pure jnp.
 
@@ -124,6 +137,7 @@ def fused_search_ref(adjacency, n_valid, medoid, score_fn, num_queries, *,
         expand_schedule(beam_schedule, beam_width, max_iters), jnp.int32)
     exclude = tombstone_bits is not None and not traverse_deleted
     body_tomb = tombstone_bits if exclude else None
+    body_labels = labels if (labels is not None and filter_exclude) else None
 
     d0 = score_fn(jnp.full((num_queries, 1), medoid, jnp.int32))
     f_ids, f_dists, f_vis = init_frontier(medoid, d0, num_queries,
@@ -145,6 +159,7 @@ def fused_search_ref(adjacency, n_valid, medoid, score_fn, num_queries, *,
         hop = fused_hop_ref(
             f_ids, f_dists, f_vis, score_fn=score_fn, adjacency=adjacency,
             n_valid=n_valid, width=sched[it], tombstone_bits=body_tomb,
+            labels=body_labels, filter_bytes=filter_bytes,
             telemetry=telemetry)
         f_ids, f_dists, f_vis, pv = hop[:4]
         out = (it + 1, f_ids, f_dists, f_vis, hops + pv.astype(jnp.int32))
@@ -157,7 +172,9 @@ def fused_search_ref(adjacency, n_valid, medoid, score_fn, num_queries, *,
 
     state = jax.lax.while_loop(cond, body, state)
     _, f_ids, f_dists, _, hops = state[:5]
-    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits)
+    f_ids, f_dists = finalize_frontier(f_ids, f_dists, tombstone_bits,
+                                       labels=labels,
+                                       filter_bytes=filter_bytes)
     if telemetry:
         return f_ids, f_dists, hops, tuple(state[5:])
     return f_ids, f_dists, hops

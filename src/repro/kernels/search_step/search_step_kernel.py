@@ -97,19 +97,21 @@ def _merge_topl(all_i: Array, all_d: Array, all_v: Array, l_width: int):
     return oi, od, ov
 
 
-def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
-                adj_ref, data_ref, meta_ref, tomb_ref, *,
+def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid, fb,
+                adj_ref, data_ref, meta_ref, tomb_ref, labels_ref, *,
                 quantized: bool, bits: int, use_tomb: bool,
-                telemetry: bool = False):
+                use_filt: bool, telemetry: bool = False):
     """One fused hop over a (TQ, L) frontier block — pure values in/out,
     ANY-memory refs for the gathers. Shared by both kernels.
 
     q/qa/qb: quantized -> (q_rot, query_add, query_sumq);
              exact     -> (queries, |q|^2, unused).
-    Returns (f_ids, f_dists, f_vis, pick_valid) — plus, with `telemetry`,
-    a fifth element (scored, masked, dups, occ) of (TQ,) i32 hop counters
-    (semantics: core.beam_search.SearchTelemetry; contract: the ref
-    oracle's values, exactly)."""
+    fb: (NB,) i32 label byte mask (exclude-mode filter; dead operand
+    unless `use_filt`). Returns (f_ids, f_dists, f_vis, pick_valid) —
+    plus, with `telemetry`, a fifth element (scored, masked, dups, occ)
+    of (TQ,) i32 hop counters (semantics:
+    core.beam_search.SearchTelemetry; contract: the ref oracle's values,
+    exactly)."""
     tq, l_width = f_ids.shape
     degree = adj_ref.shape[1]
     col = jax.lax.broadcasted_iota(jnp.int32, (tq, l_width), 1)
@@ -140,6 +142,15 @@ def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
                >> (jnp.maximum(nbrs, 0) & 7)) & 1
         dead = valid & (bit == 1)
         valid &= bit == 0
+    if use_filt:
+        # exclude-mode label filter: one label-row gather per candidate,
+        # byte-AND vs the query mask fused right here (never a dense
+        # unpack). Runs AFTER the tombstone test so a dead candidate
+        # counts once in the masked telemetry, whatever its labels say.
+        lrow = _gather_rows(labels_ref, flat, jnp.int32)   # (TQ*R, NB)
+        hit = jnp.sum(lrow & fb[None, :], axis=1) > 0
+        fmiss = valid & ~hit.reshape(tq, degree)
+        valid &= ~fmiss
 
     # ---- score: candidate rows gathered once, MXU batch dot
     rows = _gather_rows(data_ref, flat)
@@ -178,6 +189,8 @@ def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
         scored = jnp.sum(valid, axis=1).astype(jnp.int32)
         masked = (jnp.sum(dead, axis=1).astype(jnp.int32) if use_tomb
                   else jnp.zeros((tq,), jnp.int32))
+        if use_filt:
+            masked = masked + jnp.sum(fmiss, axis=1).astype(jnp.int32)
         dups = jnp.sum(in_range & dup, axis=1).astype(jnp.int32)
         occ = jnp.where(pick_valid,
                         jnp.sum(nfi >= 0, axis=1), 0).astype(jnp.int32)
@@ -185,21 +198,22 @@ def _hop_update(f_ids, f_dists, f_vis, width, q, qa, qb, nvalid,
     return nfi, nfd, nfv, pick_valid
 
 
-def _hop_kernel(w_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref, fd_ref,
-                fv_ref, adj_ref, data_ref, meta_ref, tomb_ref,
-                ofi_ref, ofd_ref, ofv_ref, oh_ref, *rest,
+def _hop_kernel(w_ref, nvalid_ref, fb_ref, q_ref, qa_ref, qb_ref, fi_ref,
+                fd_ref, fv_ref, adj_ref, data_ref, meta_ref, tomb_ref,
+                labels_ref, ofi_ref, ofd_ref, ofv_ref, oh_ref, *rest,
                 quantized: bool, bits: int, use_tomb: bool,
-                telemetry: bool = False):
+                use_filt: bool, telemetry: bool = False):
     """Stage 1: ONE launch per hop — frontier in/out through VMEM blocks,
     all gathers + scoring + merge fused inside. With telemetry, one extra
     (TQ, 4) i32 output of [scored, masked, dups, occupancy] hop counters;
     without, the signature (and the compiled plan) is unchanged."""
+    fb = jnp.stack([fb_ref[j] for j in range(fb_ref.shape[0])])
     up = _hop_update(
         fi_ref[...], fd_ref[...], fv_ref[...], w_ref[0],
-        q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0],
-        adj_ref, data_ref, meta_ref, tomb_ref,
+        q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0], fb,
+        adj_ref, data_ref, meta_ref, tomb_ref, labels_ref,
         quantized=quantized, bits=bits, use_tomb=use_tomb,
-        telemetry=telemetry)
+        use_filt=use_filt, telemetry=telemetry)
     nfi, nfd, nfv, pv = up[:4]
     ofi_ref[...] = nfi
     ofd_ref[...] = nfd
@@ -210,10 +224,11 @@ def _hop_kernel(w_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref, fd_ref,
         otel_ref[...] = jnp.stack(up[4], axis=1)
 
 
-def _mega_kernel(sched_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref,
-                 fd_ref, fv_ref, adj_ref, data_ref, meta_ref, tomb_ref,
-                 *rest, quantized: bool, bits: int, use_tomb: bool,
-                 max_iters: int, telemetry: bool = False):
+def _mega_kernel(sched_ref, nvalid_ref, fb_ref, q_ref, qa_ref, qb_ref,
+                 fi_ref, fd_ref, fv_ref, adj_ref, data_ref, meta_ref,
+                 tomb_ref, labels_ref, *rest, quantized: bool, bits: int,
+                 use_tomb: bool, use_filt: bool, max_iters: int,
+                 telemetry: bool = False):
     """Stage 2: the whole beam loop in ONE persistent launch.
 
     Frontier ids/dists/visited and hop counters live in VMEM scratch
@@ -247,12 +262,13 @@ def _mega_kernel(sched_ref, nvalid_ref, q_ref, qa_ref, qb_ref, fi_ref,
 
         @pl.when(has)
         def _():
+            fb = jnp.stack([fb_ref[j] for j in range(fb_ref.shape[0])])
             up = _hop_update(
                 f_ids, fd_s[...], f_vis, sched_ref[t],
-                q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0],
-                adj_ref, data_ref, meta_ref, tomb_ref,
+                q_ref[...], qa_ref[...], qb_ref[...], nvalid_ref[0], fb,
+                adj_ref, data_ref, meta_ref, tomb_ref, labels_ref,
                 quantized=quantized, bits=bits, use_tomb=use_tomb,
-                telemetry=telemetry)
+                use_filt=use_filt, telemetry=telemetry)
             nfi, nfd, nfv, pv = up[:4]
             fi_s[...] = nfi
             fd_s[...] = nfd
@@ -282,19 +298,22 @@ def _common_specs(block_q: int, d: int, l_width: int):
     in_specs = [
         smem,                    # schedule / width
         smem,                    # n_valid
+        smem,                    # filter byte mask
         blk(d), blk(1), blk(1),  # q, qa, qb
         blk(l_width), blk(l_width), blk(l_width),  # frontier in
-        anys, anys, anys, anys,  # adjacency, data, meta, tombstones
-    ]
+        anys, anys, anys, anys, anys,  # adjacency, data, meta,
+    ]                                  # tombstones, labels
     return in_specs, blk
 
 
 def fused_hop_pallas(f_ids, f_dists, f_vis, width, q, qa, qb, adjacency,
-                     data, meta, tomb, n_valid, *, quantized: bool,
-                     bits: int, block_q: int = 8,
+                     data, meta, tomb, labels, fb, n_valid, *,
+                     quantized: bool, bits: int, block_q: int = 8,
                      telemetry: bool = False,
                      interpret: bool = False):
     """One fused hop. All (Q, ·) arrays pre-padded to block_q rows.
+    labels/fb: exclude-mode label plane (cap, NB) u8 + byte mask (NB,)
+    i32, or None (dummy operands keep the call signature fixed).
     Returns (f_ids, f_dists, f_vis, hop_inc (Q, 1)) — plus a (Q, 4) i32
     [scored, masked, dups, occupancy] counter block with telemetry on
     (off: zero extra outputs, the pallas_call is identical)."""
@@ -313,7 +332,8 @@ def fused_hop_pallas(f_ids, f_dists, f_vis, width, q, qa, qb, adjacency,
         out_shape.append(jax.ShapeDtypeStruct((qn, 4), jnp.int32))
     return pl.pallas_call(
         functools.partial(_hop_kernel, quantized=quantized, bits=bits,
-                          use_tomb=tomb is not None, telemetry=telemetry),
+                          use_tomb=tomb is not None,
+                          use_filt=labels is not None, telemetry=telemetry),
         grid=(qn // block_q,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -322,17 +342,21 @@ def fused_hop_pallas(f_ids, f_dists, f_vis, width, q, qa, qb, adjacency,
         interpret=interpret,
     )(jnp.asarray(width, jnp.int32).reshape(1),
       jnp.asarray(n_valid, jnp.int32).reshape(1),
+      (jnp.asarray(fb, jnp.int32).reshape(-1) if fb is not None
+       else jnp.zeros((1,), jnp.int32)),
       q, qa, qb, f_ids, f_dists, f_vis, adjacency, data, meta,
-      tomb if tomb is not None else jnp.zeros((1, 1), jnp.uint8))
+      tomb if tomb is not None else jnp.zeros((1, 1), jnp.uint8),
+      labels if labels is not None else jnp.zeros((1, 1), jnp.uint8))
 
 
 def fused_search_pallas(f_ids, f_dists, f_vis, schedule, q, qa, qb,
-                        adjacency, data, meta, tomb, n_valid, *,
-                        quantized: bool, bits: int, max_iters: int,
+                        adjacency, data, meta, tomb, labels, fb, n_valid,
+                        *, quantized: bool, bits: int, max_iters: int,
                         block_q: int = 8, telemetry: bool = False,
                         interpret: bool = False):
     """The megakernel: whole search, one launch. schedule: (max_iters,)
-    i32 per-hop widths. Returns (f_ids, f_dists, n_hops (Q, 1)) — plus
+    i32 per-hop widths; labels/fb as in `fused_hop_pallas`.
+    Returns (f_ids, f_dists, n_hops (Q, 1)) — plus
     (counters (Q, 3) i32 [scored, masked, dups], occupancy
     (Q, max_iters) i32) with telemetry on, accumulated in VMEM scratch
     across hops (off: zero extra outputs/scratch, identical launch)."""
@@ -362,7 +386,8 @@ def fused_search_pallas(f_ids, f_dists, f_vis, schedule, q, qa, qb,
         ]
     return pl.pallas_call(
         functools.partial(_mega_kernel, quantized=quantized, bits=bits,
-                          use_tomb=tomb is not None, max_iters=max_iters,
+                          use_tomb=tomb is not None,
+                          use_filt=labels is not None, max_iters=max_iters,
                           telemetry=telemetry),
         grid=(qn // block_q,),
         in_specs=in_specs,
@@ -373,5 +398,8 @@ def fused_search_pallas(f_ids, f_dists, f_vis, schedule, q, qa, qb,
         interpret=interpret,
     )(jnp.asarray(schedule, jnp.int32).reshape(-1),
       jnp.asarray(n_valid, jnp.int32).reshape(1),
+      (jnp.asarray(fb, jnp.int32).reshape(-1) if fb is not None
+       else jnp.zeros((1,), jnp.int32)),
       q, qa, qb, f_ids, f_dists, f_vis, adjacency, data, meta,
-      tomb if tomb is not None else jnp.zeros((1, 1), jnp.uint8))
+      tomb if tomb is not None else jnp.zeros((1, 1), jnp.uint8),
+      labels if labels is not None else jnp.zeros((1, 1), jnp.uint8))

@@ -54,6 +54,7 @@ from typing import Any, Iterable, NamedTuple
 
 import numpy as np
 
+from repro.core.mutations import N_LABELS
 from repro.core.search_spec import (
     SearchResult,
     SearchSpec,
@@ -65,7 +66,8 @@ from repro.obs.tracing import span as obs_span
 # core's search result (ids, dists, n_hops, generation).
 SearchTicket = SearchResult
 
-__all__ = ["AnnsService", "SearchTicket", "StepResult", "ServiceStats"]
+__all__ = ["AnnsService", "SearchTicket", "StepResult", "ServiceStats",
+           "TenantStats"]
 
 
 class StepResult(NamedTuple):
@@ -119,9 +121,40 @@ class ServiceStats:
         return plain_json(self.as_dict())
 
 
+@dataclass
+class TenantStats:
+    """One tenant namespace's counters: the label bit that encodes the
+    namespace, the row quota, and per-tenant activity. `live` is the
+    row count the quota is enforced against."""
+
+    label: int
+    quota_rows: int | None = None
+    n_inserted: int = 0
+    n_deleted: int = 0
+    n_searches: int = 0
+    n_search_queries: int = 0
+    last_generation: int = 0
+
+    @property
+    def live(self) -> int:
+        return self.n_inserted - self.n_deleted
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__, live=self.live)
+
+
 class AnnsService:
     """Interleaved insert/delete/search serving over one index driver
-    (JasperIndex or ShardedJasperIndex — both expose the core surface)."""
+    (JasperIndex or ShardedJasperIndex — both expose the core surface).
+
+    Multi-tenancy is a thin veneer over label filtering: a tenant is a
+    label bit (`register_tenant`), tenant inserts stamp that bit on their
+    rows, and tenant searches serve the service spec with
+    `filter=(bit,)` — partition-valued filters through the SAME fused
+    kernel epilogue as liveness, so tenant isolation costs one extra
+    byte-gather per candidate and ZERO extra compiled plans (filter
+    values are runtime operands; only filter PRESENCE is in the plan
+    key)."""
 
     def __init__(self, index, *, spec: SearchSpec | None = None,
                  k: int = 10, beam_width: int | None = None,
@@ -178,6 +211,8 @@ class AnnsService:
         self.verify = verify
         self.stats = ServiceStats()
         self._searcher = None             # lazy compiled session
+        self._tenants: dict[str, TenantStats] = {}
+        self._tenant_searchers: dict = {}  # (name, mode) -> session
         self._metrics = None              # lazy MetricsRegistry
         self._hops_hist = None
         self._occ_hist = None
@@ -232,6 +267,13 @@ class AnnsService:
             reg.register_collector(
                 "scheduler", obs_metrics.scheduler_stats_collector(
                     lambda: self._scheduler))
+            # per-tenant namespaces: tenants.<name>.<counter> (no
+            # tenants registered -> no tenants.* keys)
+            reg.register_collector(
+                "tenants", lambda: {
+                    f"{n}.{k}": v
+                    for n, t in self._tenants.items()
+                    for k, v in t.as_dict().items()})
             self._lat_hist = reg.histogram(
                 "search.latency_us", obs_metrics.SEARCH_LATENCY_BUCKETS_US)
             self._hops_hist = reg.histogram(
@@ -251,11 +293,13 @@ class AnnsService:
         and the search histograms — the telemetry plane's export."""
         return self.metrics().snapshot()
 
-    def insert(self, vectors) -> np.ndarray:
-        """Batch insert; returns assigned row ids (freed slots reused)."""
+    def insert(self, vectors, *, labels=None) -> np.ndarray:
+        """Batch insert; returns assigned row ids (freed slots reused).
+        labels: optional per-row label sets stamped at insert (see
+        `core.mutations.pack_label_rows` for accepted forms)."""
         with obs_span("service.insert"):
             cap_before = self.index.capacity
-            ids = self.index.insert(vectors)
+            ids = self.index.insert(vectors, labels=labels)
             self.stats.n_inserts += 1
             self.stats.n_insert_rows += int(ids.size)
             self.stats.n_grows += int(self.index.capacity != cap_before)
@@ -345,6 +389,123 @@ class AnnsService:
             if ses.submit(q) >= self.MAX_INFLIGHT:
                 tickets += [self._finish(r) for r in ses.drain(1)]
         return tickets + [self._finish(r) for r in ses.drain()]
+
+    # ------------------------------------------------------ tenant namespaces
+    def register_tenant(self, name: str, *,
+                        quota_rows: int | None = None) -> int:
+        """Open a tenant namespace: assigns the next free label bit and
+        returns it. At most `core.mutations.N_LABELS` tenants per index
+        (the label-plane width). quota_rows bounds the tenant's live rows
+        — `tenant_insert` raises past it."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        used = {t.label for t in self._tenants.values()}
+        free = [b for b in range(N_LABELS) if b not in used]
+        if not free:
+            raise ValueError(
+                f"label plane exhausted: at most {N_LABELS} tenants "
+                "per index (core.mutations.N_LABELS)")
+        self._tenants[name] = TenantStats(label=free[0],
+                                          quota_rows=quota_rows)
+        return free[0]
+
+    @property
+    def tenants(self) -> tuple:
+        return tuple(self._tenants)
+
+    def tenant_spec(self, name: str, **overrides) -> SearchSpec:
+        """The service spec scoped to a tenant: `filter=(bit,)` plus any
+        overrides — the spec to hand a scheduler lane. Lanes for two
+        tenants differ only in the filter VALUE, so they share every
+        compiled plan (presence-only plan keys)."""
+        ts = self._tenants[name]
+        return self.spec.with_(filter=(ts.label,), **overrides)
+
+    def _tenant_member_mask(self, ts: TenantStats, ids) -> np.ndarray:
+        """Host-side membership test: does each GLOBAL id's label row
+        carry the tenant's bit? (O(n) gather over the label plane — the
+        verify/ownership check, never on the device hot path.)"""
+        ids = np.asarray(ids, np.int64)
+        idx = self.index
+        if hasattr(idx, "id_stride"):       # sharded: stacked row position
+            pos = (ids // idx.id_stride) * idx.cap + ids % idx.id_stride
+        else:
+            pos = ids
+        labs = np.asarray(idx.core.mut.labels)
+        row = labs[np.clip(pos, 0, labs.shape[0] - 1)]
+        bit = np.uint8(1 << (ts.label & 7))
+        ok = (row[:, ts.label >> 3] & bit) != 0
+        return ok & (pos >= 0) & (pos < labs.shape[0])
+
+    def tenant_insert(self, name: str, vectors) -> np.ndarray:
+        """Insert rows into a tenant's namespace: stamps the tenant's
+        label bit at insert time. Raises ValueError when the batch would
+        push the tenant past its row quota (checked BEFORE any mutation)."""
+        ts = self._tenants[name]
+        n = int(np.asarray(vectors).shape[0])
+        if ts.quota_rows is not None and ts.live + n > ts.quota_rows:
+            raise ValueError(
+                f"tenant {name!r} quota exceeded: {ts.live} live + {n} "
+                f"new > quota_rows {ts.quota_rows}")
+        ids = self.insert(vectors, labels=ts.label)
+        ts.n_inserted += int(ids.size)
+        ts.last_generation = self.index.generation
+        return ids
+
+    def tenant_delete(self, name: str, ids) -> int:
+        """Delete rows from a tenant's namespace. Raises on ids that do
+        not carry the tenant's label (cross-tenant deletes never touch
+        the index)."""
+        ts = self._tenants[name]
+        ids = np.atleast_1d(np.asarray(ids, np.int64)).ravel()
+        foreign = ids[~self._tenant_member_mask(ts, ids)]
+        if foreign.size:
+            raise ValueError(
+                f"ids not owned by tenant {name!r}: "
+                f"{foreign[:8].tolist()}")
+        n = self.delete(ids)
+        ts.n_deleted += n
+        ts.last_generation = self.index.generation
+        return n
+
+    def tenant_search(self, name: str, queries, *,
+                      filter_mode: str = "traverse") -> SearchTicket:
+        """Serve one batch scoped to a tenant: the service spec with the
+        tenant's partition-valued filter. filter_mode="exclude" gates the
+        walk itself in the kernel epilogue; "traverse" (default) walks
+        the full graph and filters the returned frontier — both return
+        ONLY the tenant's rows. With `verify` the isolation contract is
+        re-checked host-side per batch."""
+        ts = self._tenants[name]
+        key = (name, filter_mode)
+        ses = self._tenant_searchers.get(key)
+        if ses is None:
+            ses = self.index.searcher(
+                self.tenant_spec(name, filter_mode=filter_mode))
+            self._tenant_searchers[key] = ses
+        with obs_span("service.tenant_search", tenant=name):
+            t0 = time.perf_counter()
+            ticket = self._finish(ses.search(queries))
+            if self._metrics is not None:
+                self._lat_hist.observe((time.perf_counter() - t0) * 1e6)
+        if self.verify:
+            returned = ticket.ids[ticket.ids >= 0]
+            leak = returned[~self._tenant_member_mask(ts, returned)]
+            if leak.size:
+                raise AssertionError(
+                    f"tenant isolation violated: ids outside tenant "
+                    f"{name!r} returned: {leak[:8].tolist()}")
+        ts.n_searches += 1
+        ts.n_search_queries += int(ticket.ids.shape[0])
+        ts.last_generation = ticket.generation
+        return ticket
+
+    def tenant_stats(self, name: str | None = None) -> dict:
+        """Per-tenant counters: one tenant's dict, or {name: dict} for
+        all (the `tenants.*` metrics namespace)."""
+        if name is not None:
+            return self._tenants[name].as_dict()
+        return {n: t.as_dict() for n, t in self._tenants.items()}
 
     # ----------------------------------------- standing-query serving front
     def scheduler(self, *, lanes: dict | None = None, clock=None,

@@ -20,8 +20,10 @@ per-class streams):
     traffic, whatever the arrival pattern.
   * **Deadline-aware adaptive batching.** Every query carries an SLO
     budget. A lane flushes when (a) its queue fills the top bucket
-    ("full"), (b) the oldest query's budget is `flush_fraction` spent
-    ("deadline" — default half), or (c) the device has NOTHING in flight
+    ("full"), (b) ANY queued query's budget is `flush_fraction` spent —
+    the earliest deadline across the lane's queue, since per-query
+    budgets vary ("deadline" — default half), or (c) the device has
+    NOTHING in flight
     ("idle" — batching only ever trades latency for throughput while the
     device is busy; an idle device serves whatever is queued
     immediately). Throughput when loaded, latency when idle.
@@ -385,15 +387,20 @@ class StandingQueryScheduler:
             now = self.clock()
 
             def overdue(ln: _Lane) -> bool:
-                return bool(ln.queue) and (
-                    now - ln.queue[0].t_submit
-                    >= cfg.flush_fraction * ln.queue[0].slo_budget_s)
+                # the lane's flush deadline is the MINIMUM over its queue,
+                # not the head's: submit() takes per-query slo_budget_s
+                # overrides, so a tight-budget arrival queued BEHIND a lax
+                # one must still pull the flush forward (FIFO order means
+                # the tight query can only leave when the head does)
+                return bool(ln.queue) and now >= min(
+                    h.t_submit + cfg.flush_fraction * h.slo_budget_s
+                    for h in ln.queue)
 
             # 1. a full top bucket is always worth dispatching
             lane = self._pick_lane(lambda ln: len(ln.queue) >= top)
             reason = "full"
             if lane is None:
-                # 2. the oldest query somewhere has spent flush_fraction
+                # 2. some queued query somewhere has spent flush_fraction
                 #    of its SLO budget queueing — partial flush now
                 lane, reason = self._pick_lane(overdue), "deadline"
             if lane is None and not self._inflight:

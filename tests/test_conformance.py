@@ -252,7 +252,10 @@ for tombstones in (False, True):
     idx = ShardedJasperIndex(mesh, D, capacity_per_shard=N // 4,
                              construction=params, quantization="rabitq",
                              bits=4, seed=SEED)
-    idx.build(data)
+    # labels = dealt-row parity; the unfiltered cells below are compared
+    # bit-for-bit against a label-less single-device index, so building
+    # WITH labels also proves filter-off is inert at 4 shards
+    idx.build(data, labels=(np.arange(N) % 2).astype(np.int32))
     if tombstones:
         per = N // 4
         gids = (dead // per) * idx.id_stride + dead % per
@@ -304,6 +307,32 @@ for tombstones in (False, True):
         tel=[np.asarray(t).astype(np.int64).tolist()
              for t in res_on.telemetry],
         shard_sum=[t.tolist() for t in tot])
+    # filtered lane (only with tombstones live, to cover the dead+filter
+    # interplay in one fused epilogue): filter=(1,) must return only
+    # odd dealt rows, and never a tombstoned id
+    if tombstones:
+        per = N // 4
+        def filt_spec(path, quantized, mode):
+            kw = dict(k=K, beam_width=BEAM, quantized=quantized,
+                      filter=(1,), filter_mode=mode)
+            if path == "kernel":
+                kw["use_kernels"] = True
+            elif path in ("hop", "megakernel"):
+                kw["fusion"] = path
+            return SearchSpec(**kw)
+        combos = [(q, p, "exclude") for q in (False, True)
+                  for p in ("jnp", "kernel", "hop", "megakernel")]
+        combos.append((True, "megakernel", "traverse"))
+        for quantized, path, mode in combos:
+            res = idx.searcher(filt_spec(path, quantized, mode)).search(
+                queries)
+            ids = np.asarray(res.ids)
+            ret = ids[ids >= 0]
+            flat = (ret // idx.id_stride) * per + ret % idx.id_stride
+            cells[f"filt-{{quantized}}-{{path}}-{{mode}}"] = dict(
+                n_returned=int(ret.size),
+                label_leaks=int((flat % 2 == 0).sum()),
+                dead_leaks=int(np.isin(ret, dead_set).sum()))
     report[str(tombstones)] = cells
 print("CONFORMANCE_JSON=" + json.dumps(report))
 """
@@ -398,3 +427,24 @@ def test_four_shard_telemetry_lane(sharded_results, tombstones):
         assert np.array_equal(np.asarray(a), np.asarray(b)), (
             f"{name}: sharded psum != sum over shard cores")
     assert (np.asarray(cell["tel"][0]) > 0).all()
+
+
+FILTER_COMBOS = [(q, p, "exclude") for q in (False, True)
+                 for p in ("jnp", "kernel", "hop", "megakernel")]
+FILTER_COMBOS.append((True, "megakernel", "traverse"))
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "quantized,path,mode", FILTER_COMBOS,
+    ids=[f"{'rabitq' if q else 'exact'}-{p}-{m}"
+         for q, p, m in FILTER_COMBOS])
+def test_four_shard_filtered_cell(sharded_results, quantized, path, mode):
+    """Filtered search on 4 shards with live tombstones: the fused
+    epilogue must honor BOTH predicates — zero out-of-filter ids and
+    zero dead ids, in every path and both filter modes."""
+    cell = sharded_results["True"][f"filt-{quantized}-{path}-{mode}"]
+    assert cell["n_returned"] > 0
+    assert cell["label_leaks"] == 0
+    assert cell["dead_leaks"] == 0

@@ -1,0 +1,385 @@
+"""Filtered & multi-tenant search: label-plane plumbing, the fused
+filter epilogue across every search path, and the tenant veneer.
+
+The contract under test (docs/filtered_search.md):
+
+  * a filter NEVER leaks: a filtered search returns only ids whose label
+    row intersects the filter bitset — on every backend x scorer x
+    fusion x filter_mode combination (exclude gates the walk in the
+    kernel epilogue, traverse gates only the returned frontier; both
+    return zero out-of-filter ids);
+  * filter-absent specs are bit-identical to pre-filter behavior and
+    resolve to the same plan-cache keys (filter VALUES are runtime
+    operands — only presence is static);
+  * label rows survive delete/consolidate/grow/checkpoint/reshard
+    bit-identically;
+  * tenants are label bits: isolation, quotas, ownership checks, and
+    per-tenant stats ride the same machinery.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.construction import ConstructionParams
+from repro.core.index import JasperIndex
+from repro.core.index_core import bitmap_test_np
+from repro.core.mutations import (
+    N_LABEL_BYTES,
+    N_LABELS,
+    filter_to_bytes,
+    pack_label_rows,
+)
+from repro.core.search_spec import SearchSpec
+
+SEED = 99
+N, D, Q, K, BEAM = 512, 16, 16, 8, 32
+SMALL = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                           max_iters=24, rev_cap=16, prune_chunk=256)
+
+
+# ---------------------------------------------------------------------------
+# Label-plane primitives
+# ---------------------------------------------------------------------------
+
+def test_filter_to_bytes_sets_exactly_the_requested_bits():
+    fb = filter_to_bytes((0, 7, 8, 31))
+    assert fb.shape == (N_LABEL_BYTES,) and fb.dtype == np.uint8
+    got = [b for byte in range(N_LABEL_BYTES) for b in range(8)
+           if int(fb[byte]) >> b & 1]
+    # bit index = byte*8 + bit
+    assert [byte * 8 + b for byte in range(N_LABEL_BYTES)
+            for b in range(8) if int(fb[byte]) >> b & 1] == [0, 7, 8, 31]
+    with pytest.raises(ValueError):
+        filter_to_bytes((N_LABELS,))
+    with pytest.raises(ValueError):
+        filter_to_bytes((-1,))
+
+
+def test_pack_label_rows_forms():
+    # None -> all-zero rows (match nothing)
+    assert not pack_label_rows(None, 3).any()
+    # scalar -> one bit on every row
+    rows = pack_label_rows(2, 3)
+    assert rows.shape == (3, N_LABEL_BYTES)
+    assert (rows[:, 0] == 4).all() and not rows[:, 1:].any()
+    # per-row sequences
+    rows = pack_label_rows([(0,), (0, 9), ()], 3)
+    assert rows[0, 0] == 1 and rows[1, 0] == 1 and rows[1, 1] == 2
+    assert not rows[2].any()
+    with pytest.raises(ValueError):
+        pack_label_rows([(0,)], 3)          # length mismatch
+
+
+def test_bitmap_test_np_guards_negative_and_out_of_range_ids():
+    """Regression: ids of -1 (padding) or past the bitmap's bit count
+    used to wrap into a real byte index and alias another row's bit.
+    Now they are domain-masked to False."""
+    bits = np.zeros(4, np.uint8)
+    bits[3] = 0x80                          # bit 31 set (the LAST bit)
+    ids = np.array([-1, -8, 31, 32, 1000])
+    got = bitmap_test_np(bits, ids)
+    assert got.tolist() == [False, False, True, False, False]
+    # the old wraparound: -1 % 32 == 31 would have aliased bit 31 -> True
+    assert not bitmap_test_np(bits, np.array([-1]))[0]
+
+
+# ---------------------------------------------------------------------------
+# SearchSpec surface
+# ---------------------------------------------------------------------------
+
+def test_spec_filter_validation():
+    assert SearchSpec(k=5).resolve().filtered is False
+    r = SearchSpec(k=5, filter=(1, 2), filter_mode="exclude").resolve()
+    assert r.filtered and r.filter_mode == "exclude"
+    # scalar filter accepted
+    assert SearchSpec(k=5, filter=3).resolve().filtered
+    # filter_mode normalizes to "traverse" when no filter is present
+    assert SearchSpec(k=5, filter_mode="exclude").resolve() \
+        == SearchSpec(k=5).resolve()
+    with pytest.raises(ValueError):
+        SearchSpec(k=5, filter=()).resolve()
+    with pytest.raises(ValueError):
+        SearchSpec(k=5, filter=(N_LABELS,)).resolve()
+    with pytest.raises(ValueError):
+        SearchSpec(k=5, filter=(-1,)).resolve()
+    with pytest.raises(ValueError):
+        SearchSpec(k=5, filter=(0,), filter_mode="bogus").resolve()
+
+
+def test_resolved_spec_is_value_free():
+    """Filter VALUES never reach the resolved (static, plan-key) spec:
+    two specs differing only in filter value resolve identically."""
+    a = SearchSpec(k=5, filter=(1,), filter_mode="exclude").resolve()
+    b = SearchSpec(k=5, filter=(2, 7), filter_mode="exclude").resolve()
+    assert a == b
+    fb = SearchSpec(k=5, filter=(1,)).filter_bytes()
+    assert fb is not None and fb.shape == (N_LABEL_BYTES,)
+    assert SearchSpec(k=5).filter_bytes() is None
+
+
+def test_spec_filter_roundtrips_via_dict():
+    s = SearchSpec(k=5, filter=(1, 4), filter_mode="exclude")
+    assert SearchSpec.from_dict(s.to_dict()) == s
+
+
+# ---------------------------------------------------------------------------
+# The filtered matrix (single device)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def labeled_index():
+    rng = np.random.default_rng(SEED)
+    data = rng.normal(size=(N, D)).astype(np.float32)
+    labels = (np.arange(N) % 4).astype(np.int32)     # 4 partitions
+    idx = JasperIndex(D, capacity=N, construction=SMALL,
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data, labels=labels)
+    queries = rng.normal(size=(Q, D)).astype(np.float32)
+    return idx, labels, queries
+
+
+PATHS = [
+    pytest.param(quantized, path,
+                 id=f"{'rabitq' if quantized else 'exact'}-{path}")
+    for quantized in (False, True)
+    for path in ("jnp", "kernel", "hop", "megakernel")
+]
+
+
+def _path_spec(path, quantized, **kw):
+    base = dict(k=K, beam_width=BEAM, quantized=quantized)
+    if path == "kernel":
+        base["use_kernels"] = True
+    elif path in ("hop", "megakernel"):
+        base["fusion"] = path
+    return SearchSpec(**base, **kw)
+
+
+@pytest.mark.parametrize("quantized,path", PATHS)
+@pytest.mark.parametrize("mode", ["traverse", "exclude"])
+def test_filtered_search_never_leaks(labeled_index, quantized, path, mode):
+    idx, labels, queries = labeled_index
+    spec = _path_spec(path, quantized, filter=(2,), filter_mode=mode)
+    ids = np.asarray(idx.searcher(spec).search(queries).ids)
+    returned = ids[ids >= 0]
+    assert returned.size, "filtered search returned nothing"
+    assert (labels[returned] == 2).all(), (
+        quantized, path, mode, returned[labels[returned] != 2][:8])
+
+
+@pytest.mark.parametrize("quantized,path", PATHS)
+def test_filter_off_is_bit_identical(labeled_index, quantized, path):
+    """A filter-absent spec on a labeled index returns exactly what an
+    unlabeled index returns — the label plane is inert until a filter
+    asks for it — and both resolve to the same plan-key spec."""
+    idx, _, queries = labeled_index
+    spec = _path_spec(path, quantized)
+    res = idx.searcher(spec).search(queries)
+    # a fresh identical index WITHOUT labels
+    rng = np.random.default_rng(SEED)
+    data = rng.normal(size=(N, D)).astype(np.float32)
+    bare = JasperIndex(D, capacity=N, construction=SMALL,
+                       quantization="rabitq", bits=4, seed=SEED)
+    bare.build(data)
+    ref = bare.searcher(spec).search(queries)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    assert np.array_equal(np.asarray(res.dists), np.asarray(ref.dists))
+
+
+def test_filter_values_share_one_plan(labeled_index):
+    """Two different filter VALUES reuse one compiled plan; presence
+    still splits (filtered vs not are different executables)."""
+    idx, _, queries = labeled_index
+    spec1 = _path_spec("hop", True, filter=(1,), filter_mode="exclude")
+    spec2 = _path_spec("hop", True, filter=(3,), filter_mode="exclude")
+    assert spec1.resolve() == spec2.resolve()
+    idx.searcher(spec1).search(queries)
+    before = len(idx.plans)
+    idx.searcher(spec2).search(queries)
+    assert len(idx.plans) == before
+    r1 = np.asarray(idx.searcher(spec1).search(queries).ids)
+    r2 = np.asarray(idx.searcher(spec2).search(queries).ids)
+    _, labels, _ = labeled_index
+    assert (labels[r1[r1 >= 0]] == 1).all()
+    assert (labels[r2[r2 >= 0]] == 3).all()
+
+
+def test_multi_label_filter_is_a_union(labeled_index):
+    idx, labels, queries = labeled_index
+    spec = _path_spec("jnp", True, filter=(0, 3), filter_mode="exclude")
+    ids = np.asarray(idx.searcher(spec).search(queries).ids)
+    returned = ids[ids >= 0]
+    assert np.isin(labels[returned], (0, 3)).all()
+
+
+def test_filtered_telemetry_counts_filter_misses(labeled_index):
+    """Exclude-mode telemetry: out-of-filter candidates land in `masked`
+    (after the tombstone test — a dead candidate counts once)."""
+    idx, _, queries = labeled_index
+    spec = _path_spec("megakernel", True, filter=(2,),
+                      filter_mode="exclude").with_(telemetry="on")
+    res = idx.searcher(spec).search(queries)
+    assert res.telemetry is not None
+    assert (np.asarray(res.telemetry.masked) > 0).any()
+
+
+# ---------------------------------------------------------------------------
+# Label persistence through the mutation lifecycle
+# ---------------------------------------------------------------------------
+
+def test_labels_survive_delete_consolidate_grow_checkpoint(tmp_path):
+    rng = np.random.default_rng(5)
+    data = rng.normal(size=(256, D)).astype(np.float32)
+    labels = (np.arange(256) % 2).astype(np.int32)
+    idx = JasperIndex(D, capacity=256, construction=SMALL, seed=5)
+    idx.build(data, labels=labels)
+    plane0 = np.asarray(idx.core.mut.labels).copy()
+    assert plane0[:256].any()
+
+    idx.delete(np.arange(0, 64))              # tombstone: labels retained
+    assert np.array_equal(np.asarray(idx.core.mut.labels), plane0)
+    idx.consolidate()                         # freed: labels still in rows
+    live = ~idx.tombstoned(np.arange(256))
+    plane1 = np.asarray(idx.core.mut.labels)
+    assert np.array_equal(plane1[live], plane0[live])
+
+    # freed slots recycle label-CLEAN, then get the new batch's labels
+    new_ids = idx.insert(rng.normal(size=(32, D)).astype(np.float32),
+                         labels=np.full(32, 1, np.int32))
+    plane2 = np.asarray(idx.core.mut.labels)
+    assert (plane2[new_ids, 0] == 2).all() and not plane2[new_ids, 1:].any()
+
+    idx.grow(512)                             # copy-extension: bit-identical
+    plane3 = np.asarray(idx.core.mut.labels)
+    assert np.array_equal(plane3[:256], plane2[:256])
+    assert not plane3[256:].any()
+
+    path = str(tmp_path / "labeled.npz")
+    idx.save(path)
+    idx2 = JasperIndex.load(path)
+    assert np.array_equal(np.asarray(idx2.core.mut.labels), plane3)
+
+
+def test_legacy_checkpoint_loads_with_zero_labels(tmp_path):
+    """Checkpoints written before the label plane load with all-zero
+    labels (match nothing) instead of failing."""
+    rng = np.random.default_rng(6)
+    idx = JasperIndex(D, capacity=64, construction=SMALL, seed=6)
+    idx.build(rng.normal(size=(64, D)).astype(np.float32))
+    path = str(tmp_path / "legacy.npz")
+    idx.save(path)
+    # strip the labels array to simulate a pre-label checkpoint
+    arrs = dict(np.load(path, allow_pickle=True))
+    arrs.pop("labels")
+    np.savez(path, **arrs)
+    idx2 = JasperIndex.load(path)
+    assert not np.asarray(idx2.core.mut.labels).any()
+
+
+def test_labels_survive_reshard_bit_identically():
+    from repro.core.index_core import (core_build, core_live_locals,
+                                       core_set_labels, init_core)
+    from repro.core.resharding import reshard_cores
+    rng = np.random.default_rng(7)
+    cores, planes = [], []
+    for s in range(2):
+        c = init_core(128, D, SMALL.degree_bound)
+        c = core_build(c, rng.normal(size=(100, D)).astype(np.float32),
+                       params=SMALL)
+        rows = rng.integers(0, 256, size=(100, N_LABEL_BYTES)).astype(
+            np.uint8)
+        c = core_set_labels(c, np.arange(100, dtype=np.int32), rows)
+        cores.append(c)
+        planes.append(rows)
+    res = reshard_cores(cores, old_id_stride=512, n_shards=3, params=SMALL)
+    old = np.concatenate([s * 512 + np.asarray(core_live_locals(c))
+                          for s, c in enumerate(cores)])
+    new = res.translation.apply(old)
+    rows = np.concatenate(planes)
+    for og, ng, row in zip(old, new, rows):
+        g, l = ng // res.id_stride, ng % res.id_stride
+        assert np.array_equal(np.asarray(res.cores[g].mut.labels)[l], row)
+
+
+# ---------------------------------------------------------------------------
+# Tenant namespaces (serving veneer)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def tenant_service():
+    from repro.serving.anns_service import AnnsService
+    rng = np.random.default_rng(11)
+    idx = JasperIndex(D, capacity=1024, construction=SMALL,
+                      quantization="rabitq", seed=11)
+    svc = AnnsService(idx, spec=SearchSpec(k=5, beam_width=24,
+                                           quantized=True))
+    svc.register_tenant("acme", quota_rows=100)
+    svc.register_tenant("bolt")
+    ids_a = svc.tenant_insert(
+        "acme", rng.normal(size=(64, D)).astype(np.float32))
+    ids_b = svc.tenant_insert(
+        "bolt", rng.normal(size=(64, D)).astype(np.float32))
+    q = rng.normal(size=(4, D)).astype(np.float32)
+    return svc, ids_a, ids_b, q
+
+
+def test_tenant_bits_and_exhaustion():
+    from repro.serving.anns_service import AnnsService
+    idx = JasperIndex(D, capacity=64, construction=SMALL)
+    svc = AnnsService(idx, spec=SearchSpec(k=5))
+    bits = [svc.register_tenant(f"t{i}") for i in range(N_LABELS)]
+    assert bits == list(range(N_LABELS))
+    with pytest.raises(ValueError):
+        svc.register_tenant("one-too-many")
+    with pytest.raises(ValueError):
+        svc.register_tenant("t0")             # duplicate name
+
+
+def test_tenant_isolation_both_modes(tenant_service):
+    svc, ids_a, ids_b, q = tenant_service
+    for mode in ("traverse", "exclude"):
+        t = svc.tenant_search("acme", q, filter_mode=mode)
+        got = set(t.ids.ravel().tolist()) - {-1}
+        assert got and got <= set(ids_a.tolist()), (mode, got)
+        t = svc.tenant_search("bolt", q, filter_mode=mode)
+        got = set(t.ids.ravel().tolist()) - {-1}
+        assert got and got <= set(ids_b.tolist()), (mode, got)
+
+
+def test_tenant_quota_enforced_before_mutation(tenant_service):
+    svc, ids_a, _, _ = tenant_service
+    gen = svc.index.generation
+    with pytest.raises(ValueError, match="quota"):
+        svc.tenant_insert("acme", np.zeros((37, D), np.float32))
+    assert svc.index.generation == gen        # nothing mutated
+    assert svc.tenant_stats("acme")["live"] == 64
+
+
+def test_tenant_delete_ownership(tenant_service):
+    svc, ids_a, ids_b, _ = tenant_service
+    with pytest.raises(ValueError, match="not owned"):
+        svc.tenant_delete("acme", ids_b[:4])
+    assert svc.tenant_delete("bolt", ids_b[:8]) == 8
+    st = svc.tenant_stats()
+    assert st["bolt"]["live"] == 56 and st["acme"]["live"] == 64
+
+
+def test_tenant_metrics_namespace(tenant_service):
+    svc, _, _, q = tenant_service
+    svc.tenant_search("acme", q)
+    snap = svc.metrics_snapshot()
+    assert snap["tenants.acme.live"] == 64
+    assert snap["tenants.acme.n_searches"] >= 1
+    assert snap["tenants.bolt.label"] == 1
+
+
+def test_tenant_lanes_share_plans(tenant_service):
+    """Scheduler lanes for two tenants differ only in filter VALUE, so
+    the second lane's dispatch compiles nothing new."""
+    svc, _, _, q = tenant_service
+    svc.tenant_search("acme", q)              # compile the filtered plan
+    before = len(svc.index.plans)
+    svc.tenant_search("bolt", q)
+    assert len(svc.index.plans) == before
+    assert svc.tenant_spec("acme").resolve() \
+        == svc.tenant_spec("bolt").resolve()

@@ -183,6 +183,29 @@ def test_per_query_slo_override_drives_deadline():
     assert sched.stats.flush_deadline == 1        # 60% of 10ms spent
 
 
+def test_deadline_is_min_over_queue_not_head():
+    """Regression: a tight-budget query queued BEHIND a lax one must pull
+    the flush forward. The old policy only looked at the queue head's
+    budget, so the tight query's deadline was invisible until the lax
+    head's (much later) deadline fired."""
+    clk = FakeClock()
+    sched, d = make_sched(clk, max_inflight=2, slo_budget_s=10.0)
+    sched.submit(Q)
+    sched.poll()                                  # occupy the device
+    sched.submit(Q, slo_budget_s=10.0)            # lax head: deadline @ 5s
+    clk.advance(0.001)
+    sched.submit(Q, slo_budget_s=0.010)           # tight: deadline @ 6ms
+    clk.advance(0.004)
+    sched.poll()
+    assert sched.stats.flush_deadline == 0        # tight at 40%: waiting
+    clk.advance(0.003)                            # tight now 70% spent
+    sched.poll()                                  # head-only policy would
+    assert sched.stats.flush_deadline == 1        # have slept until ~5s
+    # both queries left in the SAME flush (FIFO: head goes with it)
+    assert d["default"].shapes[-1] == (8, DIMS)
+    assert sched.stats.dispatched == 3
+
+
 def test_priority_lane_dispatch_order():
     """Both lanes overdue, one dispatch slot: the lower priority value
     wins even though the other lane's query is older."""
@@ -372,8 +395,15 @@ def test_mixed_spec_traffic_zero_steady_state_retraces(built):
     trace = poisson_trace(5000.0, 150, n_queries=64, seed=3,
                           lanes=("default", "exact"),
                           lane_weights=(0.7, 0.3))
+    # warmup: every (lane, rung) shape explicitly — which shapes a serve
+    # pass coalesces depends on harvest timing (device readiness), so
+    # traffic alone cannot deterministically cover the ladder
+    for spec in (svc.spec, lanes["exact"][0]):
+        ses = idx.searcher(spec)
+        for b in (1, 8, 32):
+            ses.search(pool[:b])
     svc.serve(trace, pool, lanes=lanes, buckets=(1, 8, 32),
-              realtime=False)                     # warmup: compiles plans
+              realtime=False)                     # warmup: scheduler path
     before = idx.plans.stats.snapshot()
     rep, handles = svc.serve(trace, pool, lanes=lanes, buckets=(1, 8, 32),
                              realtime=False)
