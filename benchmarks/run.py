@@ -19,6 +19,7 @@ from benchmarks import (
     queries,
     roofline_anns,
     serving,
+    tiering,
     tiles,
     updates,
 )
@@ -56,6 +57,10 @@ SECTIONS = {
     "serving": lambda csv, fast: serving.run(
         csv, n=2000 if fast else None,
         n_arrivals=400 if fast else 2000),
+    # tiered storage: device vs host rerank source at equal budget +
+    # code-only floor (emits BENCH_tiering.json)
+    "tiering": lambda csv, fast: tiering.run(
+        csv, n=2000 if fast else None),
     # sharded search: QPS vs shard count + merge-collective bytes.
     # Subprocess: the multi-device XLA flag must precede jax init, and by
     # the time run.py gets here jax is already initialized single-device.

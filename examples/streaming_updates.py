@@ -326,6 +326,91 @@ def run_tenants(n0: int, rounds: int, dims: int, quick: bool) -> None:
           f"shared across tenants ({n_plans} plans total).")
 
 
+def run_tiered(n0: int, rounds: int, batch: int, dims: int,
+               quick: bool) -> None:
+    """Tiered-storage scenario (the tier-1 tiering smoke lane): build a
+    RaBitQ index, evict the f32 rows to the host VectorStore, and serve
+    the churn loop with rerank_source="host" — traversal stays on device
+    over packed codes; only the final frontier is gathered host-side for
+    exact rerank (docs/tiered_storage.md). Contracts held every tick:
+    rows stay host-tier (zero device row bytes), mutations write
+    through, host results are exact and bit-identical to the device
+    tier, and steady-state serving never retraces."""
+    from repro.serving.anns_service import AnnsService
+
+    rng = np.random.default_rng(6)
+    params = QUICK_PARAMS if quick else PARAMS
+    idx = JasperIndex(dims, capacity=int(n0 * 1.5), construction=params,
+                      quantization="rabitq", bits=4)
+    idx.build(rng.normal(size=(n0, dims)).astype(np.float32))
+    queries = rng.normal(size=(100, dims)).astype(np.float32)
+
+    dev_mem = idx.memory_stats()
+    res_dev = idx.searcher(SERVE_SPEC).search(queries)   # device-tier ref
+    idx.evict_rows_to_host()
+    mem = idx.memory_stats()
+    assert mem["rows_tier"] == "host" and mem["device_rows_bytes"] == 0.0
+    print(f"evicted: {dev_mem['device_rows_bytes'] / 1e6:.2f} MB of f32 "
+          f"rows -> host ({mem['host_rows_bytes'] / 1e6:.2f} MB); device "
+          f"holds codes only ({mem['device_codes_bytes'] / 1e6:.2f} MB, "
+          f"{mem['device_compression_ratio']:.1f}x compression)")
+
+    host_spec = SERVE_SPEC.with_(rerank_source="host")
+    svc = AnnsService(idx, spec=host_spec, consolidate_threshold=0.15,
+                      verify=True)
+    # correctness anchor: host tier == device tier on the same core
+    res_host = svc.search(queries)
+    assert res_host.estimated is False
+    assert np.array_equal(np.asarray(res_host.ids), np.asarray(res_dev.ids))
+    assert np.array_equal(np.asarray(res_host.dists),
+                          np.asarray(res_dev.dists)), \
+        "host-tier rerank diverged from the device tier"
+    # code-only lane on the same evicted index reports itself honestly
+    res_none = idx.searcher(SERVE_SPEC.with_(rerank=False)).search(queries)
+    assert res_none.estimated is True
+
+    live = list(range(n0))
+    print(f"{'tick':>4s} {'size':>6s} {'del':>5s} {'ins':>5s} "
+          f"{'dev_rows_B':>10s} {'recall@10':>9s}")
+    for t in range(rounds):
+        dead = rng.choice(live, batch, replace=False)
+        live = sorted(set(live) - set(dead.tolist()))
+        res = svc.step(deletes=dead,
+                       inserts=rng.normal(size=(batch, dims))
+                       .astype(np.float32),
+                       queries=queries)
+        live += res.inserted_ids.tolist()
+        returned = res.search.ids[res.search.ids >= 0]
+        assert np.isin(returned, live).all(), "tombstoned id returned!"
+        assert res.search.estimated is False
+        mem = idx.memory_stats()
+        assert mem["rows_tier"] == "host", "mutation flipped the tier!"
+        assert mem["device_rows_bytes"] == 0.0, \
+            "mutation leaked f32 rows back onto the device!"
+        r = idx.recall(queries, spec=host_spec)
+        print(f"{t:4d} {idx.size:6d} {res.n_deleted:5d} "
+              f"{res.inserted_ids.size:5d} {mem['device_rows_bytes']:10.0f} "
+              f"{r:9.3f}")
+
+    # steady state: every plan (traversal, host rerank, liveness modes)
+    # compiled during the churn warmup — repeated serving must come
+    # straight from the cache on the host tier too
+    before = idx.plans.stats.snapshot()
+    for _ in range(3):
+        svc.search(queries)
+    delta = idx.plans.stats.delta(before)
+    assert delta["traces"] == 0 and delta["misses"] == 0, \
+        f"host-tier steady state retraced: {delta}"
+
+    st = idx.storage_stats()
+    print(f"\ntiered smoke OK: {rounds} churn ticks served rows-evicted "
+          f"with write-through keeping device row bytes at 0, host rerank "
+          f"bit-identical to the device tier, and zero steady-state "
+          f"retraces ({delta}); frontier gathers moved "
+          f"{st['fetch_n_bytes'] / 1e6:.2f} MB across "
+          f"{st['fetch_n_fetches']} fetches.")
+
+
 def run_reshard(n0: int, dims: int, quick: bool) -> None:
     """Elastic-resharding scenario (the tier-1 reshard smoke lane): build
     at 4 shards -> checkpoint -> restore at 2 shards -> churn through the
@@ -415,6 +500,11 @@ def main() -> None:
     ap.add_argument("--serve", action="store_true",
                     help="open-loop serving: seeded Poisson/bursty traces "
                          "through the standing-query scheduler")
+    ap.add_argument("--tiered", action="store_true",
+                    help="tiered storage: evict f32 rows to the host "
+                         "tier, churn + serve with rerank_source='host' "
+                         "(bit-identity, write-through, zero-retrace "
+                         "checks)")
     ap.add_argument("--tenants", action="store_true",
                     help="multi-tenant churn: two tenants on one index "
                          "via the label-filter plane, per-tick isolation "
@@ -435,7 +525,12 @@ def main() -> None:
         set_tracer(tracer)
 
     snap = None
-    if args.tenants:
+    if args.tiered:
+        run_tiered(n0=600 if args.quick else 6000,
+                   rounds=3 if args.quick else 6,
+                   batch=60 if args.quick else 500, dims=64,
+                   quick=args.quick)
+    elif args.tenants:
         run_tenants(n0=400 if args.quick else 4000,
                     rounds=3 if args.quick else 6, dims=64,
                     quick=args.quick)

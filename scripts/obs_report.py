@@ -137,6 +137,40 @@ def check_tenants(snap: dict) -> dict | None:
     return tenants
 
 
+def check_storage(snap: dict) -> dict | None:
+    """Cross-field consistency for the `storage.*` namespace (the tiered
+    vector store), when present: the tier name must be device|host,
+    exactly one of device_rows_bytes / host_rows_bytes may be non-zero
+    (rows live in ONE tier), the compression ratio must be >= 1, and the
+    fetch counters must be non-negative with bytes consistent against
+    rows. Returns the stripped-namespace dict (None when the snapshot
+    has no storage series)."""
+    s = {k[len("storage."):]: v for k, v in snap.items()
+         if k.startswith("storage.") and not isinstance(v, dict)}
+    if not s:
+        return None
+    tier = s.get("rows_tier")
+    if tier not in ("device", "host"):
+        raise ValueError(f"storage: rows_tier {tier!r} not device|host")
+    dev, host = s.get("device_rows_bytes", 0), s.get("host_rows_bytes", 0)
+    if dev and host:
+        raise ValueError(
+            f"storage: rows resident in BOTH tiers (device={dev}, "
+            f"host={host})")
+    if tier == "host" and dev:
+        raise ValueError(f"storage: host tier with {dev} device row bytes")
+    ratio = s.get("device_compression_ratio")
+    if ratio is not None and ratio < 1.0:
+        raise ValueError(f"storage: device_compression_ratio {ratio} < 1")
+    for k in ("fetch_n_fetches", "fetch_n_rows", "fetch_n_bytes",
+              "fetch_total_s"):
+        if s.get(k, 0) < 0:
+            raise ValueError(f"storage: negative counter {k}")
+    if s.get("fetch_n_bytes", 0) and not s.get("fetch_n_rows", 0):
+        raise ValueError("storage: fetch bytes without fetched rows")
+    return s
+
+
 def print_trace_summary(stats: dict) -> None:
     print(f"{'span':<24s} {'count':>6s} {'total_ms':>10s} "
           f"{'mean_ms':>9s} {'max_ms':>9s}")
@@ -206,6 +240,27 @@ def print_tenants_summary(tenants: dict) -> None:
               f"{t.get('n_search_queries', 0):>8} {quota_s:>10s}")
 
 
+def print_storage_summary(s: dict, snap: dict) -> None:
+    """Tiered-storage digest: where the rows live, per-tier resident
+    bytes, effective device compression, and the host-fetch funnel."""
+    print(f"rows_tier={s.get('rows_tier')} "
+          f"device_rows={s.get('device_rows_bytes', 0):.0f}B "
+          f"device_codes={s.get('device_codes_bytes', 0):.0f}B "
+          f"host_rows={s.get('host_rows_bytes', 0):.0f}B")
+    ratio = s.get("device_compression_ratio")
+    if ratio is not None:
+        print(f"device compression: {ratio:.2f}x")
+    n = s.get("fetch_n_fetches", 0)
+    if n:
+        print(f"fetches={n} rows={s.get('fetch_n_rows', 0)} "
+              f"bytes={s.get('fetch_n_bytes', 0)} "
+              f"total_s={s.get('fetch_total_s', 0):.4f}")
+    hist = snap.get("storage.fetch_latency_us")
+    if isinstance(hist, dict) and hist.get("count"):
+        print(f"fetch latency hist: count={hist['count']} "
+              f"mean={hist['mean']:.1f}us max={hist['max']:.1f}us")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("paths", nargs="+",
@@ -229,6 +284,7 @@ def main() -> int:
             check_snapshot(snap)
             sched = check_scheduler(snap)
             tenants = check_tenants(snap)
+            storage = check_storage(snap)
             any_snap = True
             print(f"== metrics snapshot: {path} ({len(snap)} series) ==")
             print_snapshot(snap)
@@ -240,6 +296,10 @@ def main() -> int:
             if tenants is not None:
                 print(f"== tenants: {path} ==")
                 print_tenants_summary(tenants)
+                print()
+            if storage is not None:
+                print(f"== storage: {path} ==")
+                print_storage_summary(storage, snap)
                 print()
     if not (any_trace or any_snap):
         print("no trace events or metrics found", file=sys.stderr)

@@ -69,6 +69,11 @@ case "$mode" in
     python examples/streaming_updates.py --serve --quick --trace "$serve_out"
     python scripts/obs_report.py "$serve_out"
     rm -f "$serve_out"
+    # tiering lane (ISSUE 10): evict f32 rows to the host tier, churn +
+    # serve with rerank_source="host" — bit-identity to the device tier,
+    # write-through keeping device row bytes at zero, zero steady-state
+    # retraces
+    python examples/streaming_updates.py --tiered --quick
     ;;
   *)
     echo "usage: scripts/tier1.sh [full|smoke] [pytest args...]" >&2

@@ -67,6 +67,13 @@ from repro.core.mutations import MutationState, pack_label_rows
 from repro.core.rabitq import RaBitQCodes, RaBitQParams, rabitq_train
 from repro.core.resharding import pow2_rung
 from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
+from repro.core.storage import (
+    TIER_STAT_KEYS,
+    VectorStore,
+    build_sharded_host_rerank_plan,
+    rows_staged,
+    tier_memory_stats,
+)
 from repro.obs.tracing import span as obs_span
 
 Array = jax.Array
@@ -116,9 +123,13 @@ def _core_layout(template: IndexCore, row_axes, wrap):
     if template.rq_params is not None:
         rq = RaBitQParams(rotation=repl, centroid=repl,
                           bits=template.rq_params.bits)
-    return IndexCore(vectors=row2, vec_sqnorm=row1, adjacency=row2,
-                     n_valid=row1, medoid=row1, mut=mut, codes=codes,
-                     rq_params=rq)
+    # rows evicted to the host tier are None leaves (core/storage.py) —
+    # the layout pytree must mirror the structure exactly
+    return IndexCore(
+        vectors=None if template.vectors is None else row2,
+        vec_sqnorm=None if template.vec_sqnorm is None else row1,
+        adjacency=row2, n_valid=row1, medoid=row1, mut=mut, codes=codes,
+        rq_params=rq)
 
 
 def core_partition_specs(template: IndexCore, spec: ShardSpec) -> IndexCore:
@@ -253,6 +264,56 @@ def sharded_search_fn(mesh: Mesh, shard_spec: ShardSpec,
     return jax.jit(fn, in_shardings=in_shardings)
 
 
+def sharded_traversal_fn(mesh: Mesh, shard_spec: ShardSpec,
+                         template: IndexCore, *, spec,
+                         filter_tombstones: bool = True,
+                         trace_counter=None):
+    """Host-tier stage 1: the shard-local `core_search` traversal ONLY
+    (with `spec.rerank_source == "host"` it returns the full-width
+    estimator frontier — no rows operand, no in-graph rerank, no merge).
+    Outputs are stacked per shard via a leading row-axes dimension:
+    fn(core_stacked, queries[, fb]) -> (local frontier ids (S, Q, L),
+    estimator dists (S, Q, L), n_hops (S, Q)[, SearchTelemetry stacked
+    the same way]). S is ordered exactly like `_shard_index` (row-major
+    over row_axes) — the order the host gather and the sharded host
+    rerank plan (core/storage.py) assume."""
+    row_axes = shard_spec.row_axes
+    tel_on = spec.telemetry == "on"
+    filtered = spec.filtered
+
+    def local_traverse(core_stacked, queries, *maybe_fb):
+        if trace_counter is not None:
+            trace_counter()
+        core = _local_core(core_stacked)
+        out = core_search(
+            core, queries, spec=spec, filter_tombstones=filter_tombstones,
+            filter_bytes=maybe_fb[0] if filtered else None)
+        ids, dists, n_hops = out[:3]
+        res = (ids[None], dists[None], n_hops[None])
+        if tel_on:
+            tel = out[3]
+            res = res + (type(tel)(*(t[None] for t in tel)),)
+        return res
+
+    q_axis = shard_spec.query_axis
+    s3 = P(row_axes, q_axis, None)
+    s2 = P(row_axes, q_axis)
+    out_specs = (s3, s3, s2)
+    if tel_on:
+        out_specs = out_specs + (SearchTelemetry(s2, s2, s2, s3),)
+    in_specs = (core_partition_specs(template, shard_spec),
+                P(q_axis, None))
+    in_shardings = (core_shardings(mesh, template, shard_spec),
+                    NamedSharding(mesh, P(q_axis, None)))
+    if filtered:
+        in_specs = in_specs + (P(),)
+        in_shardings = in_shardings + (NamedSharding(mesh, P()),)
+    fn = shard_map(
+        local_traverse, mesh=mesh,
+        in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    return jax.jit(fn, in_shardings=in_shardings)
+
+
 def sharded_insert_fn(mesh: Mesh, spec: ShardSpec, template: IndexCore, *,
                       params: ConstructionParams):
     """Build the jit'd sharded insert step: every shard links its own batch
@@ -315,7 +376,8 @@ class ShardedJasperIndex(SearchSurface):
                  construction: ConstructionParams | None = None,
                  quantization: str | None = None, bits: int = 4,
                  seed: int = 0, id_stride: int | None = None,
-                 plan_cache_capacity: int | None = None):
+                 plan_cache_capacity: int | None = None,
+                 rows_tier: str = "device"):
         """id_stride: global ids are shard*id_stride + local, fixed for the
         index lifetime (default 4x capacity_per_shard) — capacity can grow
         up to the stride without invalidating outstanding ids."""
@@ -369,6 +431,44 @@ class ShardedJasperIndex(SearchSurface):
         # old->new IdTranslation of the last shard-count-changing load
         # (None after a same-count restore or a fresh construction)
         self.reshard_translation = None
+        # tiered storage (core/storage.py): host rows are the stacked
+        # (S*cap, D) array, so per-shard rows are contiguous slices and
+        # the frontier gather addresses shard*cap + local directly
+        self.store = VectorStore()
+        if rows_tier == "host":
+            self.evict_rows_to_host()
+        elif rows_tier != "device":
+            raise ValueError(
+                f"rows_tier must be device|host, got {rows_tier!r}")
+
+    # ------------------------------------------------------------ tiered rows
+    @property
+    def rows_tier(self) -> str:
+        """Where the f32 rows live ("device" | "host") — see
+        JasperIndex.rows_tier; the sharded form stacks host rows
+        (S*cap, D) so each shard's rows are one contiguous slice."""
+        return self.store.tier
+
+    def evict_rows_to_host(self) -> "ShardedJasperIndex":
+        """device -> host across every shard: packed codes (+ graph and
+        metadata) stay device-resident per shard; the f32 rows move to
+        one stacked host array. See JasperIndex.evict_rows_to_host."""
+        if self.quantization != "rabitq":
+            raise ValueError(
+                "evict_rows_to_host requires quantization='rabitq': "
+                "without device-resident packed codes there is nothing "
+                "left to traverse on (an exact-only core cannot serve "
+                "any search with its rows evicted)")
+        self.core = self.store.evict(self.core)
+        self.plans.clear()
+        return self
+
+    def restore_rows_to_device(self) -> "ShardedJasperIndex":
+        """host -> device: re-attach the rows, sharded over the row axes
+        again (classic fully-device-resident layout)."""
+        self.core = self._device_put(self.store.restore(self.core))
+        self.plans.clear()
+        return self
 
     # --------------------------------------------------------------- stacking
     def _empty_stacked_core(self) -> IndexCore:
@@ -586,7 +686,7 @@ class ShardedJasperIndex(SearchSurface):
         labels: optional per-row label sets (see `set_labels`), in the
         same dealt order as data."""
         with obs_span("index.build", n=int(np.asarray(data).shape[0]),
-                      sharded=True):
+                      sharded=True), rows_staged(self):
             self._build_impl(data)
             if labels is not None:
                 n = int(np.asarray(data).shape[0])
@@ -668,13 +768,15 @@ class ShardedJasperIndex(SearchSurface):
             ids = (np.arange(s)[:, None] * self.id_stride
                    + np.arange(b)[None, :]).astype(np.int32)
             return ids.reshape(-1) if flat_in else ids
-        data = self._prep_data(data)    # (S, b, D[+1]): global-max augment
-        local_ids, global_ids = self._allocate_slots_per_shard(data.shape[1])
-        self.core = self._fn("insert", b=data.shape[1])(
-            self.core, jnp.asarray(local_ids), data)
-        if labels is not None:
-            self.set_labels(global_ids.reshape(-1), labels)
-        jax.block_until_ready(self.core.adjacency)
+        with rows_staged(self):
+            data = self._prep_data(data)  # (S, b, D[+1]): global-max augment
+            local_ids, global_ids = self._allocate_slots_per_shard(
+                data.shape[1])
+            self.core = self._fn("insert", b=data.shape[1])(
+                self.core, jnp.asarray(local_ids), data)
+            if labels is not None:
+                self.set_labels(global_ids.reshape(-1), labels)
+            jax.block_until_ready(self.core.adjacency)
         return global_ids.reshape(-1) if flat_in else global_ids
 
     def set_labels(self, ids, labels) -> None:
@@ -773,16 +875,17 @@ class ShardedJasperIndex(SearchSurface):
         if not n_del.any():
             return {"n_freed": 0, "n_repaired": 0}
         total = {"n_freed": 0, "n_repaired": 0}
-        locals_ = []
-        for s in range(self.n_shards):
-            local = self.shard_core(s)
-            if int(n_del[s]):
-                local, stats = core_consolidate(local, params=self.params,
-                                                refine=refine)
-                total["n_freed"] += stats["n_freed"]
-                total["n_repaired"] += stats["n_repaired"]
-            locals_.append(local)
-        self.core = self._stack_cores(locals_)
+        with rows_staged(self):
+            locals_ = []
+            for s in range(self.n_shards):
+                local = self.shard_core(s)
+                if int(n_del[s]):
+                    local, stats = core_consolidate(
+                        local, params=self.params, refine=refine)
+                    total["n_freed"] += stats["n_freed"]
+                    total["n_repaired"] += stats["n_repaired"]
+                locals_.append(local)
+            self.core = self._stack_cores(locals_)
         return total
 
     def grow(self, new_capacity_per_shard: int | None = None
@@ -804,6 +907,11 @@ class ShardedJasperIndex(SearchSurface):
                 "id_stride for more growth headroom.")
         if new_cap == self.cap:
             return self
+        with rows_staged(self):
+            self._grow_impl(new_cap)
+        return self
+
+    def _grow_impl(self, new_cap: int) -> None:
         s, cap = self.n_shards, self.cap
 
         def per_shard_pad(arr, fill):
@@ -837,7 +945,6 @@ class ShardedJasperIndex(SearchSurface):
             codes=codes))
         self.cap = new_cap
         self.plans.clear()              # row0 offsets / shapes changed
-        return self
 
     def rebalance(self, *, tolerance: float = 0.05) -> dict:
         """Level per-shard live counts: round-robin live rows off overfull
@@ -860,6 +967,14 @@ class ShardedJasperIndex(SearchSurface):
 
         # liveness is consolidate-invariant, so the plan (and the no-op
         # early return: nothing mutated, nothing stamped) comes first
+        with rows_staged(self):
+            return self._rebalance_impl(tolerance)
+
+    def _rebalance_impl(self, tolerance: float) -> dict:
+        from repro.core.index_core import (core_live_locals,
+                                           core_take_free_slots)
+        from repro.core.resharding import IdTranslation, rebalance_plan
+
         live = [core_live_locals(self.shard_core(s))
                 for s in range(self.n_shards)]
         plan = rebalance_plan(live, tolerance=tolerance)
@@ -927,6 +1042,11 @@ class ShardedJasperIndex(SearchSurface):
         key = ("search", self.cap, rspec, tuple(q_shape), filt)
 
         def build():
+            if rspec.rerank_source == "host":
+                return sharded_traversal_fn(
+                    self.mesh, self.spec, self._template(), spec=rspec,
+                    filter_tombstones=filt,
+                    trace_counter=self.plans.count_trace)
             return sharded_search_fn(
                 self.mesh, self.spec, self._template(),
                 id_stride=self.id_stride, spec=rspec,
@@ -934,6 +1054,39 @@ class ShardedJasperIndex(SearchSurface):
                 trace_counter=self.plans.count_trace)
 
         fn = self.plans.get(key, build)
+        if rspec.rerank_source == "host":
+            # Two-stage plan: device traversal over packed codes yields
+            # per-shard estimator frontiers; the host store gathers only
+            # the frontier rows; a separately-keyed jitted plan reranks
+            # exactly and merges to global top-k. Telemetry (stacked per
+            # shard by the traversal) sums eagerly — int32 adds, so it
+            # matches the fused plan's in-graph psum bit-for-bit.
+            rkey = ("rerank_host", self.cap, rspec, tuple(q_shape))
+            rplan = self.plans.get(rkey, lambda: build_sharded_host_rerank_plan(
+                rspec,
+                axis_sizes=tuple(self.mesh.shape[ax]
+                                 for ax in self.spec.row_axes),
+                id_stride=self.id_stride,
+                trace_counter=self.plans.count_trace))
+            store, cap = self.store, self.cap
+
+            def run_host(queries, fb=None):
+                out = (fn(self.core, queries, jnp.asarray(fb, jnp.uint8))
+                       if rspec.filtered else fn(self.core, queries))
+                f_ids = out[0]
+                ids_np = np.asarray(f_ids)
+                shard = np.arange(ids_np.shape[0]).reshape(-1, 1, 1)
+                positions = np.where(ids_np >= 0, shard * cap + ids_np, -1)
+                rows, sq = store.gather(positions)
+                merged = rplan(queries, f_ids, jnp.asarray(rows),
+                               jnp.asarray(sq), out[2])
+                if len(out) > 3:
+                    tel = out[3]
+                    merged = merged + (
+                        type(tel)(*(jnp.sum(t, axis=0) for t in tel)),)
+                return merged
+
+            return run_host
         if rspec.filtered:
             return lambda queries, fb=None: fn(self.core, queries,
                                                jnp.asarray(fb, jnp.uint8))
@@ -966,6 +1119,13 @@ class ShardedJasperIndex(SearchSurface):
         from repro.core.distances import pairwise_l2_squared
         from repro.core.mutations import unpack_bitmap
         q = self._prep_query(queries)
+        with rows_staged(self):
+            out = self._brute_force_impl(q, k, pairwise_l2_squared,
+                                         unpack_bitmap)
+            jax.block_until_ready(out)   # computed before rows detach
+        return out
+
+    def _brute_force_impl(self, q, k, pairwise_l2_squared, unpack_bitmap):
         d = pairwise_l2_squared(q, self.core.vectors, self.core.vec_sqnorm)
         rows = self.n_shards * self.cap
         local = jnp.arange(rows) % self.cap
@@ -977,6 +1137,22 @@ class ShardedJasperIndex(SearchSurface):
         # stacked array position -> layout-independent global id
         gids = (pos // self.cap) * self.id_stride + pos % self.cap
         return gids.astype(jnp.int32), -neg
+
+    # ----------------------------------------------------------------- memory
+    def memory_stats(self) -> dict[str, float]:
+        """Per-tier resident bytes over the stacked (all-shard) arrays —
+        same TIER_STAT_KEYS contract as the single-device driver."""
+        return dict(tier_memory_stats(
+            self.core, self.store, capacity=self.capacity,
+            store_dims=self.store_dims))
+
+    def storage_stats(self) -> dict:
+        """Tier residence + host-fetch counters for the `storage.*`
+        metrics namespace (obs/metrics.py `storage_stats_collector`)."""
+        out = dict(self.memory_stats())
+        out.update({f"fetch_{k}": v
+                    for k, v in self.store.fetch_stats.as_dict().items()})
+        return out
 
     # ----------------------------------------------------------- plan cache
     def _fn(self, kind: str, **key):
@@ -1017,6 +1193,7 @@ class ShardedJasperIndex(SearchSurface):
             "row_axes": list(self.spec.row_axes),
             "query_axis": self.spec.query_axis,
             "mips_max_sqnorm": self._mips_max_sqnorm,
+            "rows_tier": self.rows_tier,
         }
         shard_meta = {
             "dims": self.dims, "metric": self.metric, "capacity": self.cap,
@@ -1024,10 +1201,17 @@ class ShardedJasperIndex(SearchSurface):
             "seed": self.seed,
             "construction": asdict(self.params),
             "mips_max_sqnorm": self._mips_max_sqnorm,
+            # each shard file is JasperIndex-loadable; carrying the tier
+            # means a shard restored single-device re-evicts too
+            "rows_tier": self.rows_tier,
         }
-        for s in range(self.n_shards):
-            save_npz_atomic(f"{path}.shard{s}",
-                            core_to_arrays(self.shard_core(s)), shard_meta)
+        with rows_staged(self):
+            # host-tier rows stage back in: shard payloads keep the ONE
+            # cross-driver format, the manifest records the tier layout
+            for s in range(self.n_shards):
+                save_npz_atomic(f"{path}.shard{s}",
+                                core_to_arrays(self.shard_core(s)),
+                                shard_meta)
         with open(path + ".meta.json", "w") as f:
             json.dump(meta, f)
 
@@ -1093,4 +1277,6 @@ class ShardedJasperIndex(SearchSurface):
         idx.core = idx._stack_cores(locals_)
         idx.reshard_translation = translation
         idx.plans.clear()
+        if meta.get("rows_tier", "device") == "host":
+            idx.evict_rows_to_host()    # restore the checkpoint's tier
         return idx

@@ -65,6 +65,13 @@ from repro.core.index_core import (
 from repro.core.mutations import MutationState, pack_label_rows
 from repro.core.pq import make_pq_scorer, pq_encode, pq_train
 from repro.core.search_spec import PlanCache, SearchSpec, SearchSurface
+from repro.core.storage import (
+    TIER_STAT_KEYS,
+    VectorStore,
+    build_host_rerank_plan,
+    rows_staged,
+    tier_memory_stats,
+)
 from repro.obs.tracing import span as obs_span
 from repro.core.rabitq import (
     RaBitQCodes,
@@ -107,7 +114,8 @@ class JasperIndex(SearchSurface):
     def __init__(self, dims: int, capacity: int, *, metric: str = "l2",
                  quantization: str | None = None, bits: int = 4,
                  construction: ConstructionParams | None = None,
-                 seed: int = 0, plan_cache_capacity: int | None = None):
+                 seed: int = 0, plan_cache_capacity: int | None = None,
+                 rows_tier: str = "device"):
         if metric not in ("l2", "mips"):
             raise ValueError(f"metric must be l2|mips, got {metric!r}")
         if quantization not in (None, "rabitq", "pq"):
@@ -144,6 +152,15 @@ class JasperIndex(SearchSurface):
         self.pq_params = None
         self.pq_codes: Array | None = None
         self._mips_max_sqnorm: float | None = None
+        # tiered storage (core/storage.py): where the f32 rows live.
+        # "device" keeps them core pytree leaves (classic); "host" evicts
+        # them to host numpy so only packed codes stay device-resident
+        self.store = VectorStore()
+        if rows_tier == "host":
+            self.evict_rows_to_host()
+        elif rows_tier != "device":
+            raise ValueError(
+                f"rows_tier must be device|host, got {rows_tier!r}")
 
     # -------------------------------------------------------- core delegation
     @property
@@ -182,6 +199,37 @@ class JasperIndex(SearchSurface):
     @property
     def rabitq_params(self) -> RaBitQParams | None:
         return self.core.rq_params
+
+    # ---------------------------------------------------------- tiered rows
+    @property
+    def rows_tier(self) -> str:
+        """Where the f32 rows live: "device" (core pytree leaves) or
+        "host" (evicted to `self.store`; traversal runs on packed codes
+        only and rerank fetches the frontier's rows host-side)."""
+        return self.store.tier
+
+    def evict_rows_to_host(self) -> "JasperIndex":
+        """device -> host: move the f32 rows off the device, leaving only
+        packed codes (+ graph/metadata) device-resident. Searches must
+        then use `rerank_source="host"` (bit-identical) or "none";
+        mutations keep working through write-through staging. Compiled
+        plans are dropped (the core pytree structure changes)."""
+        if self.quantization != "rabitq":
+            raise ValueError(
+                "evict_rows_to_host requires quantization='rabitq': "
+                "without device-resident packed codes there is nothing "
+                "left to traverse on (an exact-only core cannot serve "
+                "any search with its rows evicted)")
+        self.core = self.store.evict(self.core)
+        self.plans.clear()
+        return self
+
+    def restore_rows_to_device(self) -> "JasperIndex":
+        """host -> device: re-attach the f32 rows as core pytree leaves
+        (classic fully-device-resident layout)."""
+        self.core = self.store.restore(self.core)
+        self.plans.clear()
+        return self
 
     # ------------------------------------------------------------------ util
     @property
@@ -312,7 +360,7 @@ class JasperIndex(SearchSurface):
         `labels`: optional per-row label ids (scalar or per-row sets) for
         filtered search — see docs/filtered_search.md."""
         with obs_span("index.build", n=int(np.asarray(data).shape[0]),
-                      sharded=False):
+                      sharded=False), rows_staged(self):
             x = self._prep_data(data)
             self._ensure_quantizer(x)
             self.core = core_build(self.core, x, params=self.params,
@@ -356,26 +404,28 @@ class JasperIndex(SearchSurface):
         """
         if np.shape(data)[0] == 0:       # empty tick from a stream: no-op
             return np.empty((0,), np.int32)
-        x = self._prep_data(data)
-        b = x.shape[0]
-        if self.size == 0:
-            # empty index (fresh, or everything was deleted): a clean build
-            # over this batch beats stitching onto a dead graph
-            self._grow_to_fit(b)
-            self._ensure_quantizer(x)
-            self.core = core_build(self.core, x, params=self.params)
-            ids = np.arange(b, dtype=np.int32)
+        with rows_staged(self):
+            x = self._prep_data(data)
+            b = x.shape[0]
+            if self.size == 0:
+                # empty index (fresh, or everything was deleted): a clean
+                # build over this batch beats stitching onto a dead graph
+                self._grow_to_fit(b)
+                self._ensure_quantizer(x)
+                self.core = core_build(self.core, x, params=self.params)
+                ids = np.arange(b, dtype=np.int32)
+                if labels is not None:
+                    self.set_labels(ids, labels)
+                self._pq_write(jnp.arange(b, dtype=jnp.int32), x)
+                return ids
+            ids = self._allocate_slots(b)
+            ids_dev = jnp.asarray(ids, jnp.int32)
+            self.core = core_insert_at(self.core, ids_dev, x,
+                                       params=self.params)
             if labels is not None:
                 self.set_labels(ids, labels)
-            self._pq_write(jnp.arange(b, dtype=jnp.int32), x)
-            return ids
-        ids = self._allocate_slots(b)
-        ids_dev = jnp.asarray(ids, jnp.int32)
-        self.core = core_insert_at(self.core, ids_dev, x, params=self.params)
-        if labels is not None:
-            self.set_labels(ids, labels)
-        self._pq_write(ids_dev, x)
-        jax.block_until_ready(self.core.adjacency)   # storage semantics
+            self._pq_write(ids_dev, x)
+            jax.block_until_ready(self.core.adjacency)  # storage semantics
         return ids
 
     def set_labels(self, ids, labels) -> None:
@@ -430,8 +480,10 @@ class JasperIndex(SearchSurface):
         their slots join the free pool, and the medoid refreshes over live
         rows. Returns {"n_freed", "n_repaired"}.
         """
-        self.core, stats = core_consolidate(self.core, params=self.params,
-                                            refine=refine)
+        with rows_staged(self):
+            self.core, stats = core_consolidate(self.core,
+                                                params=self.params,
+                                                refine=refine)
         return stats
 
     def grow(self, new_capacity: int | None = None) -> "JasperIndex":
@@ -446,10 +498,11 @@ class JasperIndex(SearchSurface):
             raise ValueError(f"cannot shrink {self.capacity} -> {new_cap}")
         if new_cap == self.capacity:
             return self
-        self.core = core_grow(self.core, new_cap)
-        if self.pq_codes is not None:
-            from repro.core.mutations import grow_rows
-            self.pq_codes = grow_rows(self.pq_codes, new_cap, 0)
+        with rows_staged(self):
+            self.core = core_grow(self.core, new_cap)
+            if self.pq_codes is not None:
+                from repro.core.mutations import grow_rows
+                self.pq_codes = grow_rows(self.pq_codes, new_cap, 0)
         return self
 
     # ------------------------------------------------------------------ search
@@ -478,6 +531,30 @@ class JasperIndex(SearchSurface):
             return jax.jit(run)
 
         fn = self.plans.get(key, build)
+        if rspec.rerank_source == "host":
+            # two-stage host-tier plan: the traversal plan above returns
+            # the FULL-width estimator frontier (core_search skips the
+            # in-graph rerank — the core has no rows operand), then the
+            # frontier's rows are fetched from the host tier and reranked
+            # by a separately-keyed compiled plan. Bit-identical to the
+            # device tier (see core/storage.py).
+            rkey = ("rerank_host", rspec, tuple(q_shape))
+            rplan = self.plans.get(
+                rkey,
+                lambda: build_host_rerank_plan(rspec,
+                                               self.plans.count_trace))
+            store = self.store
+
+            def run_host(queries, fb=None):
+                out = (fn(self.core, queries, jnp.asarray(fb, jnp.uint8))
+                       if rspec.filtered else fn(self.core, queries))
+                f_ids = out[0]
+                rows, sq = store.gather(np.asarray(f_ids))
+                ids, dists = rplan(queries, f_ids, jnp.asarray(rows),
+                                   jnp.asarray(sq))
+                return (ids, dists, out[2]) + tuple(out[3:])
+
+            return run_host
         if rspec.filtered:
             return lambda queries, fb=None: fn(
                 self.core, queries, jnp.asarray(fb, jnp.uint8))
@@ -552,7 +629,10 @@ class JasperIndex(SearchSurface):
                     ) -> tuple[Array, Array]:
         """Exact top-k by full scan over LIVE rows (ground truth for recall)."""
         q = self._prep_query(queries)
-        return core_brute_force(self.core, q, k=k)
+        with rows_staged(self):
+            out = core_brute_force(self.core, q, k=k)
+            jax.block_until_ready(out)   # computed before rows detach
+        return out
 
 
     # ----------------------------------------------------------------- memory
@@ -580,7 +660,19 @@ class JasperIndex(SearchSurface):
                 stats["rabitq_resident_bytes"] = float(resident)
                 stats["rabitq_resident_bytes_per_row"] = (
                     resident / self.capacity)
+        stats.update(tier_memory_stats(
+            self.core, self.store, capacity=self.capacity,
+            store_dims=self.store_dims))
         return stats
+
+    def storage_stats(self) -> dict:
+        """Tier residence + host-fetch counters for the `storage.*`
+        metrics namespace (obs/metrics.py `storage_stats_collector`)."""
+        ms = self.memory_stats()
+        out = {k: ms[k] for k in TIER_STAT_KEYS if k in ms}
+        out.update({f"fetch_{k}": v
+                    for k, v in self.store.fetch_stats.as_dict().items()})
+        return out
 
     # -------------------------------------------------------------- save/load
     def _meta(self) -> dict:
@@ -590,6 +682,7 @@ class JasperIndex(SearchSurface):
             "quantization": self.quantization, "bits": self.bits,
             "seed": self.seed, "construction": asdict(self.params),
             "mips_max_sqnorm": self._mips_max_sqnorm,
+            "rows_tier": self.rows_tier,
         }
 
     def save(self, path: str) -> None:
@@ -600,7 +693,11 @@ class JasperIndex(SearchSurface):
         of a ShardedJasperIndex serializes through, so shard files and
         single-device checkpoints are mutually readable.
         """
-        arrays = core_to_arrays(self.core)
+        with rows_staged(self):
+            # host-tier rows stage back in so the payload keeps the ONE
+            # cross-driver format; the meta records the tier layout and
+            # load() re-evicts
+            arrays = core_to_arrays(self.core)
         if self.pq_codes is not None:
             arrays |= {
                 "pq_codes": np.asarray(self.pq_codes),
@@ -629,6 +726,8 @@ class JasperIndex(SearchSurface):
             idx.pq_params = PQParams(
                 codebooks=jnp.asarray(data["pq_codebooks"]))
             idx.pq_codes = jnp.asarray(data["pq_codes"])
+        if meta.get("rows_tier", "device") == "host":
+            idx.evict_rows_to_host()    # restore the checkpoint's tier
         return idx
 
 

@@ -306,6 +306,12 @@ def core_search(core: IndexCore, queries: Array, *, spec,
                 labels=labels, filter_bytes=fb,
                 filter_exclude=filter_exclude,
                 telemetry=tel_on)
+            if spec.rerank_source == "host":
+                # host-tier rerank: core.vectors may be evicted (None),
+                # so hand the driver the FULL-width estimator frontier —
+                # the gather + exact rerank run outside this graph
+                # (core/storage.py), bit-identical to the branch below
+                return _out(res.frontier_ids, res.frontier_dists, res)
             if spec.rerank:
                 exact_d = rerank_frontier(
                     core.vectors, core.vec_sqnorm, queries,
@@ -338,6 +344,10 @@ def core_search(core: IndexCore, queries: Array, *, spec,
             tombstone_bits=tomb, traverse_deleted=spec.traverse_deleted,
             labels=labels, filter_bytes=fb, filter_exclude=filter_exclude,
             beam_schedule=spec.beam_schedule, telemetry=tel_on)
+        if spec.rerank_source == "host":
+            # full-width estimator frontier for the driver-side host
+            # rerank (see the fused branch above)
+            return _out(res.frontier_ids, res.frontier_dists, res)
         if spec.rerank:
             exact_d = rerank_frontier(
                 core.vectors, core.vec_sqnorm, queries, res.frontier_ids,

@@ -60,6 +60,17 @@ FUSION_MODES = ("none", "hop", "megakernel")
 
 TELEMETRY_MODES = ("off", "on")
 
+# Where the exact rerank reads its f32 rows (the tiered-storage knob —
+# see core/storage.py and docs/tiered_storage.md): "device" reranks from
+# device-resident core.vectors (the classic path), "host" gathers only
+# the final frontier's rows from the host tier (traversal runs entirely
+# on packed codes; bit-identical to "device"), "none" skips the rerank
+# and serves estimator distances (results flagged
+# `SearchResult.estimated`). Resolution collapses quantized rerank=False
+# to "none", so (rerank, rerank_source) is always one of
+# (True, "device") | (True, "host") | (False, "none") after resolve().
+RERANK_SOURCES = ("device", "host", "none")
+
 # Label-filter walk policy, mirroring `traverse_deleted`: "traverse" walks
 # through non-matching rows (connectivity) but never returns them;
 # "exclude" additionally masks them inside the scoring epilogues.
@@ -122,6 +133,28 @@ def check_quantized_backend(index, *, need_codes: bool = True) -> None:
             "search session")
 
 
+def check_rows_tier(index, rerank_source: str) -> None:
+    """THE rows-tier capability check: a resolved `rerank_source` must
+    match where the index's f32 rows actually live (see core/storage.py).
+    `resolve(index)` and the serving layer both call this one function,
+    so tier mismatches fail at spec resolution / service construction —
+    never mid-trace."""
+    tier = getattr(index, "rows_tier", "device")
+    if rerank_source == "host" and tier != "host":
+        raise ValueError(
+            "rerank_source='host' requires the index's f32 rows to be "
+            "evicted to the host tier (index.rows_tier == 'host'; call "
+            "evict_rows_to_host()) — this index's rows are "
+            "device-resident, so use rerank_source='device' "
+            "(bit-identical) or evict first")
+    if rerank_source == "device" and tier != "device":
+        raise ValueError(
+            "rerank_source='device' needs device-resident f32 rows, but "
+            "this index's rows are evicted to the host tier — use "
+            "rerank_source='host' (bit-identical exact rerank) or "
+            "'none' (estimator-only), or call restore_rows_to_device()")
+
+
 def _as_int(name: str, value, *, floor: int) -> int:
     """Coerce an integral spec field (python or numpy int — the legacy
     kwargs surface routinely receives numpy scalars) to a plain int;
@@ -151,6 +184,14 @@ class SearchSpec:
     quantized:    beam-search on RaBitQ estimated distances over the packed
                   codes instead of exact distances.
     rerank:       (quantized only) re-score the final frontier exactly.
+    rerank_source: (quantized only) where the exact rerank reads its f32
+                  rows — "device" (core.vectors, the classic path),
+                  "host" (rows evicted to the host tier; only the final
+                  frontier's rows are fetched — bit-identical to
+                  "device"), or "none" (code-only serving: estimator
+                  distances, `SearchResult.estimated=True`). Quantized
+                  rerank=False normalizes to "none"; part of the
+                  resolved spec, so the plan cache keys it.
     rerank_tile:  query-tile size for the exact rerank gather buffer.
     use_kernels:  route scoring through the fused Pallas kernels.
     merge:        per-hop frontier merge strategy ("topk"|"sort"|"kernel").
@@ -191,6 +232,7 @@ class SearchSpec:
     expand: int = 1
     quantized: bool = False
     rerank: bool = True
+    rerank_source: str = "device"
     rerank_tile: int = 512
     use_kernels: bool = False
     merge: str = "topk"
@@ -287,12 +329,42 @@ class SearchSpec:
         mi = ((2 * bw + 8) // expand + 4 if self.max_iters is None
               else _as_int("max_iters", self.max_iters, floor=1))
         rerank_tile = _as_int("rerank_tile", self.rerank_tile, floor=1)
-        if index is not None and self.quantized:
-            # reject a codeless core up front, not mid-trace
-            check_quantized_backend(index)
+        source = self.rerank_source
+        if source not in RERANK_SOURCES:
+            raise ValueError(
+                f"rerank_source must be one of {RERANK_SOURCES}, "
+                f"got {source!r}")
+        if not self.quantized:
+            if source != "device":
+                raise ValueError(
+                    f"rerank_source={source!r} requires quantized=True: "
+                    "the exact path scores device-resident rows directly "
+                    "(there is no estimator to serve and no separate "
+                    "rerank stage to redirect)")
+            rerank = True
+        else:
+            rerank = bool(self.rerank)
+            if source == "none":
+                # code-only serving: "none" IS the rerank-off form
+                rerank = False
+            elif not rerank:
+                if source == "host":
+                    raise ValueError(
+                        "rerank_source='host' with rerank=False is "
+                        "contradictory: the host tier exists to feed the "
+                        "exact rerank — use rerank_source='none' for "
+                        "code-only serving")
+                # quantized rerank=False with the default device source
+                # normalizes to the code-only form, so pre-tiering specs
+                # keep sharing one plan-cache entry with their twin
+                source = "none"
+        if index is not None:
+            if self.quantized:
+                # reject a codeless core up front, not mid-trace
+                check_quantized_backend(index)
+            check_rows_tier(index, source)
         # normalize fields the exact path never reads, so exact-path specs
         # that differ only in rerank knobs share one plan-cache entry
-        rerank = bool(self.rerank) if self.quantized else True
         if not (self.quantized and rerank):
             rerank_tile = 512
         merge = self.merge
@@ -310,6 +382,7 @@ class SearchSpec:
         return ResolvedSearchSpec(
             k=k, beam_width=bw, max_iters=mi, expand=expand,
             quantized=bool(self.quantized), rerank=rerank,
+            rerank_source=source,
             rerank_tile=rerank_tile, use_kernels=bool(self.use_kernels),
             merge=merge, traverse_deleted=bool(self.traverse_deleted),
             fusion=self.fusion, beam_schedule=schedule,
@@ -382,6 +455,7 @@ class ResolvedSearchSpec:
     expand: int
     quantized: bool
     rerank: bool
+    rerank_source: str
     rerank_tile: int
     use_kernels: bool
     merge: str
@@ -417,6 +491,10 @@ class SearchResult(NamedTuple):
     generation: int  # index generation this batch was served at
     telemetry: Any = None  # SearchTelemetry iff spec.telemetry == "on"
                            # (summed over shards when sharded); else None
+    estimated: bool = False  # True iff dists are RaBitQ ESTIMATOR values
+                             # (rerank_source="none" code-only serving) —
+                             # code-only lanes report honestly, never
+                             # passing estimates off as exact distances
 
 
 # ---------------------------------------------------------------------------
@@ -561,7 +639,8 @@ class Searcher:
         ids, dists, n_hops = out[:3]
         tel = out[3] if len(out) > 3 else None
         return SearchResult(ids=ids, dists=dists, n_hops=n_hops,
-                            generation=generation, telemetry=tel)
+                            generation=generation, telemetry=tel,
+                            estimated=self.resolved.rerank_source == "none")
 
     def search(self, queries) -> SearchResult:
         """Synchronous search at the current snapshot generation."""
@@ -586,7 +665,7 @@ class Searcher:
                 out.append(SearchResult(
                     ids=np.asarray(r.ids), dists=np.asarray(r.dists),
                     n_hops=np.asarray(r.n_hops), generation=r.generation,
-                    telemetry=tel))
+                    telemetry=tel, estimated=r.estimated))
         return out
 
     @property

@@ -26,9 +26,9 @@ from typing import Any, Callable, Iterable, Mapping
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "SEARCH_LATENCY_BUCKETS_US", "HOPS_BUCKETS", "BEAM_OCCUPANCY_BUCKETS",
-    "BATCH_OCCUPANCY_BUCKETS",
+    "BATCH_OCCUPANCY_BUCKETS", "FETCH_LATENCY_BUCKETS_US",
     "service_stats_collector", "plan_cache_collector", "shard_gauge_collector",
-    "scheduler_stats_collector",
+    "scheduler_stats_collector", "storage_stats_collector",
 ]
 
 # Fixed bucket sets for the three paper-relevant distributions. Upper
@@ -41,6 +41,12 @@ BEAM_OCCUPANCY_BUCKETS = (4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 # coalesced-batch fill fraction (valid rows / padded bucket size) per
 # dispatched batch — 1.0 means no padding waste at all
 BATCH_OCCUPANCY_BUCKETS = (0.125, 0.25, 0.5, 0.75, 0.9, 1.0)
+# host-tier frontier gathers (core/storage.py VectorStore.gather) — µs
+# per fetch; a gather moves Q*L rows over PCIe-equivalent paths, so the
+# tail sits orders of magnitude above per-row arithmetic
+FETCH_LATENCY_BUCKETS_US = (
+    50.0, 100.0, 250.0, 500.0, 1_000.0, 2_500.0, 5_000.0, 10_000.0,
+    25_000.0, 100_000.0)
 
 
 def _plain(v: Any):
@@ -254,6 +260,19 @@ def scheduler_stats_collector(get_scheduler) -> Callable[[], Mapping]:
     def collect() -> Mapping:
         sched = get_scheduler() if callable(get_scheduler) else get_scheduler
         return sched.stats_view() if sched is not None else {}
+    return collect
+
+
+def storage_stats_collector(index) -> Callable[[], Mapping]:
+    """`storage.*` from an index driver's `storage_stats()`: per-tier
+    resident bytes (device codes vs device rows vs host rows), effective
+    device-memory compression ratio, and host-fetch counters
+    (fetch_n_bytes / fetch_total_s and friends). Index drivers without a
+    tiered store (pre-tiering or foreign backends) report nothing —
+    no storage.* keys, not fake zeros."""
+    def collect() -> Mapping:
+        fn = getattr(index, "storage_stats", None)
+        return fn() if fn is not None else {}
     return collect
 
 

@@ -59,6 +59,7 @@ from repro.core.search_spec import (
     SearchResult,
     SearchSpec,
     check_quantized_backend,
+    check_rows_tier,
 )
 from repro.obs.tracing import span as obs_span
 
@@ -203,9 +204,13 @@ class AnnsService:
         # codes-presence half of the check runs at session creation — a
         # quantized service may legitimately be constructed BEFORE the
         # first build/insert trains the quantizer
-        self.spec.resolve()
+        resolved = self.spec.resolve()
         if self.spec.quantized:
             check_quantized_backend(index, need_codes=False)
+        # tier mismatch fails HERE, at service construction, not at the
+        # first tick's trace: a host-source service needs the rows
+        # evicted, a device-source one needs them resident
+        check_rows_tier(index, resolved.rerank_source)
         self.consolidate_threshold = consolidate_threshold
         self.rebalance_threshold = rebalance_threshold
         self.verify = verify
@@ -274,6 +279,15 @@ class AnnsService:
                     f"{n}.{k}": v
                     for n, t in self._tenants.items()
                     for k, v in t.as_dict().items()})
+            # tiered-storage plane: per-tier resident bytes + host-fetch
+            # counters (no tiered store on the index -> no storage.* keys)
+            reg.register_collector(
+                "storage", obs_metrics.storage_stats_collector(self.index))
+            store = getattr(self.index, "store", None)
+            if store is not None:
+                store.fetch_hist = reg.histogram(
+                    "storage.fetch_latency_us",
+                    obs_metrics.FETCH_LATENCY_BUCKETS_US)
             self._lat_hist = reg.histogram(
                 "search.latency_us", obs_metrics.SEARCH_LATENCY_BUCKETS_US)
             self._hops_hist = reg.histogram(
@@ -349,7 +363,7 @@ class AnnsService:
                 self._occ_hist.observe_many(occ[occ > 0].tolist())
         return SearchTicket(ids=ids, dists=np.asarray(res.dists),
                             n_hops=n_hops, generation=res.generation,
-                            telemetry=tel)
+                            telemetry=tel, estimated=res.estimated)
 
     def search(self, queries, k: int | None = None, **kw) -> SearchTicket:
         """Serve one search batch at the current snapshot generation.

@@ -121,7 +121,7 @@ class QueryHandle:
 
     __slots__ = ("query", "lane", "slo_budget_s", "status",
                  "t_submit", "t_dispatch", "t_done",
-                 "ids", "dists", "n_hops", "generation")
+                 "ids", "dists", "n_hops", "generation", "estimated")
 
     def __init__(self, query, lane: str, slo_budget_s: float,
                  t_submit: float, status: str = QUEUED):
@@ -134,6 +134,7 @@ class QueryHandle:
         self.t_done: float | None = None
         self.ids = self.dists = self.n_hops = None
         self.generation: int | None = None
+        self.estimated: bool = False
 
     @property
     def latency_s(self) -> float | None:
@@ -154,7 +155,8 @@ class QueryHandle:
             return None
         return SearchResult(ids=self.ids[None], dists=self.dists[None],
                             n_hops=np.asarray([self.n_hops]),
-                            generation=self.generation)
+                            generation=self.generation,
+                            estimated=self.estimated)
 
     def __repr__(self) -> str:
         return (f"QueryHandle(lane={self.lane!r}, status={self.status!r}, "
@@ -213,7 +215,8 @@ class _AsyncBatch:
         return SearchResult(ids=np.asarray(r.ids),
                             dists=np.asarray(r.dists),
                             n_hops=np.asarray(r.n_hops),
-                            generation=r.generation)
+                            generation=r.generation,
+                            estimated=r.estimated)
 
 
 class _Lane:
@@ -463,6 +466,9 @@ class StandingQueryScheduler:
                 h.dists = res.dists[i]
                 h.n_hops = res.n_hops[i]
                 h.generation = res.generation
+                # code-only lanes surface estimator distances honestly:
+                # the flag rides the coalesced batch down to every ticket
+                h.estimated = getattr(res, "estimated", False)
                 h.status = DONE
                 h.t_done = now
                 self.stats.completed += 1

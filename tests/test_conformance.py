@@ -152,6 +152,24 @@ def single_results():
                 np.asarray(res_on.ids), np.asarray(res_on.dists),
                 tuple(np.asarray(t) for t in res_on.telemetry),
                 np.asarray(res_on.n_hops))
+        # tiered-storage lanes (ISSUE 10): rows evicted to host — the
+        # pluggable rerank source must reproduce the device tier
+        # BIT-for-bit on every quantized path
+        from repro.core.search_spec import SearchSpec
+        idx.evict_rows_to_host()
+        for kernels in (False, True):
+            res = idx.searcher(SearchSpec(
+                k=K, beam_width=BEAM, quantized=True,
+                use_kernels=kernels,
+                rerank_source="host")).search(queries)
+            out[("host", kernels, tombstones)] = (
+                np.asarray(res.ids), np.asarray(res.dists))
+        for lane in ("hop", "megakernel"):
+            spec = _lane_spec(lane, True).with_(rerank_source="host")
+            res = idx.searcher(spec).search(queries)
+            out[("host", lane, tombstones)] = (
+                np.asarray(res.ids), np.asarray(res.dists))
+        out[("host-mem", tombstones)] = idx.memory_stats()
     return out
 
 
@@ -222,6 +240,32 @@ def test_single_shard_telemetry_lane(single_results, quantized, tombstones):
     for r in range(Q):
         assert (occ[r, :hops[r]] > 0).all()
         assert (occ[r, hops[r]:] == 0).all()
+
+
+# host-tier conformance lanes (ISSUE 10): rabitq only — the host rerank
+# source is quantized-serving-only by construction
+HOST_TIER_LANES = [
+    pytest.param(lane, tombstones,
+                 id=f"rabitq-{name}-{'tomb' if tombstones else 'clean'}")
+    for lane, name in ((False, "jnp"), (True, "kernel"),
+                       ("hop", "hop"), ("megakernel", "megakernel"))
+    for tombstones in (False, True)
+]
+
+
+@pytest.mark.parametrize("lane,tombstones", HOST_TIER_LANES)
+def test_single_shard_host_tier_lane(single_results, lane, tombstones):
+    """Host-resident rows, device-resident packed codes: ids AND dists
+    bit-identical to the device tier in the same config — not a
+    tolerance, the tiering contract."""
+    ids_h, dists_h = single_results[("host", lane, tombstones)]
+    ids_d, dists_d = single_results[(True, lane, tombstones)]
+    assert np.array_equal(ids_h, ids_d)
+    assert np.array_equal(dists_h, dists_d)
+    mem = single_results[("host-mem", tombstones)]
+    assert mem["rows_tier"] == "host"
+    assert mem["device_rows_bytes"] == 0.0
+    assert mem["device_compression_ratio"] > 1.0
 
 
 # -------------------------------------------------------------- 4 shards
@@ -333,6 +377,31 @@ for tombstones in (False, True):
                 n_returned=int(ret.size),
                 label_leaks=int((flat % 2 == 0).sum()),
                 dead_leaks=int(np.isin(ret, dead_set).sum()))
+    # tiered-storage lanes (ISSUE 10): evict the rows to host and demand
+    # BIT-identity with the device cells recorded above, per path
+    idx.evict_rows_to_host()
+    mem = idx.memory_stats()
+    identical = {{}}
+    for kernels in (False, True):
+        res = idx.searcher(SearchSpec(
+            k=K, beam_width=BEAM, quantized=True, use_kernels=kernels,
+            rerank_source="host")).search(queries)
+        ref = cells[f"True-{{kernels}}"]
+        identical[f"True-{{kernels}}"] = bool(
+            np.asarray(res.ids).tolist() == ref["ids"]
+            and np.asarray(res.dists).tolist() == ref["dists"])
+    for lane in ("hop", "megakernel"):
+        spec = lane_spec(lane, True, K=K, BEAM=BEAM).with_(
+            rerank_source="host")
+        res = idx.searcher(spec).search(queries)
+        ref = cells[f"True-{{lane}}"]
+        identical[f"True-{{lane}}"] = bool(
+            np.asarray(res.ids).tolist() == ref["ids"]
+            and np.asarray(res.dists).tolist() == ref["dists"])
+    cells["host"] = dict(
+        identical=identical, rows_tier=mem["rows_tier"],
+        device_rows_bytes=mem["device_rows_bytes"],
+        compression=mem["device_compression_ratio"])
     report[str(tombstones)] = cells
 print("CONFORMANCE_JSON=" + json.dumps(report))
 """
@@ -432,6 +501,21 @@ def test_four_shard_telemetry_lane(sharded_results, tombstones):
 FILTER_COMBOS = [(q, p, "exclude") for q in (False, True)
                  for p in ("jnp", "kernel", "hop", "megakernel")]
 FILTER_COMBOS.append((True, "megakernel", "traverse"))
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+@pytest.mark.parametrize("lane,tombstones", HOST_TIER_LANES)
+def test_four_shard_host_tier_lane(sharded_results, lane, tombstones):
+    """The sharded host tier: per-shard traversal over packed codes,
+    one stacked host gather, sharded exact rerank + merge — and still
+    bit-identical to the fully-device-resident path, with the device
+    rows genuinely gone (memory_stats)."""
+    cell = sharded_results[str(tombstones)]["host"]
+    assert cell["rows_tier"] == "host"
+    assert cell["device_rows_bytes"] == 0.0
+    assert cell["compression"] > 1.0
+    assert cell["identical"][f"True-{lane}"] is True
 
 
 @pytest.mark.multidevice

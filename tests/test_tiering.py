@@ -1,0 +1,514 @@
+"""Tiered vector storage (core/storage.py): device-resident packed codes,
+host-resident f32 rows, pluggable rerank source.
+
+The correctness anchor is BIT-IDENTITY: with the rows evicted to host,
+`rerank_source="host"` must reproduce the device tier's ids and
+distances bit-for-bit on every search path (the traversal runs on the
+same packed codes either way, and the host rerank runs the same
+`rerank_frontier` arithmetic on the same gathered rows, followed by the
+same stable sort). Everything else — resolve()-time validation, plan
+cache keying, churn write-through, checkpoint tier round-trip, the
+honest `estimated` flag on code-only serving — hangs off that anchor.
+
+The 4-shard half runs in one subprocess (the XLA fake-device flag must
+precede jax init), mirroring tests/test_distributed.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SEED = 77
+N, D, Q, K, BEAM = 512, 16, 16, 10, 32
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _params():
+    from repro.core.construction import ConstructionParams
+    return ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                              max_iters=24, rev_cap=16, prune_chunk=256)
+
+
+def _dataset():
+    rng = np.random.default_rng(SEED)
+    return (rng.normal(size=(N, D)).astype(np.float32),
+            rng.normal(size=(Q, D)).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def built():
+    """One rabitq index + queries, shared read-only by the spec tests."""
+    from repro.core.index import JasperIndex
+    data, queries = _dataset()
+    idx = JasperIndex(D, capacity=2 * N, construction=_params(),
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data)
+    idx.delete(np.arange(0, N, 11))
+    return idx, queries
+
+
+# ------------------------------------------------------------- resolution
+def test_rerank_source_resolution_rules():
+    from repro.core.search_spec import SearchSpec
+    # default: exact rerank on device rows
+    r = SearchSpec(k=K, quantized=True).resolve()
+    assert (r.rerank, r.rerank_source) == (True, "device")
+    # code-only: "none" disables the rerank
+    r = SearchSpec(k=K, quantized=True, rerank_source="none").resolve()
+    assert (r.rerank, r.rerank_source) == (False, "none")
+    # back-compat: rerank=False with the default source NORMALIZES to
+    # "none" — old and new spellings hit the same plan-cache entry
+    a = SearchSpec(k=K, quantized=True, rerank=False).resolve()
+    b = SearchSpec(k=K, quantized=True, rerank=True,
+                   rerank_source="none").resolve()
+    assert a == b and a.rerank_source == "none"
+    # host source keeps the exact rerank, just moves its operand
+    r = SearchSpec(k=K, quantized=True, rerank_source="host").resolve()
+    assert (r.rerank, r.rerank_source) == (True, "host")
+    # contradictions fail fast, statically
+    with pytest.raises(ValueError, match="contradict"):
+        SearchSpec(k=K, quantized=True, rerank=False,
+                   rerank_source="host").resolve()
+    with pytest.raises(ValueError, match="exact"):
+        SearchSpec(k=K, quantized=False, rerank_source="host").resolve()
+    with pytest.raises(ValueError, match="exact"):
+        SearchSpec(k=K, quantized=False, rerank_source="none").resolve()
+    with pytest.raises(ValueError, match="rerank_source"):
+        SearchSpec(k=K, quantized=True, rerank_source="bogus").resolve()
+    # every (rerank, source) pair resolve() can emit is one of the three
+    # legal states
+    for spec in (SearchSpec(k=K), SearchSpec(k=K, quantized=True),
+                 SearchSpec(k=K, quantized=True, rerank=False),
+                 SearchSpec(k=K, quantized=True, rerank_source="none")):
+        r = spec.resolve()
+        assert (r.rerank, r.rerank_source) in (
+            (True, "device"), (True, "host"), (False, "none"))
+
+
+def test_resolve_checks_index_tier(built):
+    from repro.core.search_spec import SearchSpec
+    idx, _ = built
+    assert idx.rows_tier == "device"
+    with pytest.raises(ValueError, match="evicted"):
+        SearchSpec(k=K, quantized=True, rerank_source="host").resolve(idx)
+    # and the mirror image on a rows-evicted core
+    from repro.core.index import JasperIndex
+    data, _ = _dataset()
+    ev = JasperIndex(D, capacity=N, construction=_params(),
+                     quantization="rabitq", bits=4, seed=SEED,
+                     rows_tier="host")
+    ev.build(data)
+    assert ev.rows_tier == "host"
+    with pytest.raises(ValueError, match="device-resident"):
+        SearchSpec(k=K, quantized=True).resolve(ev)
+    # code-only serving never touches the rows: legal on either tier
+    SearchSpec(k=K, quantized=True, rerank_source="none").resolve(ev)
+    SearchSpec(k=K, quantized=True, rerank_source="none").resolve(idx)
+
+
+def test_evict_requires_quantizer():
+    from repro.core.index import JasperIndex
+    data, _ = _dataset()
+    idx = JasperIndex(D, capacity=N, construction=_params(), seed=SEED)
+    idx.build(data)
+    with pytest.raises(ValueError, match="rabitq"):
+        idx.evict_rows_to_host()
+    with pytest.raises(ValueError, match="rabitq"):
+        JasperIndex(D, capacity=N, rows_tier="host")
+
+
+def test_service_construction_fails_fast(built):
+    from repro.core.index import JasperIndex
+    from repro.core.search_spec import SearchSpec
+    from repro.serving.anns_service import AnnsService
+    idx, _ = built
+    with pytest.raises(ValueError, match="evicted"):
+        AnnsService(idx, spec=SearchSpec(k=K, quantized=True,
+                                         rerank_source="host"))
+    data, _ = _dataset()
+    ev = JasperIndex(D, capacity=N, construction=_params(),
+                     quantization="rabitq", bits=4, seed=SEED)
+    ev.build(data)
+    ev.evict_rows_to_host()
+    with pytest.raises(ValueError, match="device-resident"):
+        AnnsService(ev, spec=SearchSpec(k=K, quantized=True))
+
+
+# ------------------------------------------------------------ bit-identity
+HOST_LANES = [
+    pytest.param({}, id="jnp"),
+    pytest.param({"use_kernels": True}, id="kernel"),
+    pytest.param({"fusion": "hop"}, id="hop"),
+    pytest.param({"fusion": "megakernel"}, id="megakernel"),
+    pytest.param({"telemetry": "on"}, id="telemetry"),
+    pytest.param({"filter": (1,)}, id="filtered"),
+]
+
+
+@pytest.fixture(scope="module")
+def tier_pair():
+    """Device-tier results for every lane, then the SAME index evicted —
+    {lane_key: device SearchResult} + the evicted index."""
+    from repro.core.index import JasperIndex
+    from repro.core.search_spec import SearchSpec
+    data, queries = _dataset()
+    idx = JasperIndex(D, capacity=2 * N, construction=_params(),
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data, labels=(np.arange(N) % 2).astype(np.int32))
+    idx.delete(np.arange(0, N, 11))
+    device = {}
+    for p in HOST_LANES:
+        kw = p.values[0]
+        spec = SearchSpec(k=K, beam_width=BEAM, quantized=True, **kw)
+        device[p.id] = idx.searcher(spec).search(queries)
+    idx.evict_rows_to_host()
+    return idx, queries, device
+
+
+@pytest.mark.parametrize("kw", HOST_LANES)
+def test_host_tier_bit_identical(tier_pair, kw, request):
+    from repro.core.search_spec import SearchSpec
+    idx, queries, device = tier_pair
+    lane = request.node.callspec.id
+    spec = SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                      rerank_source="host", **kw)
+    host = idx.searcher(spec).search(queries)
+    dev = device[lane]
+    assert np.array_equal(np.asarray(dev.ids), np.asarray(host.ids))
+    assert np.array_equal(np.asarray(dev.dists), np.asarray(host.dists))
+    assert np.array_equal(np.asarray(dev.n_hops), np.asarray(host.n_hops))
+    if kw.get("telemetry") == "on":
+        for a, b in zip(dev.telemetry, host.telemetry):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert host.estimated is False
+
+
+def test_memory_stats_track_tiers(tier_pair):
+    idx, _, _ = tier_pair
+    ms = idx.memory_stats()
+    assert ms["rows_tier"] == "host"
+    assert ms["device_rows_bytes"] == 0.0
+    assert ms["host_rows_bytes"] > 0
+    assert ms["device_codes_bytes"] > 0
+    assert ms["device_compression_ratio"] > 1.0
+    ss = idx.storage_stats()
+    assert ss["fetch_n_fetches"] >= 1
+    assert ss["fetch_n_bytes"] > 0
+    # the effective ratio is (full rows + codes) / codes-only
+    rows_full = idx.capacity * (idx.store_dims + 1) * 4
+    expect = (rows_full + ms["device_codes_bytes"]) / ms["device_codes_bytes"]
+    assert ms["device_compression_ratio"] == pytest.approx(expect)
+
+
+def test_code_only_lane_reports_estimated(tier_pair):
+    from repro.core.search_spec import SearchSpec
+    idx, queries, _ = tier_pair
+    res = idx.searcher(SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                                  rerank_source="none")).search(queries)
+    assert res.estimated is True
+    host = idx.searcher(SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                                   rerank_source="host")).search(queries)
+    assert host.estimated is False
+    # estimator distances are NOT the exact ones — the flag is load-bearing
+    assert not np.array_equal(np.asarray(res.dists), np.asarray(host.dists))
+
+
+def test_plan_cache_keys_by_rerank_source(tier_pair):
+    """Lanes differing only in rerank_source must not share executables,
+    and the two spellings of code-only must share one."""
+    from repro.core.search_spec import SearchSpec
+    idx, queries, _ = tier_pair
+    base = dict(k=K, beam_width=BEAM, quantized=True)
+    r_host = SearchSpec(**base, rerank_source="host").resolve()
+    r_none = SearchSpec(**base, rerank_source="none").resolve()
+    r_dev = SearchSpec(**base).resolve()
+    assert len({r_host, r_none, r_dev}) == 3
+    # live check on the evicted index: host lane = traversal plan +
+    # separately-keyed rerank plan; the none lane adds exactly one more
+    idx.plans.clear()
+    idx.searcher(SearchSpec(**base, rerank_source="host")).search(queries)
+    assert len(idx.plans) == 2
+    idx.searcher(SearchSpec(**base, rerank_source="none")).search(queries)
+    assert len(idx.plans) == 3
+    # same spelling again: pure cache hits, no new entries
+    idx.searcher(SearchSpec(**base, rerank_source="none")).search(queries)
+    idx.searcher(SearchSpec(**base, rerank=False)).search(queries)
+    assert len(idx.plans) == 3
+
+
+def test_scheduler_zero_steady_state_retraces_both_tiers():
+    from repro.core.index import JasperIndex
+    from repro.core.search_spec import SearchSpec
+    from repro.serving.anns_service import AnnsService
+    data, queries = _dataset()
+    idx = JasperIndex(D, capacity=N, construction=_params(),
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data)
+
+    def serve_twice(svc):
+        sched = svc.scheduler()
+        for q in queries:
+            sched.submit(q)
+        sched.drain()
+        warm = idx.plans.stats.traces
+        for q in queries:
+            sched.submit(q)
+        sched.drain()
+        return warm, idx.plans.stats.traces
+
+    warm, steady = serve_twice(AnnsService(
+        idx, spec=SearchSpec(k=K, beam_width=BEAM, quantized=True)))
+    assert steady == warm, "device tier retraced in steady state"
+    idx.evict_rows_to_host()
+    warm, steady = serve_twice(AnnsService(
+        idx, spec=SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                             rerank_source="host")))
+    assert steady == warm, "host tier retraced in steady state"
+
+
+# ------------------------------------------------------------------ churn
+def test_churn_keeps_tiers_in_sync():
+    """insert/delete/consolidate/grow with rows on the host: device codes
+    and host rows must stay consistent — asserted by host-vs-device
+    bit-identity AFTER the churn (the device twin is the same index with
+    its rows restored)."""
+    from repro.core.index import JasperIndex
+    from repro.core.search_spec import SearchSpec
+    rng = np.random.default_rng(SEED + 1)
+    data, queries = _dataset()
+    idx = JasperIndex(D, capacity=N, construction=_params(),
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data)
+    idx.evict_rows_to_host()
+    cap0 = idx.capacity
+    ids = idx.insert(rng.normal(size=(64, D)).astype(np.float32))
+    idx.delete(ids[:16])
+    idx.delete(np.arange(0, N, 7))
+    idx.consolidate()
+    idx.insert(rng.normal(size=(cap0, D)).astype(np.float32))  # forces grow
+    assert idx.capacity > cap0
+    assert idx.rows_tier == "host"
+    host_spec = SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                           rerank_source="host")
+    host = idx.searcher(host_spec).search(queries)
+    idx.restore_rows_to_device()
+    dev = idx.searcher(SearchSpec(k=K, beam_width=BEAM,
+                                  quantized=True)).search(queries)
+    assert np.array_equal(np.asarray(dev.ids), np.asarray(host.ids))
+    assert np.array_equal(np.asarray(dev.dists), np.asarray(host.dists))
+    # and the host store grew with the capacity
+    idx.evict_rows_to_host()
+    assert idx.store.host_bytes == idx.capacity * (idx.store_dims + 1) * 4
+
+
+def test_checkpoint_round_trips_tier(tmp_path):
+    from repro.core.index import JasperIndex
+    from repro.core.search_spec import SearchSpec
+    data, queries = _dataset()
+    idx = JasperIndex(D, capacity=N, construction=_params(),
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data)
+    idx.evict_rows_to_host()
+    path = str(tmp_path / "tiered.npz")
+    idx.save(path)
+    assert idx.rows_tier == "host"           # saving does not flip tiers
+    idx2 = JasperIndex.load(path)
+    assert idx2.rows_tier == "host"
+    ms = idx2.memory_stats()
+    assert ms["device_rows_bytes"] == 0.0 and ms["host_rows_bytes"] > 0
+    # the tier invariant holds on the restored core: host == device
+    # bit-for-bit (cross-checkpoint dists may wobble a ULP because load
+    # recomputes vec_sqnorm — both tiers see the same recomputed values)
+    host = idx2.searcher(SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                                    rerank_source="host")).search(queries)
+    idx2.restore_rows_to_device()
+    dev = idx2.searcher(SearchSpec(k=K, beam_width=BEAM,
+                                   quantized=True)).search(queries)
+    assert np.array_equal(np.asarray(dev.ids), np.asarray(host.ids))
+    assert np.array_equal(np.asarray(dev.dists), np.asarray(host.dists))
+
+
+def test_brute_force_works_rows_evicted(built):
+    """Ground-truth scans stage the rows in transparently (and put them
+    back) — recall measurement works on a host-tier index."""
+    from repro.core.index import JasperIndex
+    data, queries = _dataset()
+    idx = JasperIndex(D, capacity=N, construction=_params(),
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data)
+    gt_dev, _ = idx.brute_force(queries, K)
+    idx.evict_rows_to_host()
+    gt_host, _ = idx.brute_force(queries, K)
+    assert idx.rows_tier == "host"
+    assert np.array_equal(np.asarray(gt_dev), np.asarray(gt_host))
+
+
+# ------------------------------------------------------------ vector store
+def test_vector_store_gather():
+    from repro.core.storage import VectorStore, strip_rows
+    from repro.core.index_core import init_core
+    import jax.numpy as jnp
+    from dataclasses import replace
+    rng = np.random.default_rng(3)
+    rows = rng.normal(size=(32, D)).astype(np.float32)
+    core = init_core(32, D, 8)
+    core = replace(core, vectors=jnp.asarray(rows),
+                   vec_sqnorm=jnp.sum(jnp.asarray(rows) ** 2, axis=-1))
+    store = VectorStore()
+    stripped = store.evict(core)
+    assert stripped.vectors is None and stripped.vec_sqnorm is None
+    got, sq = store.gather(np.array([[3, -1], [0, 31]]))
+    assert got.shape == (4, D) and sq.shape == (4,)
+    np.testing.assert_array_equal(got[0], rows[3])
+    np.testing.assert_array_equal(got[1], 0.0)      # -1 -> zero row
+    np.testing.assert_array_equal(got[3], rows[31])
+    st = store.fetch_stats
+    assert st.n_fetches == 1 and st.n_rows == 3     # -1 not counted
+    assert st.n_bytes == 3 * (D + 1) * 4
+    # attach puts the same bits back
+    back = store.attach(stripped)
+    np.testing.assert_array_equal(np.asarray(back.vectors), rows)
+    assert strip_rows(back).vectors is None
+
+
+def test_rows_staged_is_reentrant():
+    from repro.core.index import JasperIndex
+    from repro.core.storage import rows_staged, rows_resident
+    data, _ = _dataset()
+    idx = JasperIndex(D, capacity=N, construction=_params(),
+                      quantization="rabitq", bits=4, seed=SEED)
+    idx.build(data)
+    idx.evict_rows_to_host()
+    assert not rows_resident(idx.core)
+    with rows_staged(idx):
+        assert rows_resident(idx.core)
+        with rows_staged(idx):                      # nested: no-op
+            assert rows_resident(idx.core)
+        assert rows_resident(idx.core)              # inner exit kept rows
+    assert not rows_resident(idx.core)
+    assert idx.rows_tier == "host"
+
+
+# --------------------------------------------------------------- sharded
+_SHARDED_TIER_SCRIPT = f"""
+import json, numpy as np, jax
+from repro.launch.mesh import make_mesh
+from repro.core.construction import ConstructionParams
+from repro.core.distributed import ShardedJasperIndex
+from repro.core.search_spec import SearchSpec
+
+SEED, N, D, Q, K, BEAM = {SEED}, {N}, {D}, {Q}, {K}, {BEAM}
+rng = np.random.default_rng(SEED)
+data = rng.normal(size=(N, D)).astype(np.float32)
+queries = rng.normal(size=(Q, D)).astype(np.float32)
+params = ConstructionParams(degree_bound=16, alpha=1.2, beam_width=16,
+                            max_iters=24, rev_cap=16, prune_chunk=256)
+mesh = make_mesh((4, 2), ("data", "model"))
+idx = ShardedJasperIndex(mesh, D, capacity_per_shard=N // 4,
+                         construction=params, quantization="rabitq",
+                         bits=4, seed=SEED)
+idx.build(data, labels=(np.arange(N) % 2).astype(np.int32))
+per = N // 4
+gids = np.array([s * idx.id_stride + j for s in range(4)
+                 for j in range(per)])
+idx.delete(gids[::11])
+
+lanes = {{"jnp": {{}}, "kernel": {{"use_kernels": True}},
+         "hop": {{"fusion": "hop"}},
+         "megakernel": {{"fusion": "megakernel"}},
+         "telemetry": {{"telemetry": "on"}}, "filtered": {{"filter": (1,)}}}}
+device = {{name: idx.searcher(SearchSpec(k=K, beam_width=BEAM,
+                                         quantized=True, **kw)
+                              ).search(queries)
+           for name, kw in lanes.items()}}
+idx.evict_rows_to_host()
+report = {{"memory": idx.memory_stats(), "lanes": {{}}}}
+for name, kw in lanes.items():
+    host = idx.searcher(SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                                   rerank_source="host", **kw)
+                        ).search(queries)
+    dev = device[name]
+    ok = (np.array_equal(np.asarray(dev.ids), np.asarray(host.ids))
+          and np.array_equal(np.asarray(dev.dists), np.asarray(host.dists))
+          and np.array_equal(np.asarray(dev.n_hops),
+                             np.asarray(host.n_hops)))
+    if name == "telemetry":
+        ok = ok and all(np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(dev.telemetry, host.telemetry))
+    report["lanes"][name] = bool(ok)
+
+# churn with rows on the host, then re-verify against the device tier
+ids = idx.insert(rng.normal(size=(64, D)).astype(np.float32))
+idx.delete(np.asarray(ids).ravel()[:16])
+idx.consolidate()
+idx.grow(2 * per)
+report["tier_after_churn"] = idx.rows_tier
+host_spec = SearchSpec(k=K, beam_width=BEAM, quantized=True,
+                       rerank_source="host")
+host = idx.searcher(host_spec).search(queries)
+idx.restore_rows_to_device()
+dev = idx.searcher(SearchSpec(k=K, beam_width=BEAM,
+                              quantized=True)).search(queries)
+report["churn_identical"] = bool(
+    np.array_equal(np.asarray(dev.ids), np.asarray(host.ids))
+    and np.array_equal(np.asarray(dev.dists), np.asarray(host.dists)))
+
+# checkpoint round-trips the tier layout
+import tempfile, os
+idx.evict_rows_to_host()
+with tempfile.TemporaryDirectory() as td:
+    p = os.path.join(td, "ck")
+    idx.save(p)
+    idx2 = ShardedJasperIndex.load(mesh, p)
+    report["loaded_tier"] = idx2.rows_tier
+    h = idx2.searcher(host_spec).search(queries)
+    idx2.restore_rows_to_device()
+    d = idx2.searcher(SearchSpec(k=K, beam_width=BEAM,
+                                 quantized=True)).search(queries)
+    report["loaded_identical"] = bool(
+        np.array_equal(np.asarray(d.ids), np.asarray(h.ids))
+        and np.array_equal(np.asarray(d.dists), np.asarray(h.dists)))
+print("TIERING_JSON=" + json.dumps(report))
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_tiering():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c",
+                          textwrap.dedent(_SHARDED_TIER_SCRIPT)],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, (
+        f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    import json
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("TIERING_JSON=")][0]
+    return json.loads(line[len("TIERING_JSON="):])
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+@pytest.mark.parametrize("lane", ["jnp", "kernel", "hop", "megakernel",
+                                  "telemetry", "filtered"])
+def test_four_shard_host_tier_bit_identical(sharded_tiering, lane):
+    assert sharded_tiering["lanes"][lane] is True
+
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+def test_four_shard_tier_lifecycle(sharded_tiering):
+    mem = sharded_tiering["memory"]
+    assert mem["rows_tier"] == "host"
+    assert mem["device_rows_bytes"] == 0.0
+    assert mem["device_compression_ratio"] > 1.0
+    assert sharded_tiering["tier_after_churn"] == "host"
+    assert sharded_tiering["churn_identical"] is True
+    assert sharded_tiering["loaded_tier"] == "host"
+    assert sharded_tiering["loaded_identical"] is True
